@@ -1,0 +1,105 @@
+"""RL-workflow throughput (paper §4: "speed advantage is particularly
+beneficial for RL workflows that require many repeated simulations").
+
+Measures environment decision-steps/second:
+  * host loop over a single HPCGymEnv (the paper's Gym cadence),
+  * jitted vmapped batch of N environments (SPARS-X's fused rollout),
+and the A2C update throughput (env steps consumed per second of update).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import init_state, make_const
+from repro.core.rl.a2c import A2CConfig, TrainState, make_batched_sims, make_update_fn
+from repro.core.rl.env import EnvConfig, HPCGymEnv, env_reset, env_step
+from repro.core.rl.networks import policy_init
+from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+from repro.training.optimizer import adamw
+from repro.workloads.generator import GeneratorConfig, generate_workload
+from repro.workloads.platform import PlatformSpec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=64)
+    ap.add_argument("--jobs", type=int, default=64)
+    ap.add_argument("--envs", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=64)
+    args = ap.parse_args(argv)
+
+    plat = PlatformSpec(nb_nodes=args.nodes)
+    wl = generate_workload(GeneratorConfig(n_jobs=args.jobs, nb_res=args.nodes, seed=0))
+    ecfg = EnvConfig(
+        engine=EngineConfig(
+            psm=PSMVariant.RL, base=BasePolicy.EASY, rl_decision_interval=600
+        ),
+        max_steps=args.steps * 4,
+    )
+    const = make_const(plat, ecfg.engine)
+
+    # --- host-loop single env (paper-style Gym cadence) ---
+    env = HPCGymEnv(plat, wl, ecfg)
+    env.reset()
+    env.step(0)  # compile
+    t0 = time.perf_counter()
+    n_host = 0
+    env.reset()
+    for i in range(args.steps):
+        _, _, done, _ = env.step(i % env.action_space_n)
+        n_host += 1
+        if done:
+            env.reset()
+    t_host = time.perf_counter() - t0
+
+    # --- vmapped batch ---
+    sims0 = make_batched_sims(plat, [wl] * args.envs, ecfg)
+    states, obs = jax.jit(jax.vmap(functools.partial(env_reset, ecfg, const)))(sims0)
+    vstep = jax.jit(jax.vmap(functools.partial(env_step, ecfg, const)))
+    actions = jnp.zeros((args.envs,), jnp.int32)
+    states, obs, r, d, _ = vstep(states, actions)  # compile
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(args.steps):
+        states, obs, r, d, _ = vstep(states, actions)
+    jax.block_until_ready(r)
+    t_vmap = time.perf_counter() - t0
+    n_vmap = args.steps * args.envs
+
+    # --- A2C update throughput ---
+    acfg = A2CConfig(n_envs=args.envs, n_steps=8)
+    update, opt = make_update_fn(ecfg, const, sims0, acfg)
+    params = policy_init(jax.random.PRNGKey(0), ecfg.obs_size, ecfg.n_actions)
+    ts = TrainState(
+        params, opt.init(params), states, obs, jax.random.PRNGKey(1)
+    )
+    update_j = jax.jit(update)
+    ts, m = update_j(ts)  # compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    n_upd = 4
+    for _ in range(n_upd):
+        ts, m = update_j(ts)
+    jax.block_until_ready(m["loss"])
+    t_upd = time.perf_counter() - t0
+    env_steps_per_update = args.envs * acfg.n_steps
+
+    host_rate = n_host / t_host
+    vmap_rate = n_vmap / t_vmap
+    print(f"host_single_env_steps_per_s={host_rate:.0f}")
+    print(f"vmapped_{args.envs}env_steps_per_s={vmap_rate:.0f}")
+    print(f"vmap_speedup={vmap_rate/host_rate:.1f}x")
+    print(
+        f"a2c_update_s={t_upd/n_upd:.3f} "
+        f"env_steps_per_s_in_training={env_steps_per_update*n_upd/t_upd:.0f}"
+    )
+    return dict(host=host_rate, vmap=vmap_rate)
+
+
+if __name__ == "__main__":
+    main()

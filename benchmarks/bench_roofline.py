@@ -1,0 +1,89 @@
+"""Roofline table builder (deliverable (g)): reads the dry-run artifacts in
+``out/dryrun`` and emits the per-(arch x shape x mesh) table for
+EXPERIMENTS.md §Roofline — three terms in seconds, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs usefulness ratio, and a one-line what-would-move-it.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+MOVES = {
+    "compute": "more accumulation/unroll to raise MXU occupancy, or quantize",
+    "memory": "cut HBM traffic: fuse/remat less, shrink optimizer dtype, "
+    "larger microbatch to amortize weight reads",
+    "collective": "reshard to cut all-gather volume / overlap reduce with compute",
+}
+
+
+def load(out_dir: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        rf = rec["roofline"]
+        rows.append(
+            dict(
+                arch=rec["arch"],
+                shape=rec["shape"],
+                mesh=rec["mesh"],
+                t_compute_s=rf["t_compute_s"],
+                t_memory_s=rf["t_memory_s"],
+                t_collective_s=rf["t_collective_s"],
+                dominant=rf["dominant"],
+                compute_fraction=rf["compute_fraction"],
+                model_flops_ratio=rec.get("model_flops_ratio"),
+                bytes_per_device=rec.get("memory_analysis", {}).get(
+                    "temp_size_in_bytes"
+                ),
+            )
+        )
+    return rows
+
+
+def fmt(x, nd=4):
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        return f"{x:.{nd}g}"
+    return str(x)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="out/dryrun")
+    ap.add_argument("--mesh", default="16x16", help="16x16 | 2x16x16 | all")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load(args.out_dir)
+    if args.mesh != "all":
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    if not rows:
+        print(f"no dry-run records in {args.out_dir} (run repro.launch.dryrun first)")
+        return []
+    cols = [
+        "arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+        "t_collective_s", "dominant", "compute_fraction", "model_flops_ratio",
+    ]
+    if args.markdown:
+        print("| " + " | ".join(cols) + " | next move |")
+        print("|" + "---|" * (len(cols) + 1))
+        for r in rows:
+            print(
+                "| " + " | ".join(fmt(r[c]) for c in cols)
+                + f" | {MOVES[r['dominant']]} |"
+            )
+    else:
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(fmt(r[c]) for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Paper §3.1 large-scale run: CEA-Curie-class platform (11 200 nodes,
+1 000 jobs). The paper reports SPARS 312 s vs batsim-py 17 992 s (~57x).
+
+Our repo contains both engines: the sequential Python DES (``pydes`` —
+equivalent to the paper's SPARS artifact, already free of Batsim's IPC
+overhead) and the vectorized JAX engine. At 11 200 nodes we report:
+
+  * single-simulation wall time for both engines, and
+  * the vectorized engine's real advantage — a K-point timeout sweep (or K
+    RL environments) as ONE compiled program, which is the many-repeated-
+    simulations regime the paper motivates (§4: RL workflows).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.metrics import metrics_from_state
+from repro.core.ref.pydes import run_pydes
+from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+from repro.workloads.generator import PRESETS, GeneratorConfig, generate_workload
+from repro.workloads.platform import PlatformSpec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=1000)
+    ap.add_argument("--nodes", type=int, default=11200)
+    ap.add_argument("--oracle-jobs", type=int, default=None,
+                    help="jobs for the oracle run (default: same as --jobs)")
+    ap.add_argument("--sweep", type=int, default=8, help="vmapped sweep width")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args(argv)
+
+    gcfg = PRESETS["cea_curie"]
+    gcfg = GeneratorConfig(**{**gcfg.__dict__, "n_jobs": args.jobs})
+    wl = generate_workload(gcfg)
+    plat = PlatformSpec(nb_nodes=args.nodes)
+    cfg = EngineConfig(
+        base=BasePolicy.EASY, psm=PSMVariant.PSUS, timeout=args.timeout
+    )
+
+    # --- vectorized engine, single simulation ---
+    s0 = engine.init_state(plat, wl, cfg)
+    const = engine.make_const(plat, cfg)
+    cap = engine.default_batch_cap(len(wl))
+    run_j = jax.jit(lambda s, c: engine.run_sim(s, c, cfg, max_batches=cap))
+    t0 = time.perf_counter()
+    out = run_j(s0, const)
+    jax.block_until_ready(out.energy)
+    t_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = run_j(s0, const)
+    jax.block_until_ready(out.energy)
+    t_jax = time.perf_counter() - t0
+    m = metrics_from_state(out, plat.power_active)
+    batches = int(out.n_batches)
+
+    # --- vectorized engine, K-point sweep in ONE program ---
+    K = args.sweep
+    timeouts = jnp.asarray(
+        [300 + 300 * i for i in range(K)], jnp.int32
+    )
+    consts = jax.vmap(lambda t: const._replace(timeout=t))(timeouts)
+    sweep_j = jax.jit(jax.vmap(lambda c: engine.run_sim(s0, c, cfg, max_batches=cap)))
+    outs = sweep_j(consts)
+    jax.block_until_ready(outs.energy)
+    t0 = time.perf_counter()
+    outs = sweep_j(consts)
+    jax.block_until_ready(outs.energy)
+    t_sweep = time.perf_counter() - t0
+
+    # --- sequential Python oracle (the paper's SPARS engine class) ---
+    oracle_jobs = args.oracle_jobs or args.jobs
+    wl_o = (
+        wl
+        if oracle_jobs == args.jobs
+        else generate_workload(GeneratorConfig(**{**gcfg.__dict__, "n_jobs": oracle_jobs}))
+    )
+    t0 = time.perf_counter()
+    m_ref, _ = run_pydes(plat, wl_o, cfg)
+    t_oracle = (time.perf_counter() - t0) * (args.jobs / oracle_jobs)
+
+    dev = abs(m.total_energy_j - m_ref.total_energy_j) / m_ref.total_energy_j \
+        if oracle_jobs == args.jobs else float("nan")
+
+    print(f"nodes={args.nodes} jobs={args.jobs} batches={batches}")
+    print(f"pydes_single_run_s={t_oracle:.2f}"
+          + ("" if oracle_jobs == args.jobs else " (extrapolated)"))
+    print(f"jax_single_run_s={t_jax:.2f} (first incl. compile: {t_first:.2f})")
+    print(
+        f"jax_{K}way_sweep_s={t_sweep:.2f} "
+        f"= {t_sweep/K:.2f}s per simulation "
+        f"({t_oracle*K/t_sweep:.1f}x vs {K} sequential oracle runs)"
+    )
+    if oracle_jobs == args.jobs:
+        print(f"energy_rel_dev_vs_oracle={dev:.2e}")
+    print(
+        f"total_energy_kwh={m.total_energy_j/3.6e6:.1f} "
+        f"mean_wait_s={m.mean_wait_s:.0f} utilization={m.utilization:.4f}"
+    )
+    return dict(t_jax=t_jax, t_oracle=t_oracle, t_sweep=t_sweep, batches=batches)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Paper Table 4: runtime of the vectorized JAX engine vs the sequential
+Python oracle (the Batsim-like baseline), swept over shutdown timeouts.
+
+The oracle exposes the same counter categories as the paper's breakdown
+(sim advance / scheduling / resource / job lifecycle / monitoring / timeout
+policy); the JAX engine's whole step is one fused XLA program, so its
+breakdown collapses into a single column — which is precisely the paper's
+point about removing per-event bookkeeping and IPC overhead.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core import engine
+from repro.core.metrics import metrics_from_state
+from repro.core.ref.pydes import run_pydes
+from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+from repro.workloads.generator import PRESETS, GeneratorConfig, generate_workload
+from repro.workloads.platform import PlatformSpec
+
+
+def bench(n_jobs: int, timeouts: List[int], preset_name: str = "ciemat_euler"):
+    gcfg = PRESETS[preset_name]
+    gcfg = GeneratorConfig(
+        **{**gcfg.__dict__, "n_jobs": n_jobs}
+    )
+    wl = generate_workload(gcfg)
+    plat = PlatformSpec(nb_nodes=gcfg.nb_res)
+    rows = []
+    for timeout in timeouts:
+        cfg = EngineConfig(base=BasePolicy.EASY, psm=PSMVariant.PSUS, timeout=timeout)
+
+        # --- JAX engine (compile once per config; time steady-state run) ---
+        s0 = engine.init_state(plat, wl, cfg)
+        const = engine.make_const(plat, cfg)
+        cap = engine.default_batch_cap(len(wl))
+        run_j = jax.jit(lambda s, c: engine.run_sim(s, c, cfg, max_batches=cap))
+        out = run_j(s0, const)  # compile + first run
+        jax.block_until_ready(out.energy)
+        t0 = time.perf_counter()
+        out = run_j(s0, const)
+        jax.block_until_ready(out.energy)
+        t_jax = time.perf_counter() - t0
+        m_jax = metrics_from_state(out, plat.power_active)
+
+        # --- Python oracle (Batsim-like sequential engine) ---
+        t0 = time.perf_counter()
+        m_ref, des = run_pydes(plat, wl, cfg)
+        t_ref = time.perf_counter() - t0
+
+        dev = abs(m_jax.total_energy_j - m_ref.total_energy_j) / m_ref.total_energy_j
+        rows.append(
+            dict(
+                timeout=timeout,
+                t_pydes_s=round(t_ref, 4),
+                t_jax_s=round(t_jax, 4),
+                speedup=round(t_ref / t_jax, 1),
+                batches=int(out.n_batches),
+                energy_rel_dev=f"{dev:.2e}",
+                counters={k: v for k, v in des.counters.items()},
+            )
+        )
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=300)
+    ap.add_argument("--timeouts", default="300,1200,2100,3000")
+    args = ap.parse_args(argv)
+    timeouts = [int(t) for t in args.timeouts.split(",")]
+    rows = bench(args.jobs, timeouts)
+    print("timeout,t_pydes_s,t_jax_s,speedup,batches,energy_rel_dev")
+    for r in rows:
+        print(
+            f"{r['timeout']},{r['t_pydes_s']},{r['t_jax_s']},{r['speedup']},"
+            f"{r['batches']},{r['energy_rel_dev']}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick defaults
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def section(title):
+    print(f"\n=== {title} " + "=" * max(0, 60 - len(title)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    args = ap.parse_args()
+    t0 = time.time()
+
+    from benchmarks import (
+        bench_energy,
+        bench_kernels,
+        bench_rl,
+        bench_roofline,
+        bench_scale,
+        bench_speedup,
+    )
+
+    section("Table 4: engine speedup vs sequential oracle (CIEMAT)")
+    bench_speedup.main(["--jobs", "1000" if args.full else "300"])
+
+    section("Figs. 4/5: six schedulers x timeout sweep (NASA) + validation")
+    bench_energy.main(
+        [
+            "--jobs", "2000" if args.full else "300",
+            "--timeouts", "5,15,30,60",
+            "--validate",
+        ]
+    )
+
+    section("Fig. 1: same-time batching divergence")
+    bench_energy.main(["--fig1"])
+
+    section("CEA-Curie scale (11200 nodes)")
+    bench_scale.main(
+        ["--jobs", "1000" if args.full else "200",
+         "--sweep", "8" if args.full else "4"]
+    )
+
+    section("RL workflow throughput")
+    bench_rl.main(
+        ["--envs", "256" if args.full else "64",
+         "--steps", "64" if args.full else "16"]
+    )
+
+    section("Kernel micro-benchmarks")
+    bench_kernels.main(["--seq", "2048" if args.full else "1024"])
+
+    section("Roofline table (from out/dryrun)")
+    bench_roofline.main(["--mesh", "16x16"])
+
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart (paper Fig. 3): 200 random jobs on 16 nodes under EASY
+Backfilling + PSUS with a 50-second timeout shutdown policy and the
+terminate-overrun policy; writes the Gantt chart (CSV always, PNG when
+matplotlib is available) and prints the aggregate metrics.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import engine
+from repro.core.gantt import intervals_from_log, render_png, write_csv
+from repro.core.metrics import metrics_from_state, np_state
+from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+from repro.workloads.generator import preset
+from repro.workloads.platform import PlatformSpec
+
+
+def main():
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "out")
+    os.makedirs(out_dir, exist_ok=True)
+
+    # paper Fig. 3 setup
+    workload = preset("fig3_small")  # 200 jobs, 16 nodes
+    platform = PlatformSpec(nb_nodes=16, t_switch_on=60, t_switch_off=90)
+    config = EngineConfig(
+        base=BasePolicy.EASY,
+        psm=PSMVariant.PSUS,
+        timeout=50,               # 50-second timeout shutdown policy
+        terminate_overrun=True,   # terminate jobs exceeding requested wall-time
+        record_gantt=True,
+    )
+
+    s0 = engine.init_state(platform, workload, config)
+    const = engine.make_const(platform, config)
+    s, log = engine.run_sim_gantt(
+        s0, const, config, max_batches=engine.default_batch_cap(len(workload))
+    )
+
+    m = metrics_from_state(s, platform.power_active)
+    print("EASY PSUS, timeout=50s, terminate-overrun — 200 jobs / 16 nodes")
+    for k, v in m.row().items():
+        print(f"  {k:20s} {v}")
+
+    intervals = intervals_from_log(log)
+    csv_path = os.path.join(out_dir, "gantt_quickstart.csv")
+    write_csv(intervals, csv_path)
+    print(f"gantt CSV  -> {csv_path} ({len(intervals)} intervals)")
+
+    d = np_state(s)
+    terminated = [int(j) for j in d["job_terminated"].nonzero()[0]]
+    png_path = os.path.join(out_dir, "gantt_quickstart.png")
+    if render_png(intervals, png_path, terminated_jobs=terminated,
+                  title="EASY PSUS, 50 s timeout, terminate-overrun"):
+        print(f"gantt PNG  -> {png_path}")
+    else:
+        print("matplotlib not installed; skipped PNG")
+
+
+if __name__ == "__main__":
+    main()

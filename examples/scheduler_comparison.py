@@ -1,0 +1,94 @@
+"""Paper Figs. 4/5 in miniature: the six schedulers (FCFS/EASY x PSUS /
+PSAS(Auto On) / PSAS+IPM) swept over shutdown timeouts on a NASA-like
+workload — one vmapped XLA program per scheduler — printing the
+energy-vs-wait trade-off table and writing a plot when matplotlib exists.
+
+    PYTHONPATH=src python examples/scheduler_comparison.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.metrics import metrics_from_state
+from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+from repro.workloads.generator import PRESETS, GeneratorConfig, generate_workload
+from repro.workloads.platform import PlatformSpec
+
+SCHEDULERS = {
+    "FCFS PSUS": (BasePolicy.FCFS, PSMVariant.PSUS),
+    "EASY PSUS": (BasePolicy.EASY, PSMVariant.PSUS),
+    "FCFS PSAS(AutoOn)": (BasePolicy.FCFS, PSMVariant.PSAS),
+    "EASY PSAS(AutoOn)": (BasePolicy.EASY, PSMVariant.PSAS),
+    "FCFS PSAS+IPM": (BasePolicy.FCFS, PSMVariant.PSAS_IPM),
+    "EASY PSAS+IPM": (BasePolicy.EASY, PSMVariant.PSAS_IPM),
+}
+TIMEOUTS_MIN = [5, 10, 20, 30, 45, 60]
+
+
+def main():
+    gcfg = GeneratorConfig(**{**PRESETS["nasa_ipsc"].__dict__, "n_jobs": 500})
+    wl = generate_workload(gcfg)
+    plat = PlatformSpec(nb_nodes=gcfg.nb_res)  # paper Table 3 power model
+    timeouts = jnp.asarray([t * 60 for t in TIMEOUTS_MIN], jnp.int32)
+
+    results = {}
+    print(f"{'scheduler':20s} " + " ".join(f"t={t:>3d}m" for t in TIMEOUTS_MIN))
+    for name, (base, psm) in SCHEDULERS.items():
+        cfg = EngineConfig(base=base, psm=psm, timeout=300)
+        s0 = engine.init_state(plat, wl, cfg)
+        const = engine.make_const(plat, cfg)
+        consts = jax.vmap(lambda t: const._replace(timeout=t))(timeouts)
+        cap = engine.default_batch_cap(len(wl))
+        batched = jax.jit(
+            jax.vmap(lambda c: engine.run_sim(s0, c, cfg, max_batches=cap))
+        )(consts)
+        ms = [
+            metrics_from_state(jax.tree_util.tree_map(lambda a: a[i], batched),
+                               plat.power_active)
+            for i in range(len(TIMEOUTS_MIN))
+        ]
+        results[name] = ms
+        print(
+            f"{name:20s} "
+            + " ".join(f"{m.total_energy_j/3.6e6:6.0f}" for m in ms)
+            + "   kWh"
+        )
+        print(
+            f"{'':20s} "
+            + " ".join(f"{m.mean_wait_s:6.0f}" for m in ms)
+            + "   mean wait (s)"
+        )
+
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+
+        fig, (ax1, ax2) = plt.subplots(1, 2, figsize=(12, 4.5))
+        for name, ms in results.items():
+            ax1.plot(TIMEOUTS_MIN, [m.total_energy_j / 3.6e6 for m in ms],
+                     marker="o", label=name)
+            ax2.plot(TIMEOUTS_MIN, [m.mean_wait_s for m in ms], marker="o")
+        ax1.set_xlabel("shutdown timeout (min)")
+        ax1.set_ylabel("total energy (kWh)")
+        ax2.set_xlabel("shutdown timeout (min)")
+        ax2.set_ylabel("mean wait (s)")
+        ax1.legend(fontsize=7)
+        fig.tight_layout()
+        out = os.path.join(os.path.dirname(__file__), "..", "out",
+                           "scheduler_comparison.png")
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        fig.savefig(out, dpi=130)
+        print(f"plot -> {out}")
+    except ImportError:
+        print("matplotlib not installed; skipped plot")
+
+
+if __name__ == "__main__":
+    main()

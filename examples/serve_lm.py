@@ -1,0 +1,41 @@
+"""Batched serving example: continuous-batching decode over any assigned
+architecture (reduced config on CPU; the same ``serve_step`` lowers for the
+decode_32k / long_500k dry-run cells on the production mesh).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-2.7b
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve as serve_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+
+    result = serve_driver.main(
+        [
+            "--arch", args.arch, "--reduced",
+            "--requests", str(args.requests),
+            "--slots", str(args.slots),
+            "--prompt-len", "16",
+            "--max-new", str(args.max_new),
+            "--cache-len", "64",
+        ]
+    )
+    print(
+        f"served {result['requests']} requests, "
+        f"{result['tokens_per_s']} tok/s, mean TTFT {result['mean_ttft_s']}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

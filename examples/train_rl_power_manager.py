@@ -1,0 +1,142 @@
+"""Train an RL power manager (paper refs [7],[24] analogue): A2C agent
+controls node power transitions while EASY Backfilling dispatches jobs;
+reward balances wasted energy against job waiting (paper's energy/wait
+trade-off). Evaluates the trained agent against the timeout-policy
+baselines on held-out workloads.
+
+    PYTHONPATH=src python examples/train_rl_power_manager.py [--updates 150]
+"""
+import argparse
+import functools
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core.metrics import metrics_from_state
+from repro.core.rl.a2c import A2CConfig, train_a2c
+from repro.core.rl.env import EnvConfig, HPCGymEnv
+from repro.core.rl.networks import policy_apply
+from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+from repro.workloads.generator import GeneratorConfig, generate_workload
+from repro.workloads.platform import PlatformSpec
+
+
+def evaluate_policy(params, plat, wl, ecfg):
+    """Greedy rollout of the trained agent on one workload."""
+    env = HPCGymEnv(plat, wl, ecfg)
+    obs = env.reset()
+    done = False
+    steps = 0
+    while not done and steps < ecfg.max_steps:
+        logits, _ = policy_apply(params, jnp.asarray(obs))
+        action = int(jnp.argmax(logits))
+        obs, _, done, _ = env.step(action)
+        steps += 1
+    return metrics_from_state(env.state.sim, plat.power_active)
+
+
+def evaluate_baseline(plat, wl, timeout):
+    cfg = EngineConfig(base=BasePolicy.EASY, psm=PSMVariant.PSUS, timeout=timeout)
+    s = engine.simulate(plat, wl, cfg)
+    return metrics_from_state(s, plat.power_active)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--updates", type=int, default=120)
+    ap.add_argument("--envs", type=int, default=16)
+    ap.add_argument("--nodes", type=int, default=32)
+    ap.add_argument(
+        "--curriculum", action="store_true",
+        help="staged workload-difficulty ramp (paper ref [7] analogue)",
+    )
+    args = ap.parse_args()
+
+    plat = PlatformSpec(nb_nodes=args.nodes, t_switch_on=600, t_switch_off=900)
+    train_wls = [
+        generate_workload(
+            GeneratorConfig(
+                n_jobs=48, nb_res=args.nodes, mean_interarrival=1500.0, seed=s
+            )
+        )
+        for s in range(args.envs)
+    ]
+    eval_wls = [
+        generate_workload(
+            GeneratorConfig(
+                n_jobs=48, nb_res=args.nodes, mean_interarrival=1500.0, seed=1000 + s
+            )
+        )
+        for s in range(3)
+    ]
+    ecfg = EnvConfig(
+        engine=EngineConfig(
+            psm=PSMVariant.RL, base=BasePolicy.EASY, rl_decision_interval=600
+        ),
+        max_steps=512,
+        reward="waste_wait",
+    )
+    acfg = A2CConfig(
+        n_envs=args.envs, n_steps=16, n_updates=args.updates, lr=3e-4, seed=0
+    )
+
+    print(f"training A2C power manager: {args.envs} envs x {args.updates} updates"
+          + (" (curriculum)" if args.curriculum else ""))
+    hist_rewards = []
+
+    def progress(i, m):
+        hist_rewards.append(m["mean_reward"])
+        if (i + 1) % 20 == 0:
+            avg = float(np.mean(hist_rewards[-20:]))
+            print(
+                f"  update {i+1:4d}  reward(ma20)={avg:+.4f} "
+                f"entropy={m['entropy']:.3f}"
+            )
+
+    if args.curriculum:
+        from repro.core.rl.curriculum import default_curriculum, train_a2c_curriculum
+
+        target = GeneratorConfig(
+            n_jobs=48, nb_res=args.nodes, mean_interarrival=1500.0, seed=0
+        )
+        stages = default_curriculum(
+            target, n_stages=3, updates_per_stage=max(args.updates // 3, 1)
+        )
+        params, history = train_a2c_curriculum(
+            plat, ecfg, stages, acfg,
+            progress=lambda s, i, m: progress(i + s * (args.updates // 3), m),
+        )
+    else:
+        params, history = train_a2c(plat, train_wls, ecfg, acfg, progress=progress)
+
+    early = float(np.mean([h["mean_reward"] for h in history[:10]]))
+    late = float(np.mean([h["mean_reward"] for h in history[-10:]]))
+    print(f"mean reward: first 10 updates {early:+.4f} -> last 10 {late:+.4f}")
+
+    print("\nevaluation on held-out workloads (energy kWh / mean wait s):")
+    print(f"{'policy':28s} {'energy':>10s} {'wait':>8s}")
+    for i, wl in enumerate(eval_wls):
+        m_rl = evaluate_policy(params, plat, wl, ecfg)
+        rows = [("A2C power manager", m_rl)]
+        for t_min in (5, 30):
+            rows.append(
+                (f"EASY PSUS timeout={t_min}m",
+                 evaluate_baseline(plat, wl, t_min * 60))
+            )
+        rows.append(("EASY always-on",
+                     evaluate_baseline(plat, wl, None)))
+        for name, m in rows:
+            print(
+                f"  wl{i} {name:24s} {m.total_energy_j/3.6e6:10.1f} "
+                f"{m.mean_wait_s:8.0f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

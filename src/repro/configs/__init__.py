@@ -1,0 +1,8 @@
+"""Architecture & experiment configs.
+
+``get_arch(name)`` returns the full assigned config; ``get_arch(name,
+reduced=True)`` returns the CPU-smoke-test reduction of the same family.
+"""
+from repro.configs.base import ArchConfig, ARCH_REGISTRY, get_arch, list_archs
+
+__all__ = ["ArchConfig", "ARCH_REGISTRY", "get_arch", "list_archs"]

@@ -1,0 +1,139 @@
+"""ArchConfig dataclass + registry for the assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+BlockSpec = Tuple[str, int]  # (block_type, count)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    dtype_name: str = "bfloat16"
+    stages: Tuple[BlockSpec, ...] = ()
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    n_shared_experts: int = 0
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    moe_aux_weight: float = 0.01
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    mamba_per_super: int = 6  # zamba2: mamba blocks per shared-attn application
+    # enc-dec / modality-frontend stubs
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # whisper: 1500 precomputed frame embeddings
+    n_image_embeds: int = 0  # internvl2: prepended patch embeddings
+    # runtime / distribution
+    sub_quadratic: bool = False  # eligible for long_500k
+    fsdp: bool = False  # additionally shard params over the data axis
+    # training sharding strategy:
+    #   "tp"      Megatron tensor parallel over the model axis (default)
+    #   "fsdp_sp" ZeRO-3 weights over (data x model) + sequence-parallel
+    #             activations over the model axis — the beyond-paper layout
+    #             that wins for activation-AR-bound dense archs
+    #             (EXPERIMENTS.md §Perf iteration 3)
+    sharding_mode: str = "tp"
+    # mesh axes carrying the batch dim (set by the launcher/dry-run);
+    # used by layers whose index computations hide the batch parallelism
+    # from GSPMD (MoE dispatch — see moe.moe_apply)
+    batch_axes: Tuple[str, ...] = ()
+    optimizer: str = "adamw"
+    remat: bool = True
+    # "full": recompute everything in backward; "save_tp": additionally save
+    # the post-TP-reduce block outputs (checkpoint_name'd "tp_out") so the
+    # remat replay does not re-run the tensor-parallel all-reduces
+    # (EXPERIMENTS.md §Perf iteration 2; costs 2 x B x S x D bf16 per layer)
+    remat_policy: str = "full"
+    gla_chunk: int = 128
+    attn_chunk: int = 1024
+    vocab_pad_to: int = 256
+    source: str = ""  # provenance note ([source; verified-tier])
+
+    # ---- derived ----
+    @property
+    def dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype_name]
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        p = self.vocab_pad_to
+        return ((self.vocab_size + p - 1) // p) * p
+
+    def block_program(self) -> Tuple[BlockSpec, ...]:
+        """Decoder stage list; default derived from family when not given."""
+        if self.stages:
+            return self.stages
+        if self.family == "moe":
+            return (("moe", self.n_layers),)
+        if self.family == "hybrid":
+            n_super = self.n_layers // self.mamba_per_super
+            return (("zamba_super", n_super),)
+        if self.family == "ssm":
+            return (("xlstm_pair", self.n_layers // 2),)
+        if self.family == "audio":
+            return (("dec", self.n_layers),)
+        return (("dense", self.n_layers),)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+ARCH_REGISTRY: Dict[str, Callable[[], ArchConfig]] = {}
+REDUCED_REGISTRY: Dict[str, Callable[[], ArchConfig]] = {}
+
+_ARCH_MODULES = {
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "internlm2-1.8b": "repro.configs.internlm2_1p8b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2p7b",
+    "grok-1-314b": "repro.configs.grok1_314b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+}
+
+
+def register(full: Callable[[], ArchConfig], reduced: Callable[[], ArchConfig]):
+    cfg = full()
+    ARCH_REGISTRY[cfg.name] = full
+    REDUCED_REGISTRY[cfg.name] = reduced
+    return cfg
+
+
+def get_arch(name: str, reduced: bool = False) -> ArchConfig:
+    if name not in ARCH_REGISTRY:
+        if name in _ARCH_MODULES:
+            importlib.import_module(_ARCH_MODULES[name])
+        else:
+            raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return (REDUCED_REGISTRY if reduced else ARCH_REGISTRY)[name]()
+
+
+def list_archs():
+    return sorted(_ARCH_MODULES)

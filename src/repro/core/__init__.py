@@ -1,0 +1,40 @@
+# The paper's primary contribution: an event-batched, power-state-aware HPC
+# scheduling simulator with an RL interface, vectorized for TPU (see
+# core/SEMANTICS.md for the exact engine contract shared with the Python
+# reference oracle in core/ref/pydes.py).
+from repro.core.types import (
+    BasePolicy,
+    EngineConfig,
+    PSMVariant,
+    SimMetrics,
+)
+from repro.core.engine import (
+    EngineConst,
+    SimState,
+    init_state,
+    make_const,
+    next_time,
+    process_batch,
+    run_sim,
+    run_sim_gantt,
+    simulate,
+)
+from repro.core.metrics import metrics_from_state, schedule_table
+
+__all__ = [
+    "BasePolicy",
+    "EngineConfig",
+    "PSMVariant",
+    "SimMetrics",
+    "EngineConst",
+    "SimState",
+    "init_state",
+    "make_const",
+    "next_time",
+    "process_batch",
+    "run_sim",
+    "run_sim_gantt",
+    "simulate",
+    "metrics_from_state",
+    "schedule_table",
+]

@@ -1,0 +1,637 @@
+"""Vectorized discrete-event engine — SPARS's contribution, TPU-native.
+
+The paper's engine walks a heap of events; here the simulation state lives in
+fixed-capacity arrays and each iteration of a ``lax.while_loop`` processes
+*one event batch*: every event sharing the next timestamp, atomically
+(core/SEMANTICS.md). The paper's same-time-batching guarantee (its Fig. 1
+bug-fix vs Batsim) is therefore structural — a vectorized timestep cannot
+split simultaneous events.
+
+Everything is pure-functional over :class:`SimState`, so the engine jits,
+vmaps over thousands of environments (the RL use-case: envs sharded over the
+mesh ``data`` axis), and vmaps over platform scalars (e.g. a timeout sweep is
+a single compiled program).
+
+Static configuration (policy structure, window size) lives in
+:class:`EngineConfig`; dynamic per-run scalars (timeout, transition times,
+powers) live in :class:`EngineConst` so parameter sweeps don't recompile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import (
+    ACTIVE,
+    ALLOCATED,
+    DONE,
+    IDLE,
+    INF_TIME,
+    RUNNING,
+    SLEEP,
+    SWITCHING_OFF,
+    SWITCHING_ON,
+    WAITING,
+    BasePolicy,
+    EngineConfig,
+    PSMVariant,
+)
+from repro.workloads.platform import PlatformSpec
+from repro.workloads.workload import Workload
+
+I32 = jnp.int32
+INF = jnp.asarray(INF_TIME, I32)
+
+
+class EngineConst(NamedTuple):
+    """Dynamic (traced) per-run platform scalars — sweepable without recompile."""
+
+    power: jax.Array  # f32[5] per-state watts
+    t_on: jax.Array  # i32 switch-on delay (s)
+    t_off: jax.Array  # i32 switch-off delay (s)
+    timeout: jax.Array  # i32 idle-timeout (s); INF_TIME = never
+    rl_interval: jax.Array  # i32 RL decision tick; INF_TIME = event-driven only
+
+
+class SimState(NamedTuple):
+    t: jax.Array  # i32 scalar
+    # nodes
+    node_state: jax.Array  # i32[N]
+    node_until: jax.Array  # i32[N] transition completion (INF otherwise)
+    node_job: jax.Array  # i32[N] allocated job (-1 = unreserved)
+    node_idle_since: jax.Array  # i32[N]
+    # jobs (submission order)
+    job_res: jax.Array  # i32[J]
+    job_subtime: jax.Array  # i32[J]
+    job_reqtime: jax.Array  # i32[J]
+    job_eff: jax.Array  # i32[J] effective runtime (overrun policy folded in)
+    job_status: jax.Array  # i32[J]
+    job_start: jax.Array  # i32[J] (-1 until started)
+    job_finish: jax.Array  # i32[J] (INF until started)
+    job_alloc_ready: jax.Array  # i32[J] predicted start at allocation
+    job_exists: jax.Array  # bool[J] (False for padding)
+    job_terminated: jax.Array  # bool[J]
+    # accounting (Kahan-compensated f32 per state)
+    energy: jax.Array  # f32[5]
+    energy_c: jax.Array  # f32[5]
+    wait_integral: jax.Array  # f32: ∫ #(arrived ∧ not-started) dt
+    wait_c: jax.Array  # Kahan compensation
+    # counters (Table-4-style breakdown)
+    n_batches: jax.Array
+    n_allocs: jax.Array
+    n_starts: jax.Array
+    n_completions: jax.Array
+    n_switch_on: jax.Array
+    n_switch_off: jax.Array
+    # RL pending commands (#nodes to wake / to sleep at the next batch)
+    rl_on_cmd: jax.Array
+    rl_off_cmd: jax.Array
+
+
+class GanttLog(NamedTuple):
+    t0: jax.Array  # i32[cap]
+    t1: jax.Array  # i32[cap]
+    state: jax.Array  # i32[cap, N]
+    job: jax.Array  # i32[cap, N]
+    n: jax.Array  # i32 rows used
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+def make_const(
+    platform: PlatformSpec,
+    config: EngineConfig,
+) -> EngineConst:
+    return EngineConst(
+        power=jnp.asarray(platform.power_table(), jnp.float32),
+        t_on=jnp.asarray(platform.t_switch_on, I32),
+        t_off=jnp.asarray(platform.t_switch_off, I32),
+        timeout=jnp.asarray(config.timeout_or_inf, I32),
+        rl_interval=jnp.asarray(
+            config.rl_decision_interval or int(INF_TIME), I32
+        ),
+    )
+
+
+def init_state(
+    platform: PlatformSpec,
+    workload: Workload,
+    config: EngineConfig,
+    job_capacity: Optional[int] = None,
+    start_state: int = IDLE,
+) -> SimState:
+    """Build the initial SimState (host-side, numpy)."""
+    arrs = workload.arrays()
+    n = len(arrs["res"])
+    J = job_capacity or n
+    if J < n:
+        raise ValueError(f"job_capacity {J} < {n} jobs")
+    N = platform.nb_nodes
+
+    def pad(x, fill):
+        out = np.full(J, fill, np.int32)
+        out[:n] = x
+        return out
+
+    res = pad(arrs["res"], 1)
+    subtime = pad(arrs["subtime"], int(INF_TIME))
+    reqtime = pad(arrs["reqtime"], 1)
+    runtime = pad(arrs["runtime"], 1)
+    # DVFS / compute-speed model (platform.json dvfs_profiles): nominal
+    # runtime is work at speed 1; the realized wall time scales by the
+    # platform's operating speed. Overrun is judged on realized time.
+    speed = platform.speed()
+    if speed != 1.0:
+        runtime = np.maximum(np.ceil(runtime / speed), 1).astype(np.int32)
+    if config.terminate_overrun:
+        eff = np.minimum(runtime, reqtime)
+        terminated = runtime > reqtime
+    else:
+        eff = runtime
+        terminated = np.zeros(J, bool)
+    status = np.full(J, WAITING, np.int32)
+    status[n:] = DONE
+    exists = np.zeros(J, bool)
+    exists[:n] = True
+
+    return SimState(
+        t=jnp.asarray(0, I32),
+        node_state=jnp.full(N, start_state, I32),
+        node_until=jnp.full(N, int(INF_TIME), I32),
+        node_job=jnp.full(N, -1, I32),
+        node_idle_since=jnp.zeros(N, I32),
+        job_res=jnp.asarray(res),
+        job_subtime=jnp.asarray(subtime),
+        job_reqtime=jnp.asarray(reqtime),
+        job_eff=jnp.asarray(eff),
+        job_status=jnp.asarray(status),
+        job_start=jnp.full(J, -1, I32),
+        job_finish=jnp.full(J, int(INF_TIME), I32),
+        job_alloc_ready=jnp.full(J, int(INF_TIME), I32),
+        job_exists=jnp.asarray(exists),
+        job_terminated=jnp.asarray(terminated),
+        energy=jnp.zeros(5, jnp.float32),
+        energy_c=jnp.zeros(5, jnp.float32),
+        wait_integral=jnp.zeros((), jnp.float32),
+        wait_c=jnp.zeros((), jnp.float32),
+        n_batches=jnp.asarray(0, I32),
+        n_allocs=jnp.asarray(0, I32),
+        n_starts=jnp.asarray(0, I32),
+        n_completions=jnp.asarray(0, I32),
+        n_switch_on=jnp.asarray(0, I32),
+        n_switch_off=jnp.asarray(0, I32),
+        rl_on_cmd=jnp.asarray(0, I32),
+        rl_off_cmd=jnp.asarray(0, I32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _clamp_job(idx: jax.Array) -> jax.Array:
+    return jnp.maximum(idx, 0)
+
+
+def _ready_times(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
+    """Variant-specific node ready times (SEMANTICS.md table); INF for ACTIVE."""
+    t = s.t
+    if cfg.psm in (PSMVariant.PSUS, PSMVariant.NONE, PSMVariant.RL):
+        ready = jnp.full_like(s.node_state, 0) + t
+        return jnp.where(s.node_state == ACTIVE, INF, ready)
+    ready = jnp.select(
+        [
+            s.node_state == IDLE,
+            s.node_state == SWITCHING_ON,
+            s.node_state == SLEEP,
+            s.node_state == SWITCHING_OFF,
+        ],
+        [
+            jnp.broadcast_to(t, s.node_state.shape),
+            s.node_until,
+            jnp.broadcast_to(t + const.t_on, s.node_state.shape),
+            s.node_until + const.t_on,
+        ],
+        default=jnp.broadcast_to(INF, s.node_state.shape),
+    )
+    return ready.astype(I32)
+
+
+def _queued_demand(s: SimState) -> jax.Array:
+    waiting = (s.job_status == WAITING) & (s.job_subtime <= s.t)
+    return jnp.sum(jnp.where(waiting, s.job_res, 0))
+
+
+def _kahan_add(energy, comp, delta):
+    y = delta - comp
+    t = energy + y
+    comp = (t - energy) - y
+    return t, comp
+
+
+# ---------------------------------------------------------------------------
+# event-batch phases (SEMANTICS.md rules 1..8)
+# ---------------------------------------------------------------------------
+
+def _complete_jobs(s: SimState) -> SimState:
+    done_now = (s.job_status == RUNNING) & (s.job_finish <= s.t)
+    job_status = jnp.where(done_now, DONE, s.job_status)
+    nj = s.node_job
+    node_of_done = (nj >= 0) & done_now[_clamp_job(nj)]
+    return s._replace(
+        job_status=job_status,
+        node_job=jnp.where(node_of_done, -1, nj),
+        node_state=jnp.where(node_of_done, IDLE, s.node_state),
+        node_until=jnp.where(node_of_done, INF, s.node_until),
+        node_idle_since=jnp.where(node_of_done, s.t, s.node_idle_since),
+        n_completions=s.n_completions + jnp.sum(done_now, dtype=I32),
+    )
+
+
+def _complete_transitions(s: SimState, const: EngineConst) -> SimState:
+    on_done = (s.node_state == SWITCHING_ON) & (s.node_until <= s.t)
+    off_done = (s.node_state == SWITCHING_OFF) & (s.node_until <= s.t)
+    chain = off_done & (s.node_job >= 0)  # reserved while shutting down
+    node_state = jnp.where(on_done, IDLE, s.node_state)
+    node_state = jnp.where(off_done, SLEEP, node_state)
+    node_state = jnp.where(chain, SWITCHING_ON, node_state)
+    node_until = jnp.where(on_done | off_done, INF, s.node_until)
+    node_until = jnp.where(chain, s.t + const.t_on, node_until)
+    node_idle_since = jnp.where(on_done, s.t, s.node_idle_since)
+    return s._replace(
+        node_state=node_state,
+        node_until=node_until,
+        node_idle_since=node_idle_since,
+    )
+
+
+def _queue_window(s: SimState, W: int) -> jax.Array:
+    """Indices of the first W WAITING-and-arrived jobs; -1 padding."""
+    waiting = (s.job_status == WAITING) & (s.job_subtime <= s.t)
+    rank = jnp.cumsum(waiting) - 1  # rank among waiting jobs
+    J = s.job_status.shape[0]
+    dest = jnp.where(waiting & (rank < W), rank, W)
+    window = jnp.full(W + 1, -1, I32).at[dest].set(jnp.arange(J, dtype=I32))
+    return window[:W]
+
+
+def _try_allocate(s, const, cfg, j, shadow, extra, node_order_key=None):
+    """Attempt to allocate job j. Returns (ok, new_state, ready_max).
+
+    shadow < 0 means head-phase (no backfill constraint).
+
+    PSUS-family variants ignore power states, so every eligible node has
+    ready == t: selection degenerates to "first res_j unreserved by id",
+    an O(N) cumsum instead of an O(N log N) argsort — the §Perf item that
+    makes 11 200-node platforms cheap (oracle tie-breaking (ready, nid) is
+    preserved: all keys equal -> lowest id).
+    """
+    eligible = s.node_job < 0
+    res_j = s.job_res[j]
+    n_elig = jnp.sum(eligible, dtype=I32)
+    if cfg.psm in (PSMVariant.PSUS, PSMVariant.NONE, PSMVariant.RL):
+        chosen = eligible & (jnp.cumsum(eligible) <= res_j)
+        ready_max = s.t
+    else:
+        ready = _ready_times(s, const, cfg)
+        key = jnp.where(eligible, ready, INF)
+        order = jnp.argsort(key, stable=True)  # ties -> lowest node id
+        sorted_sel = jnp.arange(key.shape[0]) < res_j
+        ready_sorted = key[order]
+        ready_max = jnp.max(jnp.where(sorted_sel, ready_sorted, -1)).astype(I32)
+        chosen = jnp.zeros_like(eligible).at[order].set(sorted_sel) & eligible
+    pred_completion = ready_max + s.job_reqtime[j]
+    bf_ok = (shadow < 0) | (pred_completion <= shadow) | (res_j <= extra)
+    ok = (n_elig >= res_j) & bf_ok
+    chosen = chosen & ok
+    # reserve + auto-wake chosen sleeping nodes
+    wake = chosen & (s.node_state == SLEEP)
+    new = s._replace(
+        node_job=jnp.where(chosen, j, s.node_job),
+        node_state=jnp.where(wake, SWITCHING_ON, s.node_state),
+        node_until=jnp.where(wake, s.t + const.t_on, s.node_until),
+        job_status=s.job_status.at[j].set(
+            jnp.where(ok, ALLOCATED, s.job_status[j])
+        ),
+        job_alloc_ready=s.job_alloc_ready.at[j].set(
+            jnp.where(ok, ready_max, s.job_alloc_ready[j])
+        ),
+        n_allocs=s.n_allocs + ok.astype(I32),
+        n_switch_on=s.n_switch_on + jnp.sum(wake, dtype=I32),
+    )
+    return ok, new, ready_max
+
+
+def _shadow(s: SimState, const: EngineConst, cfg: EngineConfig, head: jax.Array):
+    """EASY shadow time S and extra count E for blocked head job."""
+    ready = _ready_times(s, const, cfg)
+    nj = s.node_job
+    cj = _clamp_job(nj)
+    job_running = s.job_status[cj] == RUNNING
+    job_alloc = s.job_status[cj] == ALLOCATED
+    pred_of_job = jnp.where(
+        job_running,
+        s.job_start[cj] + s.job_reqtime[cj],
+        jnp.where(job_alloc, s.job_alloc_ready[cj] + s.job_reqtime[cj], s.t),
+    )
+    rel = jnp.where(nj >= 0, pred_of_job, ready).astype(I32)
+    rel_sorted = jnp.sort(rel)
+    res_h = s.job_res[head]
+    S = rel_sorted[jnp.maximum(res_h - 1, 0)]
+    E = jnp.sum(rel <= S, dtype=I32) - res_h
+    return S, E
+
+
+def _scheduler_pass(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
+    window = _queue_window(s, cfg.window)
+    is_easy = cfg.base == BasePolicy.EASY
+
+    def body(k, carry):
+        s, shadow, extra, blocked = carry
+        j = window[k]
+        valid = j >= 0
+
+        def attempt(s):
+            ok, s2, _ = _try_allocate(s, const, cfg, _clamp_job(j), shadow, extra)
+            return ok, s2
+
+        # FCFS: stop at first failure. EASY: after first blocked head, backfill.
+        can_try = valid & (~blocked if not is_easy else jnp.bool_(True))
+        ok, s_new = attempt(s)
+        take = can_try & ok
+        s = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(take, b, a), s, s_new
+        )
+        newly_blocked = can_try & ~ok
+
+        if is_easy:
+            # compute (S, E) at the first blocked head; cond skips the
+            # O(N log N) sort on the (common) unblocked iterations
+            need_shadow = newly_blocked & (shadow < 0)
+            S, E = jax.lax.cond(
+                need_shadow,
+                lambda s_: _shadow(s_, const, cfg, _clamp_job(j)),
+                lambda s_: (jnp.asarray(-1, I32), jnp.asarray(0, I32)),
+                s,
+            )
+            shadow = jnp.where(need_shadow, S, shadow)
+            extra = jnp.where(need_shadow, E, extra)
+            # backfill consumed part of the extra pool
+            extra = jnp.where(take & (shadow >= 0), extra - s.job_res[_clamp_job(j)], extra)
+            return s, shadow, extra, blocked
+        else:
+            return s, shadow, extra, blocked | newly_blocked
+
+    shadow0 = jnp.asarray(-1, I32)
+    extra0 = jnp.asarray(0, I32)
+    s, _, _, _ = jax.lax.fori_loop(
+        0, cfg.window, body, (s, shadow0, extra0, jnp.bool_(False))
+    )
+    return s
+
+
+def _start_jobs(s: SimState) -> SimState:
+    J = s.job_status.shape[0]
+    nj = s.node_job
+    cj = _clamp_job(nj)
+    contrib = ((s.node_state == IDLE) & (nj >= 0)).astype(I32)
+    ready_count = jnp.zeros(J, I32).at[cj].add(contrib)
+    start = (s.job_status == ALLOCATED) & (ready_count == s.job_res)
+    node_starts = (nj >= 0) & start[cj]
+    return s._replace(
+        job_status=jnp.where(start, RUNNING, s.job_status),
+        job_start=jnp.where(start, s.t, s.job_start),
+        job_finish=jnp.where(start, s.t + s.job_eff, s.job_finish),
+        node_state=jnp.where(node_starts, ACTIVE, s.node_state),
+        node_until=jnp.where(node_starts, INF, s.node_until),
+        n_starts=s.n_starts + jnp.sum(start, dtype=I32),
+    )
+
+
+def _timeout_switch_off(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
+    if cfg.psm in (PSMVariant.NONE, PSMVariant.RL):
+        return s
+    cand = (
+        (s.node_job < 0)
+        & (s.node_state == IDLE)
+        & (s.t - s.node_idle_since >= const.timeout)
+    )
+    n_cand = jnp.sum(cand, dtype=I32)
+    if cfg.psm == PSMVariant.PSAS_IPM:
+        avail = jnp.sum(
+            (s.node_job < 0)
+            & ((s.node_state == IDLE) | (s.node_state == SWITCHING_ON)),
+            dtype=I32,
+        )
+        allowed = jnp.maximum(avail - _queued_demand(s), 0)
+    else:
+        allowed = jnp.asarray(s.node_state.shape[0], I32)
+    k = jnp.minimum(n_cand, allowed)
+    key = jnp.where(cand, s.node_idle_since, INF)  # longest idle first
+    order = jnp.argsort(key, stable=True)
+    sel_sorted = jnp.arange(key.shape[0]) < k
+    sel = jnp.zeros_like(cand).at[order].set(sel_sorted) & cand
+    return s._replace(
+        node_state=jnp.where(sel, SWITCHING_OFF, s.node_state),
+        node_until=jnp.where(sel, s.t + const.t_off, s.node_until),
+        n_switch_off=s.n_switch_off + jnp.sum(sel, dtype=I32),
+    )
+
+
+def _ipm_wake(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
+    if cfg.psm != PSMVariant.PSAS_IPM:
+        return s
+    avail = jnp.sum(
+        (s.node_job < 0)
+        & ((s.node_state == IDLE) | (s.node_state == SWITCHING_ON)),
+        dtype=I32,
+    )
+    deficit = _queued_demand(s) - avail
+    cand = (s.node_job < 0) & (s.node_state == SLEEP)
+    sel = cand & (jnp.cumsum(cand) <= deficit)  # lowest id first
+    return s._replace(
+        node_state=jnp.where(sel, SWITCHING_ON, s.node_state),
+        node_until=jnp.where(sel, s.t + const.t_on, s.node_until),
+        n_switch_on=s.n_switch_on + jnp.sum(sel, dtype=I32),
+    )
+
+
+def _apply_rl_commands(s: SimState, const: EngineConst) -> SimState:
+    """Rule 8: wake lowest-id sleeping; sleep longest-idle unreserved-idle."""
+    cand_on = (s.node_job < 0) & (s.node_state == SLEEP)
+    sel_on = cand_on & (jnp.cumsum(cand_on) <= s.rl_on_cmd)
+    cand_off = (s.node_job < 0) & (s.node_state == IDLE)
+    key = jnp.where(cand_off, s.node_idle_since, INF)
+    order = jnp.argsort(key, stable=True)
+    k = jnp.minimum(jnp.sum(cand_off, dtype=I32), s.rl_off_cmd)
+    sel_sorted = jnp.arange(key.shape[0]) < k
+    sel_off = jnp.zeros_like(cand_off).at[order].set(sel_sorted) & cand_off
+    state = jnp.where(sel_on, SWITCHING_ON, s.node_state)
+    state = jnp.where(sel_off, SWITCHING_OFF, state)
+    until = jnp.where(sel_on, s.t + const.t_on, s.node_until)
+    until = jnp.where(sel_off, s.t + const.t_off, until)
+    return s._replace(
+        node_state=state,
+        node_until=until,
+        rl_on_cmd=jnp.asarray(0, I32),
+        rl_off_cmd=jnp.asarray(0, I32),
+        n_switch_on=s.n_switch_on + jnp.sum(sel_on, dtype=I32),
+        n_switch_off=s.n_switch_off + jnp.sum(sel_off, dtype=I32),
+    )
+
+
+def process_batch(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
+    """One atomic event batch at time s.t (SEMANTICS.md rules 1-8)."""
+    s = _complete_jobs(s)
+    s = _complete_transitions(s, const)
+    s = _scheduler_pass(s, const, cfg)
+    s = _start_jobs(s)
+    if cfg.psm == PSMVariant.RL:
+        s = _apply_rl_commands(s, const)
+    else:
+        s = _timeout_switch_off(s, const, cfg)
+        s = _ipm_wake(s, const, cfg)
+    return s._replace(n_batches=s.n_batches + 1)
+
+
+# ---------------------------------------------------------------------------
+# time advance
+# ---------------------------------------------------------------------------
+
+def next_time(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
+    """Earliest strictly-future event time (INF when none)."""
+    t = s.t
+    waiting_future = (s.job_status == WAITING) & (s.job_subtime > t)
+    arr = jnp.min(jnp.where(waiting_future, s.job_subtime, INF))
+    running = s.job_status == RUNNING
+    fin = jnp.min(jnp.where(running & (s.job_finish > t), s.job_finish, INF))
+    trans = (s.node_state == SWITCHING_ON) | (s.node_state == SWITCHING_OFF)
+    tr = jnp.min(jnp.where(trans & (s.node_until > t), s.node_until, INF))
+    cands = [arr, fin, tr]
+    if cfg.psm not in (PSMVariant.NONE, PSMVariant.RL) and cfg.timeout is not None:
+        idle_unres = (s.node_job < 0) & (s.node_state == IDLE)
+        expiry = s.node_idle_since + const.timeout
+        to = jnp.min(jnp.where(idle_unres & (expiry > t), expiry, INF))
+        cands.append(to)
+    if cfg.psm == PSMVariant.RL:
+        cands.append(t + const.rl_interval)
+    return functools.reduce(jnp.minimum, cands).astype(I32)
+
+
+def accrue_energy(s: SimState, t_next: jax.Array, const: EngineConst) -> SimState:
+    dt = jnp.maximum(t_next - s.t, 0).astype(jnp.float32)
+    counts = jnp.zeros(5, jnp.float32).at[s.node_state].add(1.0)
+    delta = counts * const.power * dt
+    e, c = _kahan_add(s.energy, s.energy_c, delta)
+    n_waiting = jnp.sum(
+        ((s.job_status == WAITING) & (s.job_subtime <= s.t))
+        | (s.job_status == ALLOCATED),
+        dtype=jnp.float32,
+    )
+    w, wc = _kahan_add(s.wait_integral, s.wait_c, n_waiting * dt)
+    return s._replace(energy=e, energy_c=c, wait_integral=w, wait_c=wc)
+
+
+def all_done(s: SimState) -> jax.Array:
+    return jnp.all(s.job_status == DONE)
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+def default_batch_cap(n_jobs: int) -> int:
+    return 20 * n_jobs + 10_000
+
+
+def run_sim(
+    s: SimState,
+    const: EngineConst,
+    cfg: EngineConfig,
+    max_batches: Optional[int] = None,
+) -> SimState:
+    """Run to completion (jit-able; vmap over s and/or const)."""
+    cap = max_batches or cfg.max_batches or default_batch_cap(
+        int(s.job_status.shape[0])
+    )
+
+    s = process_batch(s, const, cfg)
+
+    def cond(s):
+        nt = next_time(s, const, cfg)
+        return (~all_done(s)) & (nt < INF) & (s.n_batches < cap)
+
+    def body(s):
+        nt = next_time(s, const, cfg)
+        s = accrue_energy(s, nt, const)
+        s = s._replace(t=nt)
+        return process_batch(s, const, cfg)
+
+    return jax.lax.while_loop(cond, body, s)
+
+
+def run_sim_gantt(
+    s: SimState,
+    const: EngineConst,
+    cfg: EngineConfig,
+    max_batches: int,
+) -> Tuple[SimState, GanttLog]:
+    """Like run_sim but records per-batch node-state snapshots for Gantt."""
+    N = s.node_state.shape[0]
+    log = GanttLog(
+        t0=jnp.zeros(max_batches, I32),
+        t1=jnp.zeros(max_batches, I32),
+        state=jnp.zeros((max_batches, N), I32),
+        job=jnp.zeros((max_batches, N), I32),
+        n=jnp.asarray(0, I32),
+    )
+
+    s = process_batch(s, const, cfg)
+
+    def cond(carry):
+        s, log = carry
+        nt = next_time(s, const, cfg)
+        return (~all_done(s)) & (nt < INF) & (s.n_batches < max_batches)
+
+    def body(carry):
+        s, log = carry
+        nt = next_time(s, const, cfg)
+        i = log.n
+        log = log._replace(
+            t0=log.t0.at[i].set(s.t),
+            t1=log.t1.at[i].set(nt),
+            state=log.state.at[i].set(s.node_state),
+            job=log.job.at[i].set(jnp.where(s.node_state == ACTIVE, s.node_job, -1)),
+            n=i + 1,
+        )
+        s = accrue_energy(s, nt, const)
+        s = s._replace(t=nt)
+        s = process_batch(s, const, cfg)
+        return s, log
+
+    return jax.lax.while_loop(cond, body, (s, log))
+
+
+# convenience: one-call host API ------------------------------------------------
+
+def simulate(
+    platform: PlatformSpec,
+    workload: Workload,
+    config: EngineConfig,
+    job_capacity: Optional[int] = None,
+    jit: bool = True,
+) -> SimState:
+    s = init_state(platform, workload, config, job_capacity=job_capacity)
+    const = make_const(platform, config)
+    cap = config.max_batches or default_batch_cap(len(workload))
+    fn = functools.partial(run_sim, cfg=config, max_batches=cap)
+    if jit:
+        fn = jax.jit(fn, static_argnames=())
+    return fn(s, const)

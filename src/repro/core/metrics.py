@@ -1,0 +1,51 @@
+"""Metrics extraction from a finished SimState (host-side)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import SimState
+from repro.core.types import ACTIVE, DONE, IDLE, SWITCHING_OFF, SWITCHING_ON, SimMetrics
+
+
+def metrics_from_state(s: SimState, power_active: float) -> SimMetrics:
+    """Compute SimMetrics (same field semantics as the Python oracle)."""
+    s = np_state(s)
+    exists = s["job_exists"]
+    started = (s["job_start"] >= 0) & exists
+    waits = (s["job_start"] - s["job_subtime"])[started]
+    done = (s["job_status"] == DONE) & exists
+    makespan = int(s["job_finish"][done].max()) if done.any() else 0
+    energy = s["energy"].astype(np.float64)
+    total = float(energy.sum())
+    wasted = float(energy[IDLE] + energy[SWITCHING_ON] + energy[SWITCHING_OFF])
+    util = 0.0
+    if makespan > 0 and power_active > 0:
+        active_node_s = energy[ACTIVE] / power_active
+        util = float(active_node_s / (s["node_state"].shape[0] * makespan))
+    return SimMetrics(
+        total_energy_j=total,
+        wasted_energy_j=wasted,
+        energy_by_state_j=tuple(energy.tolist()),
+        mean_wait_s=float(waits.mean()) if waits.size else 0.0,
+        max_wait_s=float(waits.max()) if waits.size else 0.0,
+        utilization=util,
+        makespan_s=makespan,
+        n_jobs=int(exists.sum()),
+        n_terminated=int((s["job_terminated"] & done).sum()),
+    )
+
+
+def np_state(s: SimState) -> dict:
+    return {k: np.asarray(v) for k, v in s._asdict().items()}
+
+
+def schedule_table(s: SimState) -> np.ndarray:
+    """(n_jobs, 3) [start, finish(-1 if not done), terminated] — parity format
+    matching PyDES.schedule_table()."""
+    d = np_state(s)
+    exists = d["job_exists"]
+    start = d["job_start"].astype(np.float64)
+    finish = np.where(d["job_status"] == DONE, d["job_finish"], -1).astype(np.float64)
+    term = d["job_terminated"].astype(np.float64)
+    out = np.stack([start, finish, term], axis=-1)
+    return out[exists]

@@ -1,0 +1,3 @@
+from repro.core.ref.pydes import PyDES, run_pydes
+
+__all__ = ["PyDES", "run_pydes"]

@@ -1,0 +1,485 @@
+"""Heap-ordered sequential Python DES — the Batsim-like reference oracle.
+
+This is the *baseline the paper compares against*: a conventional sequential
+discrete-event simulator. It implements core/SEMANTICS.md exactly and serves
+as the correctness oracle for the vectorized JAX engine, and as the runtime
+baseline for the Table-4 speedup benchmark.
+
+``split_simultaneous_events=True`` reproduces the Batsim bug of the paper's
+Fig. 1: same-timestamp job completions are delivered to the scheduler one at
+a time (separate "messages"), so the scheduler decides on partial
+information and schedules can diverge from the atomic-batch semantics.
+
+Float64 time/energy is used here; the JAX engine uses int32 time + f32
+compensated energy. Parity tests bound the difference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.types import (
+    ACTIVE,
+    ALLOCATED,
+    DONE,
+    IDLE,
+    INF_TIME,
+    RUNNING,
+    SLEEP,
+    SWITCHING_OFF,
+    SWITCHING_ON,
+    WAITING,
+    BasePolicy,
+    EngineConfig,
+    PSMVariant,
+    SimMetrics,
+)
+from repro.workloads.platform import PlatformSpec
+from repro.workloads.workload import Workload
+
+INF = float(INF_TIME)
+
+
+@dataclasses.dataclass
+class _Node:
+    nid: int
+    state: int = IDLE
+    until: float = INF
+    job: int = -1
+    idle_since: float = 0.0
+
+
+@dataclasses.dataclass
+class _Job:
+    jid: int  # index in submission order
+    res: int
+    subtime: int
+    reqtime: int
+    runtime: int
+    eff_runtime: int
+    terminated: bool
+    status: int = WAITING
+    start: float = -1.0
+    finish: float = INF
+    alloc_ready: float = INF  # predicted start recorded at allocation
+
+
+class PyDES:
+    """Sequential reference engine. See module docstring."""
+
+    def __init__(
+        self,
+        platform: PlatformSpec,
+        workload: Workload,
+        config: EngineConfig,
+        split_simultaneous_events: bool = False,
+        rl_policy: Optional[Callable] = None,
+        start_state: int = IDLE,
+    ):
+        self.p = platform
+        self.cfg = config
+        self.split = split_simultaneous_events
+        self.rl_policy = rl_policy
+        self.power = platform.power_table()
+        self.t_on = platform.t_switch_on
+        self.t_off = platform.t_switch_off
+
+        wl = workload.sorted_by_subtime()
+        self.jobs: List[_Job] = []
+        speed = platform.speed()
+        for i, j in enumerate(wl.jobs):
+            # DVFS / compute-speed model: realized wall time = work / speed
+            runtime = j.runtime
+            if speed != 1.0:
+                runtime = max(int(np.ceil(j.runtime / speed)), 1)
+            if config.terminate_overrun:
+                eff = min(runtime, j.reqtime)
+                term = runtime > j.reqtime
+            else:
+                eff, term = runtime, False
+            self.jobs.append(
+                _Job(i, j.res, j.subtime, j.reqtime, runtime, eff, term)
+            )
+        self.nodes = [
+            _Node(i, state=start_state, idle_since=0.0)
+            for i in range(platform.nb_nodes)
+        ]
+        self.t = 0.0
+        self.energy_by_state = [0.0] * 5
+        self.n_batches = 0
+        self.gantt: List[Tuple[float, float, int, int, int]] = []  # (t0,t1,node,state,job)
+        self._gantt_open: Dict[int, Tuple[float, int, int]] = {}
+        if config.record_gantt:
+            for nd in self.nodes:
+                self._gantt_open[nd.nid] = (0.0, nd.state, -1)
+        # profiling counters (Table-4-style breakdown)
+        self.counters = {
+            "sim_advance": 0,
+            "scheduling": 0,
+            "resource": 0,
+            "job_lifecycle": 0,
+            "monitoring": 0,
+            "timeout_policy": 0,
+        }
+
+    # ---------- ready times (SEMANTICS.md variant table) ----------
+    def _ready(self, nd: _Node) -> float:
+        if self.cfg.psm in (PSMVariant.PSUS, PSMVariant.NONE, PSMVariant.RL):
+            return self.t
+        if nd.state == IDLE:
+            return self.t
+        if nd.state == SWITCHING_ON:
+            return nd.until
+        if nd.state == SLEEP:
+            return self.t + self.t_on
+        if nd.state == SWITCHING_OFF:
+            return nd.until + self.t_on
+        return INF  # ACTIVE (not eligible anyway)
+
+    def _gantt_mark(self, nd: _Node) -> None:
+        if not self.cfg.record_gantt:
+            return
+        t0, st, job = self._gantt_open[nd.nid]
+        if st != nd.state or job != nd.job_for_gantt:
+            if self.t > t0:
+                self.gantt.append((t0, self.t, nd.nid, st, job))
+            self._gantt_open[nd.nid] = (self.t, nd.state, nd.job_for_gantt)
+
+    # ---------- allocation ----------
+    def _eligible(self) -> List[_Node]:
+        return [nd for nd in self.nodes if nd.job < 0]
+
+    def _try_allocate(
+        self, job: _Job, shadow: Optional[float], extra: Optional[int]
+    ) -> bool:
+        """Allocate per SEMANTICS.md rule 4. shadow/extra set => backfill test."""
+        self.counters["resource"] += 1
+        elig = self._eligible()
+        if len(elig) < job.res:
+            return False
+        elig.sort(key=lambda nd: (self._ready(nd), nd.nid))
+        chosen = elig[: job.res]
+        ready = max(self._ready(nd) for nd in chosen)
+        if shadow is not None:
+            pred_completion = ready + job.reqtime
+            if not (pred_completion <= shadow or job.res <= extra):
+                return False
+        for nd in chosen:
+            nd.job = job.jid
+            if nd.state == SLEEP:
+                nd.state = SWITCHING_ON
+                nd.until = self.t + self.t_on
+                self._gantt_mark(nd)
+        job.status = ALLOCATED
+        job.alloc_ready = ready
+        return True
+
+    def _shadow(self, head: _Job) -> Tuple[float, int]:
+        """EASY shadow time S and extra count E (SEMANTICS.md)."""
+        rel = []
+        for nd in self.nodes:
+            if nd.job < 0:
+                rel.append(self._ready(nd))
+            else:
+                j = self.jobs[nd.job]
+                if j.status == RUNNING:
+                    rel.append(j.start + j.reqtime)
+                elif j.status == ALLOCATED:
+                    rel.append(j.alloc_ready + j.reqtime)
+                else:  # DONE shouldn't hold nodes
+                    rel.append(self.t)
+        rel.sort()
+        S = rel[head.res - 1]
+        E = sum(1 for r in rel if r <= S) - head.res
+        return S, E
+
+    # ---------- one scheduler pass (rule 4) ----------
+    def _scheduler_pass(self) -> None:
+        self.counters["scheduling"] += 1
+        queue = [
+            j
+            for j in self.jobs
+            if j.status == WAITING and j.subtime <= self.t
+        ][: self.cfg.window]
+        shadow = extra = None
+        for j in queue:
+            if shadow is None:
+                ok = self._try_allocate(j, None, None)
+                if not ok:
+                    if self.cfg.base == BasePolicy.FCFS:
+                        break
+                    shadow, extra = self._shadow(j)
+            else:
+                if self._try_allocate(j, shadow, extra):
+                    # S stays fixed for the batch; backfilled job consumed
+                    # res of the extra nodes
+                    extra = max(0, extra - j.res)
+        return
+
+    # ---------- job starts (rule 5) ----------
+    def _start_jobs(self) -> None:
+        self.counters["job_lifecycle"] += 1
+        per_job_ready: Dict[int, int] = {}
+        for nd in self.nodes:
+            if nd.job >= 0 and nd.state == IDLE:
+                per_job_ready[nd.job] = per_job_ready.get(nd.job, 0) + 1
+        for jid, cnt in sorted(per_job_ready.items()):
+            j = self.jobs[jid]
+            if j.status == ALLOCATED and cnt == j.res:
+                j.status = RUNNING
+                j.start = self.t
+                j.finish = self.t + j.eff_runtime
+                for nd in self.nodes:
+                    if nd.job == jid:
+                        nd.state = ACTIVE
+                        nd.until = INF
+                        self._gantt_mark(nd)
+
+    # ---------- PSM rules 6-8 ----------
+    def _queued_demand(self) -> int:
+        return sum(
+            j.res
+            for j in self.jobs
+            if j.status == WAITING and j.subtime <= self.t
+        )
+
+    def _timeout_switch_off(self) -> None:
+        self.counters["timeout_policy"] += 1
+        if self.cfg.psm in (PSMVariant.NONE, PSMVariant.RL):
+            return
+        timeout = self.cfg.timeout
+        if timeout is None:
+            return
+        cands = [
+            nd
+            for nd in self.nodes
+            if nd.job < 0
+            and nd.state == IDLE
+            and self.t - nd.idle_since >= timeout
+        ]
+        cands.sort(key=lambda nd: (nd.idle_since, nd.nid))
+        if self.cfg.psm == PSMVariant.PSAS_IPM:
+            avail = sum(
+                1
+                for nd in self.nodes
+                if nd.job < 0 and nd.state in (IDLE, SWITCHING_ON)
+            )
+            surplus = max(0, avail - self._queued_demand())
+            cands = cands[:surplus]
+        for nd in cands:
+            nd.state = SWITCHING_OFF
+            nd.until = self.t + self.t_off
+            self._gantt_mark(nd)
+
+    def _ipm_wake(self) -> None:
+        if self.cfg.psm != PSMVariant.PSAS_IPM:
+            return
+        avail = sum(
+            1
+            for nd in self.nodes
+            if nd.job < 0 and nd.state in (IDLE, SWITCHING_ON)
+        )
+        deficit = self._queued_demand() - avail
+        if deficit <= 0:
+            return
+        for nd in self.nodes:
+            if deficit <= 0:
+                break
+            if nd.job < 0 and nd.state == SLEEP:
+                nd.state = SWITCHING_ON
+                nd.until = self.t + self.t_on
+                self._gantt_mark(nd)
+                deficit -= 1
+
+    def _apply_rl(self, n_on: int, n_off: int) -> None:
+        """Rule 8: wake lowest-id sleeping; sleep longest-idle unreserved."""
+        woken = 0
+        for nd in self.nodes:
+            if woken >= n_on:
+                break
+            if nd.job < 0 and nd.state == SLEEP:
+                nd.state = SWITCHING_ON
+                nd.until = self.t + self.t_on
+                self._gantt_mark(nd)
+                woken += 1
+        cands = [
+            nd for nd in self.nodes if nd.job < 0 and nd.state == IDLE
+        ]
+        cands.sort(key=lambda nd: (nd.idle_since, nd.nid))
+        for nd in cands[:n_off]:
+            nd.state = SWITCHING_OFF
+            nd.until = self.t + self.t_off
+            self._gantt_mark(nd)
+
+    # ---------- event machinery ----------
+    def _next_time(self) -> float:
+        self.counters["sim_advance"] += 1
+        cand = [INF]
+        for j in self.jobs:
+            if j.status == WAITING and j.subtime > self.t:
+                cand.append(float(j.subtime))
+            elif j.status == RUNNING:
+                cand.append(j.finish)
+        for nd in self.nodes:
+            if nd.state in (SWITCHING_ON, SWITCHING_OFF):
+                cand.append(nd.until)
+        if (
+            self.cfg.timeout is not None
+            and self.cfg.psm not in (PSMVariant.NONE, PSMVariant.RL)
+        ):
+            for nd in self.nodes:
+                if nd.job < 0 and nd.state == IDLE:
+                    cand.append(nd.idle_since + self.cfg.timeout)
+        if self.cfg.psm == PSMVariant.RL and self.cfg.rl_decision_interval:
+            cand.append(self.t + self.cfg.rl_decision_interval)
+        # strictly future events only: an expired-but-guard-blocked timeout
+        # otherwise wedges the clock (the guard is re-evaluated at every batch)
+        nt = min((c for c in cand if c > self.t), default=INF)
+        return nt
+
+    def _accrue(self, t_next: float) -> None:
+        self.counters["monitoring"] += 1
+        dt = t_next - self.t
+        if dt <= 0:
+            return
+        for nd in self.nodes:
+            self.energy_by_state[nd.state] += self.power[nd.state] * dt
+
+    def _process_batch(self) -> None:
+        t = self.t
+        # 1. completions
+        completed = [j for j in self.jobs if j.status == RUNNING and j.finish <= t]
+        if self.split and len(completed) > 1:
+            # Batsim bug mode: deliver completions one at a time, running the
+            # scheduler between deliveries (paper Fig. 1).
+            for j in completed:
+                self._complete(j)
+                self._transitions(t)
+                self._scheduler_pass()
+                self._start_jobs()
+        else:
+            for j in completed:
+                self._complete(j)
+            self._transitions(t)
+        # 3. arrivals are implicit (queue = WAITING & subtime <= t)
+        # 4-5. schedule + start
+        self._scheduler_pass()
+        self._start_jobs()
+        # 6-8. PSM
+        if self.cfg.psm == PSMVariant.RL and self.rl_policy is not None:
+            n_on, n_off = self.rl_policy(self)
+            self._apply_rl(n_on, n_off)
+            self._start_jobs()
+        else:
+            self._timeout_switch_off()
+            self._ipm_wake()
+
+    def _complete(self, j: _Job) -> None:
+        self.counters["job_lifecycle"] += 1
+        j.status = DONE
+        for nd in self.nodes:
+            if nd.job == j.jid:
+                nd.job = -1
+                nd.state = IDLE
+                nd.until = INF
+                nd.idle_since = self.t
+                self._gantt_mark(nd)
+
+    def _transitions(self, t: float) -> None:
+        for nd in self.nodes:
+            if nd.until <= t and nd.state == SWITCHING_ON:
+                nd.state = IDLE
+                nd.until = INF
+                nd.idle_since = t
+                self._gantt_mark(nd)
+            elif nd.until <= t and nd.state == SWITCHING_OFF:
+                nd.state = SLEEP
+                nd.until = INF
+                self._gantt_mark(nd)
+                if nd.job >= 0:  # reserved while shutting down: chain to on
+                    nd.state = SWITCHING_ON
+                    nd.until = t + self.t_on
+                    self._gantt_mark(nd)
+
+    def run(self, max_batches: Optional[int] = None) -> SimMetrics:
+        limit = max_batches or self.cfg.max_batches or (
+            20 * len(self.jobs) + 10000
+        )
+        # t=0 batch (arrivals at 0, initial scheduling)
+        self._process_batch()
+        while self.n_batches < limit:
+            if all(j.status == DONE for j in self.jobs):
+                break
+            nt = self._next_time()
+            if nt >= INF:
+                break
+            self._accrue(nt)
+            self.t = nt
+            self._process_batch()
+            self.n_batches += 1
+        return self.metrics()
+
+    # ---------- reporting ----------
+    def metrics(self) -> SimMetrics:
+        waits = [
+            j.start - j.subtime for j in self.jobs if j.start >= 0
+        ]
+        makespan = max((j.finish for j in self.jobs if j.status == DONE), default=0.0)
+        active_j = self.energy_by_state[ACTIVE]
+        util = 0.0
+        if makespan > 0:
+            active_node_s = active_j / self.power[ACTIVE] if self.power[ACTIVE] else 0.0
+            util = active_node_s / (len(self.nodes) * makespan)
+        total = float(sum(self.energy_by_state))
+        wasted = float(
+            self.energy_by_state[IDLE]
+            + self.energy_by_state[SWITCHING_ON]
+            + self.energy_by_state[SWITCHING_OFF]
+        )
+        return SimMetrics(
+            total_energy_j=total,
+            wasted_energy_j=wasted,
+            energy_by_state_j=tuple(self.energy_by_state),
+            mean_wait_s=float(np.mean(waits)) if waits else 0.0,
+            max_wait_s=float(np.max(waits)) if waits else 0.0,
+            utilization=float(util),
+            makespan_s=int(makespan),
+            n_jobs=len(self.jobs),
+            n_terminated=sum(1 for j in self.jobs if j.terminated and j.status == DONE),
+        )
+
+    def schedule_table(self) -> np.ndarray:
+        """(n_jobs, 3) array of [start, finish, terminated] in job order."""
+        return np.array(
+            [
+                [j.start, (j.finish if j.status == DONE else -1.0), float(j.terminated)]
+                for j in self.jobs
+            ]
+        )
+
+
+# gantt needs node.job even when ACTIVE; patch attribute access
+def _job_for_gantt(self: _Node) -> int:
+    return self.job if self.state == ACTIVE else -1
+
+
+_Node.job_for_gantt = property(_job_for_gantt)
+
+
+def run_pydes(
+    platform: PlatformSpec,
+    workload: Workload,
+    config: EngineConfig,
+    **kw,
+) -> Tuple[SimMetrics, PyDES]:
+    des = PyDES(platform, workload, config, **kw)
+    m = des.run()
+    # flush open gantt intervals
+    if config.record_gantt:
+        for nd in des.nodes:
+            t0, st, job = des._gantt_open[nd.nid]
+            if des.t > t0:
+                des.gantt.append((t0, des.t, nd.nid, st, job))
+    return m, des

@@ -1,0 +1,36 @@
+"""RL extension of the simulator (paper §2: HPCGymEnv + Config.py registries).
+
+The paper wraps its simulator in a Gym env and registers feature extractors,
+action translators, rewards and learners. Here the env is a pair of pure
+functions (``env_reset`` / ``env_step``) over :class:`EnvState`, so the whole
+agent-environment loop jits and vmaps: thousands of simulated HPC clusters
+step in lockstep, sharded over the mesh ``data`` axis.
+"""
+from repro.core.rl.env import EnvConfig, EnvState, HPCGymEnv, env_reset, env_step
+from repro.core.rl.features import FEATURE_EXTRACTORS, feature_size
+from repro.core.rl.actions import ACTION_TRANSLATORS, action_space_size
+from repro.core.rl.rewards import REWARDS
+from repro.core.rl.networks import mlp_init, mlp_apply, policy_init, policy_apply
+from repro.core.rl.a2c import A2CConfig, train_a2c
+from repro.core.rl.ppo import PPOConfig, train_ppo
+
+__all__ = [
+    "EnvConfig",
+    "EnvState",
+    "HPCGymEnv",
+    "env_reset",
+    "env_step",
+    "FEATURE_EXTRACTORS",
+    "feature_size",
+    "ACTION_TRANSLATORS",
+    "action_space_size",
+    "REWARDS",
+    "mlp_init",
+    "mlp_apply",
+    "policy_init",
+    "policy_apply",
+    "A2CConfig",
+    "train_a2c",
+    "PPOConfig",
+    "train_ppo",
+]

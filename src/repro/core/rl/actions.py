@@ -1,0 +1,48 @@
+"""Action translators (paper Config.py registry): discrete action -> node
+power commands (n_on, n_off) applied per SEMANTICS.md rule 8."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.engine import SimState
+from repro.core.types import ACTIVE, IDLE, SWITCHING_ON
+
+
+def delta_nodes(s: SimState, action, n_levels: int = 5, step_frac: float = 0.125):
+    """Symmetric delta: action k in [0, 2*n_levels] -> toggle
+    (k - n_levels) * step_frac * N nodes (negative = switch off)."""
+    N = s.node_state.shape[0]
+    step = jnp.maximum(jnp.int32(step_frac * N), 1)
+    delta = jnp.clip((action.astype(jnp.int32) - n_levels) * step, -N, N)
+    return jnp.maximum(delta, 0), jnp.maximum(-delta, 0)
+
+
+def target_on_fraction(s: SimState, action, n_levels: int = 9):
+    """action k -> target #powered nodes = round(N * k/(n_levels-1));
+    commands bridge the gap from the current powered/powering count."""
+    N = s.node_state.shape[0]
+    target = jnp.round(
+        N * action.astype(jnp.float32) / float(n_levels - 1)
+    ).astype(jnp.int32)
+    on_like = jnp.sum(
+        (s.node_state == IDLE)
+        | (s.node_state == ACTIVE)
+        | (s.node_state == SWITCHING_ON),
+        dtype=jnp.int32,
+    )
+    gap = target - on_like
+    return jnp.maximum(gap, 0), jnp.maximum(-gap, 0)
+
+
+ACTION_TRANSLATORS = {
+    "delta": delta_nodes,
+    "target_fraction": target_on_fraction,
+}
+
+
+def action_space_size(name: str, n_levels: int = None) -> int:
+    if name == "delta":
+        return 2 * (n_levels or 5) + 1
+    if name == "target_fraction":
+        return n_levels or 9
+    raise KeyError(name)

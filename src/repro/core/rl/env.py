@@ -1,0 +1,172 @@
+"""Gym-style environment over the vectorized simulator (paper's HPCGymEnv).
+
+``env_reset`` / ``env_step`` are pure, so the full agent-environment loop
+jits, vmaps over environment batches, and shards over the mesh ``data`` axis.
+The decision cadence follows the paper: the agent acts at every simulation
+event (plus an optional periodic tick via ``rl_decision_interval``).
+
+:class:`HPCGymEnv` is a thin host-side wrapper exposing the classic
+``reset()/step(action)`` protocol for single-environment experimentation
+(gym/gymnasium API shape, without requiring the dependency).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import (
+    EngineConst,
+    SimState,
+    _apply_rl_commands,
+    accrue_energy,
+    all_done,
+    init_state,
+    make_const,
+    next_time,
+    process_batch,
+)
+from repro.core.rl.actions import ACTION_TRANSLATORS, action_space_size
+from repro.core.rl.features import FEATURE_EXTRACTORS, feature_size
+from repro.core.rl.rewards import REWARDS, RewardWeights
+from repro.core.types import INF_TIME, EngineConfig, PSMVariant
+from repro.workloads.platform import PlatformSpec
+from repro.workloads.workload import Workload
+
+I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvConfig:
+    engine: EngineConfig = dataclasses.field(
+        default_factory=lambda: EngineConfig(psm=PSMVariant.RL)
+    )
+    feature: str = "compact"
+    action: str = "target_fraction"
+    n_action_levels: int = 9
+    reward: str = "waste_wait"
+    reward_weights: RewardWeights = dataclasses.field(default_factory=RewardWeights)
+    max_steps: int = 512
+    feature_window: int = 8
+
+    def __post_init__(self):
+        if self.engine.psm != PSMVariant.RL:
+            raise ValueError("EnvConfig.engine must use PSMVariant.RL")
+
+    @property
+    def n_actions(self) -> int:
+        return action_space_size(self.action, self.n_action_levels)
+
+    @property
+    def obs_size(self) -> int:
+        return feature_size(self.feature, self.feature_window)
+
+
+class EnvState(NamedTuple):
+    sim: SimState
+    steps: jax.Array  # i32 decision steps taken
+    done: jax.Array  # bool
+
+
+def _features(cfg: EnvConfig, sim: SimState, const: EngineConst) -> jax.Array:
+    fn = FEATURE_EXTRACTORS[cfg.feature]
+    if cfg.feature == "queue_window":
+        return fn(sim, const, cfg.feature_window)
+    return fn(sim, const)
+
+
+def env_reset(
+    cfg: EnvConfig, const: EngineConst, sim0: SimState
+) -> Tuple[EnvState, jax.Array]:
+    """Initialize an episode: process the t=0 batch, return first observation."""
+    sim = process_batch(sim0, const, cfg.engine)
+    state = EnvState(sim=sim, steps=jnp.asarray(0, I32), done=all_done(sim))
+    return state, _features(cfg, sim, const)
+
+
+def env_step(
+    cfg: EnvConfig, const: EngineConst, state: EnvState, action: jax.Array
+) -> Tuple[EnvState, jax.Array, jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """Apply the agent's power command at the current time, then advance one
+    event batch. Returns (state, obs, reward, done, info). No-op when done."""
+    prev = state.sim
+
+    n_on, n_off = ACTION_TRANSLATORS[cfg.action](prev, action, cfg.n_action_levels)
+    sim = prev._replace(rl_on_cmd=n_on, rl_off_cmd=n_off)
+    sim = _apply_rl_commands(sim, const)
+
+    nt = next_time(sim, const, cfg.engine)
+    can_advance = (nt < INF_TIME) & ~all_done(sim)
+    sim_adv = accrue_energy(sim, jnp.where(can_advance, nt, sim.t), const)
+    sim_adv = sim_adv._replace(t=jnp.where(can_advance, nt, sim.t))
+    sim_adv = process_batch(sim_adv, const, cfg.engine)
+    sim = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(state.done, a, b), state.sim, sim_adv
+    )
+
+    steps = state.steps + jnp.where(state.done, 0, 1)
+    done = state.done | all_done(sim) | ~can_advance | (steps >= cfg.max_steps)
+    reward = jnp.where(
+        state.done,
+        0.0,
+        REWARDS[cfg.reward](prev, sim, const, cfg.reward_weights),
+    )
+    obs = _features(cfg, sim, const)
+    info = {
+        "t": sim.t,
+        "energy_j": jnp.sum(sim.energy),
+        "wait_integral": sim.wait_integral,
+    }
+    return EnvState(sim, steps, done), obs, reward, done, info
+
+
+def batched_reset(cfg: EnvConfig, const: EngineConst, sims0: SimState):
+    """vmapped reset over a batch of initial sim states (leading axis B)."""
+    return jax.vmap(functools.partial(env_reset, cfg, const))(sims0)
+
+
+def batched_step(cfg: EnvConfig, const: EngineConst, states: EnvState, actions):
+    return jax.vmap(functools.partial(env_step, cfg, const))(states, actions)
+
+
+class HPCGymEnv:
+    """Host-side gym-like wrapper (single environment, eager stepping)."""
+
+    def __init__(
+        self,
+        platform: PlatformSpec,
+        workload: Workload,
+        config: Optional[EnvConfig] = None,
+        job_capacity: Optional[int] = None,
+    ):
+        self.cfg = config or EnvConfig()
+        self.platform = platform
+        self.workload = workload
+        self.const = make_const(platform, self.cfg.engine)
+        self._sim0 = init_state(
+            platform, workload, self.cfg.engine, job_capacity=job_capacity
+        )
+        self._reset = jax.jit(functools.partial(env_reset, self.cfg, self.const))
+        self._step = jax.jit(functools.partial(env_step, self.cfg, self.const))
+        self.state: Optional[EnvState] = None
+
+    @property
+    def action_space_n(self) -> int:
+        return self.cfg.n_actions
+
+    @property
+    def observation_size(self) -> int:
+        return self.cfg.obs_size
+
+    def reset(self) -> Any:
+        self.state, obs = self._reset(self._sim0)
+        return obs
+
+    def step(self, action) -> Tuple[Any, float, bool, Dict]:
+        self.state, obs, reward, done, info = self._step(
+            self.state, jnp.asarray(action, I32)
+        )
+        return obs, float(reward), bool(done), {k: v for k, v in info.items()}

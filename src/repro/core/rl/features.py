@@ -1,0 +1,108 @@
+"""Feature extractors (the paper's Config.py registry, JAX-native).
+
+Each extractor is ``f(sim_state, const) -> f32[feature_size]``, normalized to
+roughly [0, 1] so a single MLP config works across platform sizes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.engine import SimState, EngineConst, _queue_window
+from repro.core.types import (
+    ACTIVE,
+    ALLOCATED,
+    IDLE,
+    RUNNING,
+    SLEEP,
+    SWITCHING_OFF,
+    SWITCHING_ON,
+    WAITING,
+)
+
+_TIME_SCALE = 3600.0  # an hour, for log-ish time normalization
+
+
+def _t_norm(x):
+    return jnp.log1p(jnp.maximum(x.astype(jnp.float32), 0.0) / _TIME_SCALE)
+
+
+def compact_features(s: SimState, const: EngineConst) -> jnp.ndarray:
+    """16-dim summary: node-state mix, queue pressure, head-job profile.
+
+    Mirrors the observation designs of the paper's refs [7],[24]
+    (state-mix + queue statistics), adapted to fixed-width vector form.
+    """
+    N = s.node_state.shape[0]
+    fN = jnp.float32(N)
+    state_frac = [
+        jnp.sum(s.node_state == k, dtype=jnp.float32) / fN
+        for k in (SLEEP, SWITCHING_ON, IDLE, ACTIVE, SWITCHING_OFF)
+    ]
+    reserved_frac = jnp.sum(s.node_job >= 0, dtype=jnp.float32) / fN
+
+    arrived_waiting = (s.job_status == WAITING) & (s.job_subtime <= s.t)
+    qlen = jnp.sum(arrived_waiting, dtype=jnp.float32)
+    qdemand = jnp.sum(jnp.where(arrived_waiting, s.job_res, 0), dtype=jnp.float32)
+    alloc_cnt = jnp.sum(s.job_status == ALLOCATED, dtype=jnp.float32)
+    running = jnp.sum(s.job_status == RUNNING, dtype=jnp.float32)
+
+    window = _queue_window(s, 1)
+    head = jnp.maximum(window[0], 0)
+    head_valid = (window[0] >= 0).astype(jnp.float32)
+    head_res = s.job_res[head].astype(jnp.float32) / fN * head_valid
+    head_wait = _t_norm(s.t - s.job_subtime[head]) * head_valid
+    head_req = _t_norm(s.job_reqtime[head]) * head_valid
+
+    # next arrival proximity (anticipation signal for proactive wake-up)
+    future = (s.job_status == WAITING) & (s.job_subtime > s.t)
+    next_arr = jnp.min(jnp.where(future, s.job_subtime, s.t + jnp.int32(2**29)))
+    next_arr_gap = _t_norm(next_arr - s.t)
+
+    remaining = jnp.sum(s.job_exists & (s.job_status != 3), dtype=jnp.float32)
+    total = jnp.maximum(jnp.sum(s.job_exists, dtype=jnp.float32), 1.0)
+
+    return jnp.stack(
+        state_frac
+        + [
+            reserved_frac,
+            jnp.minimum(qlen / 32.0, 4.0),
+            jnp.minimum(qdemand / fN, 4.0),
+            alloc_cnt / 32.0,
+            running / fN * 4.0,
+            head_valid,
+            head_res,
+            head_wait,
+            head_req,
+            next_arr_gap,
+            remaining / total,
+        ]
+    )
+
+
+def queue_window_features(s: SimState, const: EngineConst, W: int = 8) -> jnp.ndarray:
+    """compact_features + per-job features of the first W queued jobs
+    (token-style observation for the transformer policy)."""
+    base = compact_features(s, const)
+    N = s.node_state.shape[0]
+    window = _queue_window(s, W)
+    valid = (window >= 0).astype(jnp.float32)
+    idx = jnp.maximum(window, 0)
+    res = s.job_res[idx].astype(jnp.float32) / jnp.float32(N) * valid
+    wait = _t_norm(s.t - s.job_subtime[idx]) * valid
+    req = _t_norm(s.job_reqtime[idx]) * valid
+    per_job = jnp.stack([valid, res, wait, req], axis=-1).reshape(-1)
+    return jnp.concatenate([base, per_job])
+
+
+FEATURE_EXTRACTORS = {
+    "compact": compact_features,
+    "queue_window": queue_window_features,
+}
+
+
+def feature_size(name: str, window: int = 8) -> int:
+    if name == "compact":
+        return 16
+    if name == "queue_window":
+        return 16 + 4 * window
+    raise KeyError(name)

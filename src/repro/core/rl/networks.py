@@ -1,0 +1,54 @@
+"""Policy/value networks as raw-pytree JAX modules.
+
+* ``mlp_*``     — the paper-scale agent (refs [7],[24] use small MLPs).
+* ``policy_*``  — actor-critic wrapper with shared torso and two heads.
+
+The transformer policy backbone for at-scale RL lives in
+``repro.models`` (any assigned arch config can be used as a policy torso via
+``repro.models.model.build_model``); these MLPs keep the paper-faithful agent
+dependency-free.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_init(key, sizes: Sequence[int], dtype=jnp.float32):
+    params = []
+    for i, (fan_in, fan_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (fan_in, fan_out), dtype) * jnp.sqrt(2.0 / fan_in)
+        params.append({"w": w, "b": jnp.zeros((fan_out,), dtype)})
+    return params
+
+
+def mlp_apply(params, x, final_activation=False):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i + 1 < len(params) or final_activation:
+            x = jax.nn.tanh(x)
+    return x
+
+
+def policy_init(
+    key, obs_size: int, n_actions: int, hidden: Sequence[int] = (128, 128)
+):
+    k1, k2, k3 = jax.random.split(key, 3)
+    torso = mlp_init(k1, (obs_size, *hidden))
+    pi_head = mlp_init(k2, (hidden[-1], n_actions))
+    v_head = mlp_init(k3, (hidden[-1], 1))
+    # zero-init heads: uniform initial policy, zero initial value
+    pi_head[-1]["w"] = jnp.zeros_like(pi_head[-1]["w"])
+    v_head[-1]["w"] = jnp.zeros_like(v_head[-1]["w"])
+    return {"torso": torso, "pi": pi_head, "v": v_head}
+
+
+def policy_apply(params, obs) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits[n_actions], value[])."""
+    h = mlp_apply(params["torso"], obs, final_activation=True)
+    logits = mlp_apply(params["pi"], h)
+    value = mlp_apply(params["v"], h)[..., 0]
+    return logits, value

@@ -1,0 +1,167 @@
+"""PPO learner (clipped surrogate) — the "swap the learning algorithm without
+touching the core" demonstration of the paper's modular Config.py design.
+
+Reuses the A2C rollout/GAE machinery; only the update rule differs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import EngineConst, SimState, make_const
+from repro.core.rl.a2c import (
+    Rollout,
+    TrainState,
+    collect_rollout,
+    gae,
+    make_batched_sims,
+)
+from repro.core.rl.env import EnvConfig, env_reset
+from repro.core.rl.networks import policy_apply, policy_init
+from repro.training.optimizer import adamw, apply_updates, clip_by_global_norm
+from repro.workloads.platform import PlatformSpec
+from repro.workloads.workload import Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    n_envs: int = 32
+    n_steps: int = 32
+    gamma: float = 0.99
+    gae_lambda: float = 0.95
+    lr: float = 3e-4
+    clip_eps: float = 0.2
+    vf_coef: float = 0.5
+    ent_coef: float = 0.01
+    max_grad_norm: float = 0.5
+    n_epochs: int = 4
+    n_minibatches: int = 4
+    n_updates: int = 100
+    hidden: Tuple[int, ...] = (128, 128)
+    seed: int = 0
+
+
+def ppo_loss(params, batch, cfg: PPOConfig):
+    obs, actions, old_logp, advs, returns, mask = batch
+    logits, values = jax.vmap(policy_apply, (None, 0))(params, obs)
+    logp_all = jax.nn.log_softmax(logits)
+    logp = jnp.take_along_axis(logp_all, actions[..., None], axis=-1)[..., 0]
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    adv_n = (advs - jnp.sum(advs * mask) / n) / (
+        jnp.sqrt(jnp.sum(jnp.square(advs) * mask) / n) + 1e-6
+    )
+    ratio = jnp.exp(logp - old_logp)
+    unclipped = ratio * adv_n
+    clipped = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv_n
+    pg = -jnp.sum(jnp.minimum(unclipped, clipped) * mask) / n
+    vf = jnp.sum(jnp.square(values - returns) * mask) / n
+    ent = -jnp.sum(jnp.sum(jnp.exp(logp_all) * logp_all, -1) * mask) / n
+    loss = pg + cfg.vf_coef * vf - cfg.ent_coef * ent
+    return loss, {"pg_loss": pg, "vf_loss": vf, "entropy": ent}
+
+
+def make_update_fn(
+    env_cfg: EnvConfig,
+    const: EngineConst,
+    sims0: SimState,
+    cfg: PPOConfig,
+    optimizer=None,
+):
+    opt = optimizer or adamw(lr=cfg.lr)
+
+    def update(ts: TrainState):
+        env_states, obs, key, roll = collect_rollout(
+            ts.params, ts.env_states, ts.obs, ts.key, sims0, env_cfg, const, cfg.n_steps
+        )
+        advs, returns = gae(roll, cfg.gamma, cfg.gae_lambda)
+        # flatten [T, B] -> [T*B]
+        logits, _ = jax.vmap(jax.vmap(policy_apply, (None, 0)), (None, 0))(
+            ts.params, roll.obs
+        )
+        logp_all = jax.nn.log_softmax(logits)
+        old_logp = jnp.take_along_axis(logp_all, roll.actions[..., None], -1)[..., 0]
+
+        def flat(x):
+            return x.reshape((-1,) + x.shape[2:])
+
+        data = (
+            flat(roll.obs),
+            flat(roll.actions),
+            jax.lax.stop_gradient(flat(old_logp)),
+            flat(advs),
+            flat(returns),
+            flat(roll.live.astype(jnp.float32)),
+        )
+        n_total = data[0].shape[0]
+        mb = n_total // cfg.n_minibatches
+
+        def epoch(carry, _):
+            params, opt_state, key = carry
+            key, k = jax.random.split(key)
+            perm = jax.random.permutation(k, n_total)
+
+            def minibatch(carry, i):
+                params, opt_state = carry
+                idx = jax.lax.dynamic_slice_in_dim(perm, i * mb, mb)
+                batch = tuple(x[idx] for x in data)
+                (loss, aux), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+                    params, batch, cfg
+                )
+                grads, _ = clip_by_global_norm(grads, cfg.max_grad_norm)
+                updates, opt_state = opt.update(grads, opt_state, params)
+                params = apply_updates(params, updates)
+                return (params, opt_state), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                minibatch, (params, opt_state), jnp.arange(cfg.n_minibatches)
+            )
+            return (params, opt_state, key), jnp.mean(losses)
+
+        (params, opt_state, key), losses = jax.lax.scan(
+            epoch, (ts.params, ts.opt_state, key), None, length=cfg.n_epochs
+        )
+        mask = roll.live.astype(jnp.float32)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "mean_reward": jnp.sum(roll.rewards * mask)
+            / jnp.maximum(jnp.sum(mask), 1.0),
+        }
+        return TrainState(params, opt_state, env_states, obs, key), metrics
+
+    return update, opt
+
+
+def train_ppo(
+    platform: PlatformSpec,
+    workloads: Sequence[Workload],
+    env_cfg: EnvConfig,
+    cfg: PPOConfig = PPOConfig(),
+    progress: Optional[Callable[[int, dict], None]] = None,
+):
+    const = make_const(platform, env_cfg.engine)
+    wls = list(workloads)
+    if len(wls) < cfg.n_envs:
+        wls = (wls * ((cfg.n_envs + len(wls) - 1) // len(wls)))[: cfg.n_envs]
+    sims0 = make_batched_sims(platform, wls[: cfg.n_envs], env_cfg)
+
+    key = jax.random.PRNGKey(cfg.seed)
+    key, kp = jax.random.split(key)
+    params = policy_init(kp, env_cfg.obs_size, env_cfg.n_actions, cfg.hidden)
+    update, opt = make_update_fn(env_cfg, const, sims0, cfg)
+    opt_state = opt.init(params)
+    env_states, obs = jax.vmap(functools.partial(env_reset, env_cfg, const))(sims0)
+    ts = TrainState(params, opt_state, env_states, obs, key)
+
+    update_j = jax.jit(update)
+    history = []
+    for i in range(cfg.n_updates):
+        ts, metrics = update_j(ts)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        history.append(metrics)
+        if progress:
+            progress(i, metrics)
+    return ts.params, history

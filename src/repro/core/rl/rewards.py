@@ -1,0 +1,59 @@
+"""Reward functions (paper Config.py registry).
+
+Each reward is ``r(prev_sim, new_sim, const, weights) -> f32`` computed from
+accounting deltas between decision points — the energy-waste / waiting-time
+trade-off the paper centers on (refs [7],[24] use the same two terms).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.engine import SimState, EngineConst
+from repro.core.types import IDLE, SWITCHING_OFF, SWITCHING_ON
+
+
+@dataclasses.dataclass(frozen=True)
+class RewardWeights:
+    w_energy: float = 1.0
+    w_wait: float = 1.0
+
+
+def _waste_j(s: SimState) -> jnp.ndarray:
+    return s.energy[IDLE] + s.energy[SWITCHING_ON] + s.energy[SWITCHING_OFF]
+
+
+def waste_wait_tradeoff(
+    prev: SimState, new: SimState, const: EngineConst, w: RewardWeights
+) -> jnp.ndarray:
+    """r = -(w_e * Δwasted_energy + w_w * Δaggregate_wait), normalized.
+
+    Energy normalized by full-cluster active draw per hour; waiting by
+    node-hours, so both terms are O(1) per simulated hour and the weights
+    express the operator's actual trade-off preference.
+    """
+    N = new.node_state.shape[0]
+    e_scale = jnp.float32(N) * const.power[3] * 3600.0  # J per cluster-hour
+    w_scale = jnp.float32(N) * 3600.0  # node-seconds per cluster-hour
+    d_waste = (_waste_j(new) - _waste_j(prev)) / e_scale
+    d_wait = (new.wait_integral - prev.wait_integral) / w_scale
+    return -(w.w_energy * d_waste + w.w_wait * d_wait)
+
+
+def energy_only(prev, new, const, w):
+    N = new.node_state.shape[0]
+    e_scale = jnp.float32(N) * const.power[3] * 3600.0
+    return -(jnp.sum(new.energy) - jnp.sum(prev.energy)) / e_scale
+
+
+def wait_only(prev, new, const, w):
+    N = new.node_state.shape[0]
+    return -(new.wait_integral - prev.wait_integral) / (jnp.float32(N) * 3600.0)
+
+
+REWARDS = {
+    "waste_wait": waste_wait_tradeoff,
+    "energy_only": energy_only,
+    "wait_only": wait_only,
+}

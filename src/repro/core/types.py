@@ -1,0 +1,87 @@
+"""Shared types & constants for both engines (see core/SEMANTICS.md)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+# node power states (indexing order is part of the engine contract)
+SLEEP, SWITCHING_ON, IDLE, ACTIVE, SWITCHING_OFF = 0, 1, 2, 3, 4
+N_STATES = 5
+STATE_NAMES = ("sleep", "switching_on", "idle", "active", "switching_off")
+
+# job statuses
+WAITING, ALLOCATED, RUNNING, DONE = 0, 1, 2, 3
+
+INF_TIME = np.int32(2**30)  # sentinel "never" (headroom for + t_on arithmetic)
+
+
+class BasePolicy(enum.IntEnum):
+    FCFS = 0
+    EASY = 1
+
+
+class PSMVariant(enum.IntEnum):
+    NONE = 0  # always-on: nodes never sleep (classic scheduler baseline)
+    PSUS = 1
+    PSAS = 2  # PSAS (Auto On)
+    PSAS_IPM = 3
+    RL = 4  # agent-controlled power commands
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine configuration (compiled into the jitted JAX engine)."""
+
+    base: BasePolicy = BasePolicy.EASY
+    psm: PSMVariant = PSMVariant.PSUS
+    timeout: Optional[int] = None  # idle seconds before switch-off; None = never
+    terminate_overrun: bool = False
+    window: int = 32  # scheduler scan window W (bounded backfill depth)
+    record_gantt: bool = False
+    gantt_capacity: int = 0  # 0 -> auto
+    max_batches: Optional[int] = None  # safety cap; None -> auto
+    rl_decision_interval: Optional[int] = None  # RL: also wake every Δ seconds
+
+    @property
+    def timeout_or_inf(self) -> int:
+        return int(INF_TIME) if self.timeout is None else int(self.timeout)
+
+    def label(self) -> str:
+        base = "FCFS" if self.base == BasePolicy.FCFS else "EASY"
+        psm = {
+            PSMVariant.NONE: "AlwaysOn",
+            PSMVariant.PSUS: "PSUS",
+            PSMVariant.PSAS: "PSAS(AutoOn)",
+            PSMVariant.PSAS_IPM: "PSAS+IPM",
+            PSMVariant.RL: "RL",
+        }[self.psm]
+        return f"{base} {psm}"
+
+
+class SimMetrics(NamedTuple):
+    """Aggregate metrics (identical field meaning across both engines)."""
+
+    total_energy_j: float
+    wasted_energy_j: float
+    energy_by_state_j: tuple  # len 5, ordered by state id
+    mean_wait_s: float
+    max_wait_s: float
+    utilization: float
+    makespan_s: int
+    n_jobs: int
+    n_terminated: int
+
+    def row(self) -> dict:
+        return {
+            "total_energy_kwh": self.total_energy_j / 3.6e6,
+            "wasted_energy_kwh": self.wasted_energy_j / 3.6e6,
+            "mean_wait_s": self.mean_wait_s,
+            "max_wait_s": self.max_wait_s,
+            "utilization": self.utilization,
+            "makespan_s": self.makespan_s,
+            "n_jobs": self.n_jobs,
+            "n_terminated": self.n_terminated,
+        }

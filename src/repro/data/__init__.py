@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic synthetic LM token streams + SWF job traces."""
+from repro.data.pipeline import TokenStream, make_batch_iterator
+
+__all__ = ["TokenStream", "make_batch_iterator"]

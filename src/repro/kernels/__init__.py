@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+    flash_attention   GQA flash attention (LM training/prefill hot-spot)
+    ssd_scan          chunked SSD/GLA scan (Mamba-2 / mLSTM core)
+    event_fuse        fused event-batch reduction (vmapped SPARS engine)
+
+Each kernel ships with a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the
+jit'd wrappers (interpret=True on CPU hosts). The XLA twins used by the
+model stack live next to their layers (``layers.attention_chunked``,
+``ssm.chunked_gla``) so the models compile on any backend; the Pallas
+versions are the TPU production path.
+"""
+from repro.kernels.ops import event_fuse, flash_attention, ssd_scan
+
+__all__ = ["flash_attention", "ssd_scan", "event_fuse"]

@@ -1,0 +1,120 @@
+"""Pallas-TPU fused event-batch reduction for the vectorized SPARS engine.
+
+The hot loop of the paper's system, once vmapped over thousands of RL
+environments, is the per-batch pair
+
+    accrue_energy : power_draw(t) = Σ_n power[state_n]      (histogram)
+    next_time     : min over switching nodes of until_n      (masked min)
+
+Each is a bandwidth-bound reduction over the node arrays (the engine reads
+``node_state``/``node_until`` twice per event batch). This kernel fuses the
+two into ONE pass over the node arrays — per env-block it reads the i32
+state/until rows once from HBM into VMEM and emits both reductions:
+
+    power_draw [E, 1] f32 : instantaneous power at time t
+    next_trans [E, 1] i32 : earliest strictly-future transition completion
+
+Grid ``(E/bE,)``; block (bE, N). N is the node count — padded to a lane
+multiple (128) by the wrapper with PAD_STATE (histogram weight 0, masked out
+of the min). The per-state power table is a (1, 8) VMEM operand (5 states
+padded to 8) broadcast to every grid step.
+
+Arithmetic intensity ≈ (5 compares + 5 FMAs + 1 select) per 8 bytes —
+firmly memory-bound; the win over the XLA pair is the halved HBM traffic
+(one read of each row instead of two), which the roofline model in
+EXPERIMENTS.md §Perf quantifies for the spars-rl cell.
+
+Oracle: ``ref.event_fuse_reference``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.types import INF_TIME, N_STATES, SWITCHING_OFF, SWITCHING_ON
+
+PAD_STATE = 7  # padding nodes: zero power, never transitioning
+LANES = 128
+
+
+def _event_kernel(
+    state_ref,  # (bE, N) i32
+    until_ref,  # (bE, N) i32
+    t_ref,  # (bE, 1) i32
+    power_ref,  # (1, 8) f32
+    draw_ref,  # (bE, 1) f32
+    next_ref,  # (bE, 1) i32
+):
+    state = state_ref[...]
+    until = until_ref[...]
+    t = t_ref[...]  # (bE, 1)
+
+    # --- fused histogram: power_draw = sum_n power[state_n] ---
+    draw = jnp.zeros(state.shape, jnp.float32)
+    for s in range(N_STATES):
+        draw = draw + jnp.where(state == s, power_ref[0, s], 0.0)
+    draw_ref[...] = jnp.sum(draw, axis=1, keepdims=True)
+
+    # --- fused masked min: next strictly-future transition completion ---
+    switching = jnp.logical_or(state == SWITCHING_ON, state == SWITCHING_OFF)
+    future = until > t  # (bE, N) broadcast over nodes
+    masked = jnp.where(
+        jnp.logical_and(switching, future), until, jnp.int32(INF_TIME)
+    )
+    next_ref[...] = jnp.min(masked, axis=1, keepdims=True)
+
+
+def event_fuse(
+    node_state: jax.Array,  # [E, N] i32
+    node_until: jax.Array,  # [E, N] i32
+    t: jax.Array,  # [E] i32
+    power: jax.Array,  # [5] f32
+    *,
+    block_e: int = 8,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused (power_draw [E], next_transition [E]) over vmapped envs."""
+    e, n = node_state.shape
+    n_pad = pl.cdiv(n, LANES) * LANES
+    e_pad = pl.cdiv(e, block_e) * block_e
+    if n_pad != n or e_pad != e:
+        node_state = jnp.pad(
+            node_state, ((0, e_pad - e), (0, n_pad - n)),
+            constant_values=PAD_STATE,
+        )
+        node_until = jnp.pad(
+            node_until, ((0, e_pad - e), (0, n_pad - n)),
+            constant_values=int(INF_TIME),
+        )
+    t2 = jnp.pad(t[:, None], ((0, e_pad - e), (0, 0)))
+    power8 = jnp.zeros((1, 8), jnp.float32).at[0, :N_STATES].set(power)
+
+    grid = (e_pad // block_e,)
+    draw, nxt = pl.pallas_call(
+        _event_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_e, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_e, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_e, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((e_pad, 1), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(node_state, node_until, t2, power8)
+    return draw[:e, 0], nxt[:e, 0]

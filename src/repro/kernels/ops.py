@@ -1,0 +1,68 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (this container) and False on
+TPU, so the same call sites work in tests and production. The wrappers fall
+back to the jnp reference for shapes the kernels don't tile (e.g. ragged
+sequence lengths) — callers never need to special-case.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.event_fuse import event_fuse as _event_fuse_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "sm_scale", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, sm_scale: Optional[float] = None,
+    block_q: int = 128, block_k: int = 128, interpret: Optional[bool] = None,
+):
+    """[B,Sq,H,hd] x [B,Sk,KH,hd]^2 -> [B,Sq,H,hd]."""
+    if interpret is None:
+        interpret = _on_cpu()
+    sq = q.shape[1]
+    if sq % min(block_q, sq) != 0 or q.shape[2] % k.shape[2] != 0:
+        return ref.flash_attention_reference(q, k, v, causal=causal, sm_scale=sm_scale)
+    return _flash_kernel(
+        q, k, v, causal=causal, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    q, k, v, g, *, chunk: int = 128, interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked GLA scan: [B,S,H,dk] x2, [B,S,H,dv], [B,S,H] -> (y, h_final)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    s = q.shape[1]
+    if s % min(chunk, s) != 0:
+        return ref.gla_reference(q, k, v, g)
+    return _ssd_kernel(q, k, v, g, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def event_fuse(
+    node_state, node_until, t, power, *, block_e: int = 8,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused (power_draw, next_transition) over vmapped simulator envs."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return _event_fuse_kernel(
+        node_state, node_until, t, power, block_e=block_e, interpret=interpret
+    )

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each reference implements the kernel's mathematical contract with no tiling
+or VMEM concerns; kernel tests sweep shapes/dtypes and assert_allclose
+against these (interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import INF_TIME, SWITCHING_OFF, SWITCHING_ON
+
+
+def flash_attention_reference(
+    q: jax.Array,  # [B, Sq, H, hd]
+    k: jax.Array,  # [B, Sk, KH, hd]
+    v: jax.Array,  # [B, Sk, KH, hd]
+    *,
+    causal: bool = True,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    """Materialized-scores GQA attention, fp32 softmax."""
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    n_rep = h // kh
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(hd)
+    k = jnp.repeat(k, n_rep, axis=2)
+    v = jnp.repeat(v, n_rep, axis=2)
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * sm_scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gla_reference(
+    q: jax.Array,  # [B, S, H, dk]
+    k: jax.Array,
+    v: jax.Array,  # [B, S, H, dv]
+    g: jax.Array,  # [B, S, H] log-decay
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential GLA recurrence oracle. Returns (y, h_final)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    h0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(hst, xs):
+        qt, kt, vt, gt = xs
+        hst = jnp.exp(gt.astype(jnp.float32))[..., None, None] * hst + jnp.einsum(
+            "bhk,bhv->bhkv", kt.astype(jnp.float32), vt.astype(jnp.float32)
+        )
+        yt = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32), hst)
+        return hst, yt
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, g))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype), hT
+
+
+def event_fuse_reference(
+    node_state: jax.Array,  # [E, N] i32
+    node_until: jax.Array,  # [E, N] i32
+    t: jax.Array,  # [E] i32
+    power: jax.Array,  # [5] f32
+) -> Tuple[jax.Array, jax.Array]:
+    """(power_draw [E] f32, next strictly-future transition [E] i32)."""
+    draw = jnp.sum(power[node_state], axis=1)
+    switching = (node_state == SWITCHING_ON) | (node_state == SWITCHING_OFF)
+    future = node_until > t[:, None]
+    masked = jnp.where(switching & future, node_until, jnp.int32(INF_TIME))
+    return draw.astype(jnp.float32), jnp.min(masked, axis=1)

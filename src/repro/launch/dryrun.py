@@ -1,0 +1,452 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes, with real shardings and ShapeDtypeStruct inputs
+(no device allocation), then extract memory / cost / collective analysis for
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+MUST be run as its own process (the XLA_FLAGS line above must execute before
+any jax import):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+        --shape train_4k --mesh single --out out/dryrun
+
+Use --arch all --shape all --mesh both for the full 40-cell sweep (plus the
+paper's own spars-rl cell).
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch, list_archs
+from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+from repro.launch.mesh import (
+    HBM_BW,
+    ICI_BW_PER_LINK,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+)
+from repro.launch.shapes import (
+    SHAPE_SETS,
+    applicable,
+    batch_specs,
+    decode_specs,
+    train_accum_steps,
+)
+from repro.models import build_model
+from repro.models.sharding import (
+    batch_shardings,
+    cache_shardings,
+    params_shardings,
+    replicated,
+)
+from repro.training.optimizer import _AdamMoments, _FactorState
+from repro.training.train_step import TrainStepConfig, make_optimizer, make_train_step
+
+
+def _bytes_of(shapes) -> int:
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(shapes)
+    )
+
+
+def _sharded_bytes(shapes, shardings, mesh) -> int:
+    """Per-device bytes of args under their shardings."""
+    total = 0
+    for x, sh in zip(
+        jax.tree_util.tree_leaves(shapes), jax.tree_util.tree_leaves(shardings)
+    ):
+        n_shards = 1
+        spec = sh.spec
+        for i, axis in enumerate(spec):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            k = int(np.prod([mesh.shape[a] for a in axes]))
+            if i < len(x.shape) and x.shape[i] % k == 0:
+                n_shards *= k
+        total += int(np.prod(x.shape)) * x.dtype.itemsize // n_shards
+    return total
+
+
+def _opt_shardings(opt_shapes, p_shardings, mesh):
+    from repro.training.optimizer import OptState
+
+    rep = NamedSharding(mesh, P())
+    inner = opt_shapes.inner
+    if isinstance(inner, _AdamMoments):
+        inner_sh = _AdamMoments(p_shardings, p_shardings)
+    elif isinstance(inner, _FactorState):
+        inner_sh = _FactorState(
+            replicated(mesh, inner.vr), replicated(mesh, inner.vc)
+        )
+    elif inner is None:
+        inner_sh = None
+    else:
+        inner_sh = replicated(mesh, inner)
+    return OptState(rep, inner_sh)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    keep_hlo: bool = False,
+    accum_override: Optional[int] = None,
+    config_overrides: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Lower + compile one (arch x shape x mesh) cell; return analysis record."""
+    t_start = time.time()
+    cfg = get_arch(arch)
+    mesh_dax = ("pod", "data") if multi_pod else ("data",)
+    cfg = cfg.replace(batch_axes=mesh_dax)
+    if config_overrides:
+        cfg = cfg.replace(**config_overrides)
+    shape = SHAPE_SETS[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "kind": shape.kind,
+    }
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    model = build_model(cfg)
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n_params = sum(
+        int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params_shapes)
+    )
+    rec["n_params"] = n_params
+    p_shard = params_shardings(cfg, mesh, params_shapes)
+
+    with mesh:
+        if shape.kind == "train":
+            fsdp_sp = cfg.sharding_mode == "fsdp_sp"
+            if fsdp_sp:
+                # ZeRO-3 weights: optimizer/grad memory is sharded 256-way,
+                # and activations are sequence-parallel — accumulation is
+                # unnecessary (and would multiply the weight all-gathers)
+                accum = accum_override or 1
+            else:
+                accum = accum_override or train_accum_steps(cfg, n_params, shape)
+            rec["accum_steps"] = accum
+            opt = make_optimizer(cfg.optimizer, 1e-4)
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            o_shard = _opt_shardings(opt_shapes, p_shard, mesh)
+            dax = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            g_specs = jax.tree_util.tree_map(lambda s: s.spec, p_shard)
+            step = make_train_step(
+                model,
+                opt,
+                TrainStepConfig(
+                    accum_steps=accum, batch_axes=dax, grad_specs=g_specs
+                ),
+            )
+            batch = batch_specs(cfg, shape)
+            b_shard = batch_shardings(mesh, batch, shape.batch, seq_over_model=fsdp_sp)
+            fn = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(params_shapes, opt_shapes, batch)
+            args_bytes = (
+                _sharded_bytes(params_shapes, p_shard, mesh)
+                + _sharded_bytes(opt_shapes, o_shard, mesh)
+                + _sharded_bytes(batch, b_shard, mesh)
+            )
+        elif shape.kind == "prefill":
+            batch = batch_specs(cfg, shape)
+            b_shard = batch_shardings(mesh, batch, shape.batch)
+            fn = jax.jit(model.prefill, in_shardings=(p_shard, b_shard))
+            lowered = fn.lower(params_shapes, batch)
+            args_bytes = _sharded_bytes(params_shapes, p_shard, mesh) + _sharded_bytes(
+                batch, b_shard, mesh
+            )
+        else:  # decode
+            tokens, cache_shapes, pos = decode_specs(cfg, model, shape)
+            c_shard = cache_shardings(cfg, mesh, cache_shapes, shape.batch, shape.seq)
+            tok_shard = batch_shardings(mesh, tokens, shape.batch)
+            fn = jax.jit(
+                model.decode_step,
+                in_shardings=(p_shard, tok_shard, c_shard, NamedSharding(mesh, P())),
+                donate_argnums=(2,),
+            )
+            lowered = fn.lower(params_shapes, tokens, cache_shapes, pos)
+            args_bytes = (
+                _sharded_bytes(params_shapes, p_shard, mesh)
+                + _sharded_bytes(cache_shapes, c_shard, mesh)
+            )
+        rec["args_bytes_per_device"] = args_bytes
+        t_lower = time.time()
+        rec["lower_s"] = round(t_lower - t_start, 2)
+
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t_lower, 2)
+
+    # ---- analyses ----
+    # raw XLA cost_analysis (NOTE: counts scan bodies once; kept for
+    # reference only — the roofline uses the trip-count-aware HLO parse)
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["xla_cost_analysis_raw"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis_error"] = repr(e)
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(ma, k)
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis_error"] = repr(e)
+
+    # trip-count-aware per-device cost from the post-SPMD HLO
+    hlo = compiled.as_text()
+    cost = analyze_hlo(hlo, n_dev)
+    rec["collective_wire_bytes_per_device"] = cost.collective_bytes
+    rec["collective_counts"] = cost.collective_counts
+    if keep_hlo:
+        rec["hlo_len"] = len(hlo)
+
+    flops_dev = cost.flops
+    hbm_dev = cost.hbm_bytes
+    wire = cost.total_collective_bytes
+    rec["roofline"] = roofline_terms(
+        flops_dev, hbm_dev, wire, PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK
+    )
+    rec["flops_per_device"] = flops_dev
+    rec["hbm_bytes_per_device"] = hbm_dev
+
+    # useful-FLOPs ratio: MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE)
+    rec["model_flops_ratio"] = None
+    if shape.kind == "train":
+        n_active = _active_params(cfg, n_params)
+        model_flops = 6.0 * n_active * (shape.batch * shape.seq)
+        rec["model_flops"] = model_flops
+        rec["n_active_params"] = n_active
+        total_hlo_flops = flops_dev * n_dev
+        if total_hlo_flops > 0:
+            rec["model_flops_ratio"] = model_flops / total_hlo_flops
+    rec["status"] = "ok"
+    rec["total_s"] = round(time.time() - t_start, 2)
+    return rec
+
+
+def _active_params(cfg, n_params: int) -> float:
+    """Active params per token (MoE: shared + top_k/E of routed experts)."""
+    if cfg.n_experts:
+        model = build_model(cfg)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        routed = 0
+        for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+            names = [getattr(k, "key", "") for k in path]
+            if "moe" in names and any(
+                n in ("w_gate", "w_up", "w_down") for n in names
+            ):
+                routed += int(np.prod(leaf.shape))
+        return n_params - routed + routed * cfg.top_k / cfg.n_experts
+    return float(n_params)
+
+
+# ---------------------------------------------------------------------------
+# the paper's own cell: distributed A2C update for the RL power manager
+# ---------------------------------------------------------------------------
+
+def lower_spars_rl(multi_pod: bool, n_envs: int = 4096) -> Dict[str, Any]:
+    from repro.core.rl.a2c import A2CConfig, TrainState, make_update_fn
+    from repro.core.rl.env import EnvConfig, env_reset
+    from repro.core.engine import init_state, make_const
+    from repro.core.rl.networks import policy_init
+    from repro.core.types import EngineConfig, PSMVariant, BasePolicy
+    from repro.workloads.generator import GeneratorConfig, generate_workload
+    from repro.workloads.platform import PlatformSpec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    rec = {
+        "arch": "spars-rl",
+        "shape": f"a2c_envs{n_envs}",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "kind": "rl_train",
+    }
+    plat = PlatformSpec(nb_nodes=64)
+    wl = generate_workload(GeneratorConfig(n_jobs=128, nb_res=64, seed=0))
+    ecfg = EnvConfig(
+        engine=EngineConfig(
+            psm=PSMVariant.RL, base=BasePolicy.EASY, rl_decision_interval=600
+        ),
+        max_steps=256,
+    )
+    acfg = A2CConfig(n_envs=n_envs, n_steps=8)
+    const = make_const(plat, ecfg.engine)
+    sim0 = init_state(plat, wl, ecfg.engine)
+    sims0_shape = jax.eval_shape(
+        lambda s: jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_envs,) + a.shape), s
+        ),
+        sim0,
+    )
+    params = policy_init(jax.random.PRNGKey(0), ecfg.obs_size, ecfg.n_actions)
+
+    def full_update(sims0, ts_params, ts_opt, key):
+        from repro.training.optimizer import adamw
+
+        opt = adamw(lr=acfg.lr)
+        update, _ = make_update_fn(ecfg, const, sims0, acfg)
+        env_states, obs = jax.vmap(functools.partial(env_reset, ecfg, const))(sims0)
+        ts = TrainState(ts_params, ts_opt, env_states, obs, key)
+        ts, metrics = update(ts)
+        return ts.params, ts.opt_state, metrics
+
+    from repro.training.optimizer import adamw
+
+    opt = adamw(lr=acfg.lr)
+    opt_shapes = jax.eval_shape(opt.init, params)
+    params_shapes = jax.eval_shape(lambda: params)
+    key_shape = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    dax = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def env_shard(x):
+        spec = [None] * x.ndim
+        if x.ndim >= 1 and x.shape[0] == n_envs:
+            spec[0] = dax
+        return NamedSharding(mesh, P(*spec))
+
+    sims_shard = jax.tree_util.tree_map(env_shard, sims0_shape)
+    rep = lambda t: jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), t
+    )
+    with mesh:
+        fn = jax.jit(
+            full_update,
+            in_shardings=(sims_shard, rep(params_shapes), rep(opt_shapes), NamedSharding(mesh, P())),
+        )
+        lowered = fn.lower(sims0_shape, params_shapes, opt_shapes, key_shape)
+        t_lower = time.time()
+        rec["lower_s"] = round(t_lower - t0, 2)
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t_lower, 2)
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost_analysis"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+    except Exception as e:
+        rec["cost_analysis_error"] = repr(e)
+    cost = analyze_hlo(compiled.as_text(), n_dev)
+    rec["collective_wire_bytes_per_device"] = cost.collective_bytes
+    rec["collective_counts"] = cost.collective_counts
+    rec["flops_per_device"] = cost.flops
+    rec["hbm_bytes_per_device"] = cost.hbm_bytes
+    rec["roofline"] = roofline_terms(
+        cost.flops, cost.hbm_bytes, cost.total_collective_bytes,
+        PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK,
+    )
+    rec["status"] = "ok"
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="out/dryrun")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--spars-rl", action="store_true", help="also run the RL cell")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPE_SETS) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    rec = lower_cell(arch, shape, mp, accum_override=args.accum)
+                except Exception:
+                    rec = {
+                        "arch": arch,
+                        "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "error",
+                        "error": traceback.format_exc(),
+                    }
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    rf = rec.get("roofline", {})
+                    extra = (
+                        f" compile={rec.get('compile_s')}s"
+                        f" dominant={rf.get('dominant')}"
+                        f" cf={rf.get('compute_fraction', 0):.3f}"
+                    )
+                elif status == "error":
+                    extra = " " + rec["error"].strip().splitlines()[-1][:120]
+                print(f"[{status:7s}] {tag}{extra}", flush=True)
+                results.append(rec)
+
+    if args.spars_rl:
+        for mp in meshes:
+            tag = f"spars-rl__{'multi' if mp else 'single'}"
+            try:
+                rec = lower_spars_rl(mp)
+            except Exception:
+                rec = {"arch": "spars-rl", "status": "error", "error": traceback.format_exc()}
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=2)
+            print(f"[{rec.get('status'):7s}] {tag}", flush=True)
+            results.append(rec)
+
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    n_skip = sum(1 for r in results if r.get("status") == "skipped")
+    n_err = sum(1 for r in results if r.get("status") == "error")
+    print(f"\nDRY-RUN SUMMARY: {n_ok} ok, {n_skip} skipped(documented), {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

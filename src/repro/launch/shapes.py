@@ -1,0 +1,84 @@
+"""Assigned input-shape sets and ShapeDtypeStruct builders per (arch, shape).
+
+The four LM shape sets (assignment):
+  train_4k     seq 4096,    global_batch 256   -> train_step
+  prefill_32k  seq 32768,   global_batch 32    -> prefill_step
+  decode_32k   seq 32768,   global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524288,  global_batch 1     -> serve_step; sub-quadratic
+                                                  archs only (see DESIGN.md)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import Model, build_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPE_SETS: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Whether this (arch, shape) cell runs; else the documented skip reason."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "skip: pure full-attention arch at 524k context "
+            "(quadratic prefill / O(ctx) KV decode; see DESIGN.md §Arch-applicability)"
+        )
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the model-input batch dict (train/prefill)."""
+    b, s = shape.batch, shape.seq
+    batch = {"tokens": sds((b, s), jnp.int32)}
+    if cfg.n_image_embeds:
+        batch["image_embeds"] = sds((b, cfg.n_image_embeds, cfg.d_model), cfg.dtype)
+    if cfg.encoder_layers:
+        batch["encoder_frames"] = sds((b, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def decode_specs(cfg: ArchConfig, model: Model, shape: ShapeSpec):
+    """(tokens, cache, pos) ShapeDtypeStructs for serve_step."""
+    b, s = shape.batch, shape.seq
+    tokens = sds((b, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    pos = sds((), jnp.int32)
+    return tokens, cache, pos
+
+
+def train_accum_steps(cfg: ArchConfig, n_params: int, shape: ShapeSpec) -> int:
+    """Microbatch accumulation for the train shape (keeps activations in HBM)."""
+    if n_params > 1e10:
+        return 8
+    if n_params > 3e9:
+        return 4
+    return 1
+
+
+def param_count(cfg: ArchConfig) -> int:
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return sum(int(jnp.prod(jnp.asarray(x.shape))) for x in jax.tree_util.tree_leaves(shapes))

@@ -1,0 +1,186 @@
+"""Simulator driver — the paper's ``runner.py`` + ``simulator_config.yaml``
+(§2.3.2/2.3.3), adapted to the offline container (JSON or minimal-YAML
+config; PyYAML not required).
+
+    PYTHONPATH=src python -m repro.launch.sim --config configs/sim_example.json
+    PYTHONPATH=src python -m repro.launch.sim --workload wl.json --platform p.json \
+        --scheduler "EASY PSUS" --timeout 900 --out out/run1
+
+Config keys (paper's runtime layer):
+    workload:   path to workload.json | "preset:<name>" | "profiles"
+    platform:   path to platform.json | node count (int)
+    scheduler:  "FCFS|EASY PSUS|PSAS|PSAS+IPM|AlwaysOn|RL"
+    timeout:    idle seconds before switch-off (null = never)
+    terminate_overrun: bool
+    rl:         {checkpoint: path, decision_interval: s}   (scheduler "RL")
+    out:        output directory (CSV logs + metrics.json + gantt)
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+from typing import Any, Dict, Optional
+
+from repro.core import engine
+from repro.core.gantt import intervals_from_log, render_png, write_csv
+from repro.core.metrics import metrics_from_state, np_state
+from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+from repro.workloads.generator import PRESETS, generate_workload
+from repro.workloads.platform import PlatformSpec, load_platform
+from repro.workloads.workload import Workload, load_workload
+
+SCHEDULERS = {
+    "FCFS PSUS": (BasePolicy.FCFS, PSMVariant.PSUS),
+    "EASY PSUS": (BasePolicy.EASY, PSMVariant.PSUS),
+    "FCFS PSAS": (BasePolicy.FCFS, PSMVariant.PSAS),
+    "EASY PSAS": (BasePolicy.EASY, PSMVariant.PSAS),
+    "FCFS PSAS+IPM": (BasePolicy.FCFS, PSMVariant.PSAS_IPM),
+    "EASY PSAS+IPM": (BasePolicy.EASY, PSMVariant.PSAS_IPM),
+    "EASY AlwaysOn": (BasePolicy.EASY, PSMVariant.NONE),
+    "FCFS AlwaysOn": (BasePolicy.FCFS, PSMVariant.NONE),
+}
+
+
+def _load_mini_yaml(path: str) -> Dict[str, Any]:
+    """JSON, or a flat ``key: value`` YAML subset (no PyYAML offline)."""
+    with open(path) as f:
+        text = f.read()
+    try:
+        return json.loads(text)
+    except json.JSONDecodeError:
+        pass
+    out: Dict[str, Any] = {}
+    for line in text.splitlines():
+        line = line.split("#", 1)[0].strip()
+        if not line or ":" not in line:
+            continue
+        k, v = line.split(":", 1)
+        v = v.strip()
+        if v.lower() in ("null", "none", ""):
+            out[k.strip()] = None
+        elif v.lower() in ("true", "false"):
+            out[k.strip()] = v.lower() == "true"
+        else:
+            try:
+                out[k.strip()] = int(v)
+            except ValueError:
+                try:
+                    out[k.strip()] = float(v)
+                except ValueError:
+                    out[k.strip()] = v.strip("'\"")
+    return out
+
+
+def resolve_workload(spec) -> Workload:
+    if isinstance(spec, Workload):
+        return spec
+    if isinstance(spec, str) and spec.startswith("preset:"):
+        name = spec.split(":", 1)[1]
+        return generate_workload(PRESETS[name])
+    if spec == "profiles":
+        from repro.configs.job_profiles import profile_workload
+
+        return profile_workload()
+    return load_workload(spec)
+
+
+def resolve_platform(spec) -> PlatformSpec:
+    if isinstance(spec, PlatformSpec):
+        return spec
+    if isinstance(spec, int):
+        return PlatformSpec(nb_nodes=spec)
+    return load_platform(spec)
+
+
+def run(config: Dict[str, Any]) -> Dict[str, Any]:
+    wl = resolve_workload(config["workload"])
+    plat = resolve_platform(config.get("platform", wl.nb_res))
+    sched = config.get("scheduler", "EASY PSUS")
+    base, psm = SCHEDULERS[sched]
+    ecfg = EngineConfig(
+        base=base,
+        psm=psm,
+        timeout=config.get("timeout"),
+        terminate_overrun=bool(config.get("terminate_overrun", False)),
+        record_gantt=bool(config.get("gantt", True)),
+    )
+    out_dir = config.get("out", "out/sim")
+    os.makedirs(out_dir, exist_ok=True)
+
+    s0 = engine.init_state(plat, wl, ecfg)
+    const = engine.make_const(plat, ecfg)
+    cap = engine.default_batch_cap(len(wl))
+    if ecfg.record_gantt:
+        s, log = engine.run_sim_gantt(s0, const, ecfg, max_batches=cap)
+        intervals = intervals_from_log(log)
+        write_csv(intervals, os.path.join(out_dir, "gantt.csv"))
+        d = np_state(s)
+        render_png(
+            intervals,
+            os.path.join(out_dir, "gantt.png"),
+            terminated_jobs=[int(j) for j in d["job_terminated"].nonzero()[0]],
+            title=f"{sched} timeout={ecfg.timeout}",
+        )
+    else:
+        s = engine.simulate(plat, wl, ecfg)
+
+    m = metrics_from_state(s, plat.power_active)
+
+    # CSV job log (paper §2.3.3: "CSV outputs including job execution logs")
+    d = np_state(s)
+    with open(os.path.join(out_dir, "jobs.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["job", "res", "subtime", "start", "finish", "wait", "terminated"])
+        arrs = wl.arrays()
+        for i in range(len(wl)):
+            if not d["job_exists"][i]:
+                continue
+            w.writerow(
+                [
+                    int(arrs["job_id"][i]), int(d["job_res"][i]),
+                    int(d["job_subtime"][i]), int(d["job_start"][i]),
+                    int(d["job_finish"][i]),
+                    int(d["job_start"][i] - d["job_subtime"][i]),
+                    bool(d["job_terminated"][i]),
+                ]
+            )
+    result = {"scheduler": sched, "timeout": ecfg.timeout, **m.row()}
+    with open(os.path.join(out_dir, "metrics.json"), "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default=None)
+    ap.add_argument("--workload", default=None)
+    ap.add_argument("--platform", default=None)
+    ap.add_argument("--scheduler", default="EASY PSUS", choices=list(SCHEDULERS))
+    ap.add_argument("--timeout", type=int, default=None)
+    ap.add_argument("--terminate-overrun", action="store_true")
+    ap.add_argument("--out", default="out/sim")
+    args = ap.parse_args(argv)
+
+    if args.config:
+        config = _load_mini_yaml(args.config)
+    else:
+        config = {
+            "workload": args.workload or "preset:fig3_small",
+            "scheduler": args.scheduler,
+            "timeout": args.timeout,
+            "terminate_overrun": args.terminate_overrun,
+            "out": args.out,
+        }
+        if args.platform:
+            config["platform"] = (
+                int(args.platform) if args.platform.isdigit() else args.platform
+            )
+    result = run(config)
+    print(json.dumps(result, indent=2))
+    return result
+
+
+if __name__ == "__main__":
+    main()

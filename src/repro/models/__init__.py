@@ -1,0 +1,9 @@
+"""Model substrate: the assigned architectures as composable JAX modules.
+
+``build_model(arch_config)`` returns pure ``init / loss / prefill /
+decode_step`` functions; parameters are plain pytrees (stacked per layer-stage
+for ``lax.scan``), sharding rules live in :mod:`repro.models.sharding`.
+"""
+from repro.models.model import Model, build_model
+
+__all__ = ["Model", "build_model"]

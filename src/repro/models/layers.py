@@ -1,0 +1,367 @@
+"""Core layers: norms, RoPE, GQA attention (with online-softmax chunked path
+and KV caches), SwiGLU/GELU MLPs. Raw-pytree params, jnp-only.
+
+The chunked attention path (`attention_chunked`) is the XLA twin of the
+Pallas flash kernel in ``repro.kernels.flash_attention`` — same online
+softmax algorithm, used for long-sequence prefill so the working set stays
+O(chunk) instead of O(S²).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, fan_in: int, fan_out: int, dtype) -> jax.Array:
+    scale = jnp.sqrt(1.0 / fan_in)
+    return (jax.random.normal(key, (fan_in, fan_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(jnp.square(x32), -1, keepdims=True) + eps)
+    return (x32 * scale).astype(dt) * gain
+
+
+def layer_norm(x, gain, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), -1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * gain + bias
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """[B,S,K,hd] -> [B,S,K*n_rep,hd] (GQA expansion)."""
+    if n_rep == 1:
+        return k
+    b, s, kh, hd = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, kh, n_rep, hd)
+    ).reshape(b, s, kh * n_rep, hd)
+
+
+def attention_naive(
+    q: jax.Array,  # [B,Sq,H,hd]
+    k: jax.Array,  # [B,Sk,K,hd]
+    v: jax.Array,  # [B,Sk,K,hd]
+    causal: bool,
+    q_offset: jax.Array | int = 0,
+) -> jax.Array:
+    """Materialized-scores attention (oracle / short sequences / decode)."""
+    h, kh = q.shape[2], k.shape[2]
+    k = _repeat_kv(k, h // kh)
+    v = _repeat_kv(v, h // kh)
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool,
+    q_offset: jax.Array | int = 0,
+    chunk: int = DEFAULT_CHUNK,
+) -> jax.Array:
+    """Online-softmax attention, scanning KV in chunks (flash-style in XLA).
+
+    Memory O(Sq·chunk) instead of O(Sq·Sk); numerically identical to
+    attention_naive (same fp32 accumulation), validated in tests.
+    """
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    if sk % chunk != 0:
+        return attention_naive(q, k, v, causal, q_offset)
+    n_rep = h // kh
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    kc = k.reshape(b, sk // chunk, chunk, kh, hd)
+    vc = v.reshape(b, sk // chunk, chunk, kh, hd)
+    qpos = jnp.arange(sq) + q_offset
+
+    def body(carry, xs):
+        acc, m, l = carry  # [B,H,Sq,hd], [B,H,Sq], [B,H,Sq]
+        kb, vb, c_idx = xs  # [B,chunk,K,hd] ×2, scalar
+        kb = _repeat_kv(kb, n_rep)
+        vb = _repeat_kv(vb, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
+        if causal:
+            kpos = c_idx * chunk + jnp.arange(chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, -1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    m0 = jnp.full((b, h, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body,
+        (acc0, m0, l0),
+        (
+            jnp.moveaxis(kc, 1, 0),
+            jnp.moveaxis(vc, 1, 0),
+            jnp.arange(sk // chunk),
+        ),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out, 1, 2).astype(v.dtype)  # [B,Sq,H,hd]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnParams:
+    pass  # params are plain dicts; this namespace documents the layout
+
+
+def attn_init(key, d_model, n_heads, n_kv_heads, head_dim, qk_norm, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype)
+    return p
+
+
+def attn_qkv(p, x, n_heads, n_kv_heads, head_dim, positions, theta, qk_norm, eps):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, s, n_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, s, n_kv_heads, head_dim)
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"], eps)
+        k = rms_norm(k, p["k_norm"], eps)
+    if theta:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def attn_apply(
+    p,
+    x,
+    *,
+    n_heads,
+    n_kv_heads,
+    head_dim,
+    positions,
+    theta,
+    qk_norm=False,
+    eps=1e-5,
+    causal=True,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_pos: Optional[jax.Array] = None,
+    attn_impl: str = "auto",
+    chunk: int = DEFAULT_CHUNK,
+):
+    """Self-attention with optional KV cache.
+
+    cache: (k_cache, v_cache) [B, S_max, K, hd]; cache_pos: write offset
+    (scalar). Returns (out [B,S,D'], new_cache).
+    """
+    b, s, _ = x.shape
+    q, k, v = attn_qkv(
+        p, x, n_heads, n_kv_heads, head_dim, positions, theta, qk_norm, eps
+    )
+    if cache is not None:
+        kc, vc = cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), cache_pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), cache_pos, 1)
+        s_max = kc.shape[1]
+        # mask out cache slots beyond the current position
+        valid = jnp.arange(s_max) < (cache_pos + s)
+        k_eff = jnp.where(valid[None, :, None, None], kc, 0)
+        v_eff = jnp.where(valid[None, :, None, None], vc, 0)
+        # logits for invalid slots masked via causal offset (cache_pos + row)
+        out = _attend(
+            q, k_eff, v_eff, True, cache_pos, attn_impl, chunk, kv_valid=valid
+        )
+        new_cache = (kc, vc)
+    else:
+        out = _attend(q, k, v, causal, 0, attn_impl, chunk)
+        new_cache = None
+    out = out.reshape(b, s, n_heads * head_dim)
+    return out @ p["wo"], new_cache
+
+
+def _attend(q, k, v, causal, q_offset, impl, chunk, kv_valid=None):
+    if kv_valid is not None:
+        # fold validity into a causal-style bound: invalid slots have key
+        # position >= everything (they are zeros; mask via big-negative below)
+        pass
+    sq, sk = q.shape[1], k.shape[1]
+    if impl == "naive":
+        out = _masked_naive(q, k, v, causal, q_offset, kv_valid)
+    elif impl == "chunked":
+        out = _masked_chunked(q, k, v, causal, q_offset, chunk, kv_valid)
+    else:  # auto
+        if sq == 1 or sk <= 2 * chunk:
+            out = _masked_naive(q, k, v, causal, q_offset, kv_valid)
+        else:
+            out = _masked_chunked(q, k, v, causal, q_offset, chunk, kv_valid)
+    return out
+
+
+def _masked_naive(q, k, v, causal, q_offset, kv_valid):
+    h, kh = q.shape[2], k.shape[2]
+    k = _repeat_kv(k, h // kh)
+    v = _repeat_kv(v, h // kh)
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    sq, sk = q.shape[1], k.shape[1]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+    if kv_valid is not None:
+        mask = mask & kv_valid[None, :]
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def _masked_chunked(q, k, v, causal, q_offset, chunk, kv_valid):
+    if kv_valid is None and k.shape[1] % chunk == 0:
+        return attention_chunked(q, k, v, causal, q_offset, chunk)
+    if kv_valid is not None and k.shape[1] % chunk == 0:
+        return _chunked_with_valid(q, k, v, causal, q_offset, chunk, kv_valid)
+    return _masked_naive(q, k, v, causal, q_offset, kv_valid)
+
+
+def _chunked_with_valid(q, k, v, causal, q_offset, chunk, kv_valid):
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    n_rep = h // kh
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    kc = k.reshape(b, sk // chunk, chunk, kh, hd)
+    vc = v.reshape(b, sk // chunk, chunk, kh, hd)
+    validc = kv_valid.reshape(sk // chunk, chunk)
+    qpos = jnp.arange(sq) + q_offset
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kb, vb, valb, c_idx = xs
+        kb = _repeat_kv(kb, n_rep)
+        vb = _repeat_kv(vb, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
+        kpos = c_idx * chunk + jnp.arange(chunk)
+        mask = valb[None, :]
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, -1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    m0 = jnp.full((b, h, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body,
+        (acc0, m0, l0),
+        (
+            jnp.moveaxis(kc, 1, 0),
+            jnp.moveaxis(vc, 1, 0),
+            validc,
+            jnp.arange(sk // chunk),
+        ),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out, 1, 2).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu_apply(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def gelu_mlp_init(key, d_model, d_ff, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, d_model, d_ff, dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": dense_init(k2, d_ff, d_model, dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp_apply(p, x):
+    return jax.nn.gelu(x @ p["w_in"] + p["b_in"]) @ p["w_out"] + p["b_out"]

@@ -1,0 +1,3 @@
+"""Public model API: build_model(config) -> Model. Placeholder populated by
+repro.models.transformer; see that module."""
+from repro.models.transformer import Model, build_model  # noqa: F401

@@ -1,0 +1,187 @@
+"""Mixture-of-Experts FF layer: token-choice top-k routing with per-row
+capacity dispatch (dropping), plus optional shared experts (Qwen-MoE style).
+
+TPU adaptation: instead of the classic (tokens, experts, capacity) one-hot
+dispatch einsum (whose FLOPs/memory dwarf the expert GEMMs at LM scales) or a
+global token sort (which GSPMD turns into cross-device collectives), tokens
+are sorted *per batch row*: the sort/gather run along the unsharded sequence
+axis, so data-parallel sharding of the batch axis needs no communication, and
+expert compute is a dense grouped einsum ``(B,E,C,D) x (E,D,F)`` that the MXU
+likes. Overflow beyond capacity ``C = ceil(S*k/E * capacity_factor)`` is
+dropped (standard dropping-MoE semantics); the residual path carries dropped
+tokens unchanged.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, swiglu_apply, swiglu_init
+
+
+def moe_init(
+    key,
+    d_model: int,
+    n_experts: int,
+    expert_d_ff: int,
+    n_shared_experts: int,
+    shared_d_ff: int,
+    dtype,
+):
+    ks = jax.random.split(key, 6)
+    scale_in = 1.0 / math.sqrt(d_model)
+    scale_out = 1.0 / math.sqrt(expert_d_ff)
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32),
+        "w_gate": (
+            jax.random.normal(ks[1], (n_experts, d_model, expert_d_ff), jnp.float32)
+            * scale_in
+        ).astype(dtype),
+        "w_up": (
+            jax.random.normal(ks[2], (n_experts, d_model, expert_d_ff), jnp.float32)
+            * scale_in
+        ).astype(dtype),
+        "w_down": (
+            jax.random.normal(ks[3], (n_experts, expert_d_ff, d_model), jnp.float32)
+            * scale_out
+        ).astype(dtype),
+    }
+    if n_shared_experts > 0:
+        p["shared"] = swiglu_init(ks[4], d_model, shared_d_ff, dtype)
+        p["shared_gate"] = dense_init(ks[5], d_model, 1, dtype)
+    return p
+
+
+def _capacity(s: int, k: int, n_experts: int, capacity_factor: float) -> int:
+    c = int(math.ceil(s * k * capacity_factor / n_experts))
+    return max(8, ((c + 7) // 8) * 8) if s > 1 else max(1, c)
+
+
+def moe_apply(
+    p,
+    x: jax.Array,  # [B, S, D]
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    batch_axes: Tuple[str, ...] = (),
+    tp_axis: Optional[str] = "model",
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,D], aux_load_balance_loss scalar).
+
+    ``batch_axes``: mesh axes carrying the batch dim. The sorted-dispatch
+    scatter/gather is batch-parallel by construction (indices never cross
+    rows), but GSPMD cannot prove that and replicates the E*C dispatch
+    buffers — at qwen2-moe train scale that is a ~1 TB/device/step
+    all-reduce storm (EXPERIMENTS.md §Perf iteration: qwen2-moe). Pinning
+    the batch dim of every dispatch-path tensor keeps the whole MoE layer
+    communication-free up to the expert GEMMs.
+    """
+    b, s, d = x.shape
+    e, k = n_experts, top_k
+    c = _capacity(s, k, e, capacity_factor)
+
+    def pin(t, d_axis=False):
+        if not batch_axes:
+            return t
+        from jax.sharding import PartitionSpec as P
+
+        spec = [batch_axes] + [None] * (t.ndim - 1)
+        if d_axis and tp_axis:
+            spec[-1] = tp_axis  # keep the model dim sharded through combine
+        return jax.lax.with_sharding_constraint(t, P(*spec))
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # [B,S,E]
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # [B,S,k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9
+    )
+
+    # ---- per-row sorted capacity dispatch ----
+    flat_e = pin(expert_ids.reshape(b, s * k))  # [B, N] expert per (token,k)
+    order = pin(jnp.argsort(flat_e, axis=-1, stable=True))  # group by expert
+    sorted_e = pin(jnp.take_along_axis(flat_e, order, -1))
+    # rank of each entry within its expert group
+    starts = pin(
+        jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(sorted_e)
+    )
+    rank = jnp.arange(s * k)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, -1
+    )
+    keep = pin(rank < c)
+    slot = pin(jnp.where(keep, sorted_e * c + rank, e * c))  # overflow slot
+
+    token_of = pin(order // k)  # source token of each sorted entry
+    rows = jnp.arange(b)[:, None]
+    xg = pin(x[rows, token_of])  # [B, N, D] gathered inputs in sorted order
+    buf = pin(
+        jnp.zeros((b, e * c + 1, d), x.dtype).at[rows, slot].set(
+            jnp.where(keep[..., None], xg, 0)
+        )
+    )
+    xe = pin(buf[:, : e * c].reshape(b, e, c, d))
+
+    # ---- grouped expert GEMMs (SwiGLU) ----
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["w_gate"])) * jnp.einsum(
+        "becd,edf->becf", xe, p["w_up"]
+    )
+    ye = pin(jnp.einsum("becf,efd->becd", h, p["w_down"]), d_axis=True)
+
+    # ---- combine back (d stays model-sharded until the residual) ----
+    ye_flat = pin(
+        jnp.concatenate(
+            [ye.reshape(b, e * c, d), jnp.zeros((b, 1, d), ye.dtype)], 1
+        ),
+        d_axis=True,
+    )
+    y_sorted = pin(ye_flat[rows, slot], d_axis=True)  # zeros where dropped
+    gates_sorted = jnp.take_along_axis(gate_vals.reshape(b, s * k), order, -1)
+    contrib = y_sorted * (gates_sorted * keep)[..., None].astype(ye.dtype)
+    y = pin(
+        jnp.zeros((b, s, d), ye.dtype).at[rows, token_of].add(contrib),
+        d_axis=True,
+    )
+
+    # ---- shared experts (Qwen-MoE) ----
+    if "shared" in p:
+        sh = swiglu_apply(p["shared"], x)
+        sg = jax.nn.sigmoid(x @ p["shared_gate"])
+        y = y + sh * sg
+
+    # ---- load-balancing aux (Switch-style) ----
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_ids, e, dtype=jnp.float32), axis=(0, 1, 2)
+    )
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(frac_tokens * frac_probs) * e
+    return y.astype(x.dtype), aux
+
+
+def moe_apply_reference(p, x, *, n_experts: int, top_k: int):
+    """O(E · tokens) dense oracle: every expert on every token, masked combine.
+    No capacity dropping — the dispatch path must match it when capacity is
+    ample. Used by tests only."""
+    b, s, d = x.shape
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    h = jax.nn.silu(jnp.einsum("bsd,edf->besf", x, p["w_gate"])) * jnp.einsum(
+        "bsd,edf->besf", x, p["w_up"]
+    )
+    ye = jnp.einsum("besf,efd->besd", h, p["w_down"])  # [B,E,S,D]
+    weight = jnp.zeros((b, s, n_experts), jnp.float32)
+    for kk in range(top_k):
+        weight = weight + jax.nn.one_hot(expert_ids[..., kk], n_experts) * gate_vals[
+            ..., kk : kk + 1
+        ]
+    y = jnp.einsum("besd,bse->bsd", ye.astype(jnp.float32), weight).astype(x.dtype)
+    if "shared" in p:
+        sh = swiglu_apply(p["shared"], x)
+        sg = jax.nn.sigmoid(x @ p["shared_gate"])
+        y = y + sh * sg
+    return y

@@ -1,0 +1,247 @@
+"""Parameter/activation sharding rules for the production mesh.
+
+Mesh axes: ``("data","model")`` single-pod (16x16) or ``("pod","data","model")``
+multi-pod (2x16x16). Batch shards over ("pod","data"); tensor-parallel dims
+over "model" (Megatron pairing: column-parallel then row-parallel, so each
+block needs one reduce); with ``cfg.fsdp`` the complementary weight dim also
+shards over "data" (ZeRO-3-style), which is what lets grok-1-314b fit HBM.
+
+Rules are name/shape driven over the param pytree (stacked leading stage axes
+are skipped). Any dim that does not divide its mesh axis falls back to
+replication (e.g. glm4's 2 KV heads vs the 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes used for batch/data parallelism ('pod' folds into data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    if isinstance(axis, tuple):
+        size = int(np.prod([_axis_size(mesh, a) for a in axis]))
+    else:
+        size = _axis_size(mesh, axis)
+    return n % size == 0 and n >= size
+
+
+def _maybe(n: int, mesh: Mesh, axis):
+    return axis if _div(n, mesh, axis) else None
+
+
+# 2D weight rule: (in_dim -> fsdp/'data', out_dim -> 'model') or transposed
+def _matmul_spec(shape, mesh, cfg, model_dim: int, fsdp_dim: Optional[int]):
+    """Build a PartitionSpec for an nD weight; only the trailing 2 dims (or
+    named dims) are sharded, leading stage-stack dims replicate."""
+    spec = [None] * len(shape)
+    if model_dim is not None and _div(shape[model_dim], mesh, "model"):
+        spec[model_dim] = "model"
+    if cfg.fsdp and fsdp_dim is not None and _div(shape[fsdp_dim], mesh, "data"):
+        spec[fsdp_dim] = "data"
+    return P(*spec)
+
+
+def zero_sp_param_spec(cfg: ArchConfig, mesh: Mesh, shape) -> P:
+    """fsdp_sp layout for matmul weights: contraction dim (-2) over 'model'
+    (the weight is all-gathered per layer — ZeRO-style — instead of
+    all-reducing full activations), optional ZeRO over 'data' on dim -1.
+    Activations stay (batch over data, sequence over model); GSPMD then
+    inserts only the cheap GQA KV all-gathers inside attention."""
+    spec = [None] * len(shape)
+    if _div(shape[-2], mesh, "model"):
+        spec[-2] = "model"
+    if cfg.fsdp and _div(shape[-1], mesh, "data"):
+        spec[-1] = "data"
+    return P(*spec)
+
+
+def param_spec(cfg: ArchConfig, mesh: Mesh, path: str, shape) -> P:
+    """PartitionSpec for one parameter leaf, from its tree path + shape."""
+    nd = len(shape)
+    name_ = path.split("/")[-1]
+    if (
+        cfg.sharding_mode == "fsdp_sp"
+        and nd >= 2
+        and name_ not in ("embed", "lm_head")
+        and "mixer" not in path
+        and name_ != "r"
+    ):
+        return zero_sp_param_spec(cfg, mesh, shape)
+    last, prev = nd - 1, nd - 2
+
+    def ms(model_dim, fsdp_dim):
+        return _matmul_spec(shape, mesh, cfg, model_dim, fsdp_dim)
+
+    name = path.split("/")[-1]
+    if nd <= 1:
+        return P()
+    # embeddings / unembedding
+    if name == "embed":
+        return ms(0, 1)  # (Vp, D): vocab over model
+    if name == "lm_head":
+        return ms(last, prev)  # (D, Vp): vocab over model
+    # attention projections
+    if name in ("wq", "wk", "wv"):
+        return ms(last, prev)
+    if name == "wo":
+        return ms(prev, last)
+    # dense MLPs (swiglu / gelu): column then row parallel
+    if name in ("w_gate", "w_up", "w_in"):
+        return ms(last, prev)
+    if "moe" in path and name == "w_down" and not cfg.fsdp:
+        # MoE down-projection: model on the OUTPUT dim. Row-parallel would
+        # all-reduce the padded [B,E,C,D] capacity buffer (~5x the token
+        # volume at top-4/cf1.25); output-sharding keeps the combine
+        # d-sharded and defers to one small token-space all-gather at the
+        # residual (EXPERIMENTS.md §Perf: qwen2-moe iteration 6).
+        # NOT under fsdp: there the contraction dim would be sharded over
+        # different axes on the two operands (model on h, data on w_down)
+        # and GSPMD gathers the full-d_ff expert activations — measured
+        # 2.7 TB/step on grok-1 (§Perf iteration 7)
+        return ms(last, prev)
+    if name in ("w_down", "w_out"):
+        return ms(prev, last)
+    # MoE: experts stay replicated on the expert dim (rarely divides 16);
+    # per-expert matrices shard like dense MLPs on their trailing dims
+    if name == "router":
+        return P()
+    # mamba2 mixer (separate projections, ssm.mamba2_init): z/x column-
+    # parallel, conv-x channels + norm gain follow, out_proj row-parallel —
+    # heads shard over 'model' end-to-end (EXPERIMENTS §Perf: zamba2).
+    # B/C/dt projections and per-head scalars are small -> replicated.
+    if name in ("z_proj", "x_proj"):
+        return ms(last, prev)
+    if name == "conv_w_x":
+        return ms(last, None)
+    if name in ("bc_proj", "dt_proj", "conv_w_bc"):
+        return P()
+    if "mixer" in path and name == "out_proj":
+        return ms(prev, last)
+    # xlstm mixers: recurrent block-diagonal weights stay replicated (sLSTM
+    # heads = 4, below the 16-way model axis; documented in DESIGN.md)
+    if "mixer" in path or name in ("r",):
+        return P()
+    if name in ("up_proj",):
+        return ms(last, prev)
+    if name in ("down_proj", "out_proj"):
+        return ms(prev, last)
+    return P()
+
+
+def params_shardings(cfg: ArchConfig, mesh: Mesh, params_shapes: PyTree) -> PyTree:
+    """NamedSharding tree matching an eval_shape of model.init."""
+
+    def leaf(path, x):
+        pstr = "/".join(
+            getattr(k, "key", getattr(k, "name", str(getattr(k, "idx", k))))
+            for k in path
+        )
+        return NamedSharding(mesh, param_spec(cfg, mesh, pstr, x.shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shapes)
+
+
+def batch_spec(mesh: Mesh, ndim: int, shard_seq_axis: Optional[int] = None) -> P:
+    """Batch tensors: axis 0 over ('pod','data') when divisible."""
+    spec = [None] * ndim
+    spec[0] = data_axes(mesh)
+    if shard_seq_axis is not None:
+        spec[0] = None
+        spec[shard_seq_axis] = data_axes(mesh)
+    return P(*spec)
+
+
+def batch_shardings(
+    mesh: Mesh,
+    batch_shapes: PyTree,
+    batch_size: int,
+    seq_over_model: bool = False,
+) -> PyTree:
+    """Shard batch dim over data axes; batch=1 (long-context) falls back to
+    replicated batch (sequence sharding is applied to the cache instead).
+
+    ``seq_over_model`` (the fsdp_sp layout): additionally shard the sequence
+    axis (dim 1) over the model axis, making every activation tensor
+    sequence-parallel — GSPMD then all-gathers the (small, GQA) KV heads
+    inside attention instead of all-reducing full activations per layer.
+    """
+    dp = int(np.prod([_axis_size(mesh, a) for a in data_axes(mesh)]))
+
+    def leaf(x):
+        if x.ndim >= 1 and x.shape[0] == batch_size and batch_size % dp == 0:
+            spec = [None] * x.ndim
+            spec[0] = data_axes(mesh)
+            if (
+                seq_over_model
+                and x.ndim >= 2
+                and "model" in mesh.shape
+                and x.shape[1] % mesh.shape["model"] == 0
+            ):
+                spec[1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(leaf, batch_shapes)
+
+
+def cache_shardings(
+    cfg: ArchConfig, mesh: Mesh, cache_shapes: PyTree, batch_size: int, seq_len: int
+) -> PyTree:
+    """KV caches / SSM states.
+
+    Layout is (stage_count, B, S, K, hd) for attention KV. Batch shards over
+    data when divisible; for batch=1 long-context decode the *sequence* axis
+    shards over data instead (context parallelism), and the model axis shards
+    KV heads when divisible.
+    """
+    dp = int(np.prod([_axis_size(mesh, a) for a in data_axes(mesh)]))
+    dax = data_axes(mesh)
+
+    def leaf(x):
+        spec = [None] * x.ndim
+        # find batch axis: first axis == batch_size after the stage-stack axis
+        baxis = None
+        for i, s in enumerate(x.shape[:3]):
+            if s == batch_size:
+                baxis = i
+                break
+        if baxis is not None and batch_size % dp == 0 and batch_size >= dp:
+            spec[baxis] = dax
+        elif baxis is not None:
+            # context parallel: shard the (long) sequence axis
+            for i in range(baxis + 1, x.ndim):
+                if x.shape[i] == seq_len and seq_len % dp == 0:
+                    spec[i] = dax
+                    break
+        # shard KV heads over model where divisible (axis sized n_kv_heads)
+        for i in range(x.ndim - 2, x.ndim):
+            if (
+                i > (baxis or 0)
+                and x.shape[i] == cfg.n_kv_heads
+                and _div(cfg.n_kv_heads, mesh, "model")
+                and spec[i] is None
+            ):
+                spec[i] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(leaf, cache_shapes)
+
+
+def replicated(mesh: Mesh, shapes: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), shapes)

@@ -1,0 +1,496 @@
+"""State-space / recurrent mixers: Mamba-2 (SSD), xLSTM's mLSTM and sLSTM.
+
+One chunked gated-linear-attention core (``chunked_gla``) serves both Mamba-2
+and mLSTM training/prefill:
+
+    h_t = exp(g_t) · h_{t-1} + k_t ⊗ v_t          (state: [dk, dv] per head)
+    y_t = q_t · h_t
+
+TPU adaptation: the recurrence is evaluated chunk-parallel — intra-chunk
+terms become a masked, decay-weighted (Q·Kᵀ)·V product (MXU-friendly
+matmuls, the "state-space duality" of the Mamba-2 paper), and only the
+O(S/chunk) inter-chunk state pass is sequential (``lax.scan``). Decode is the
+O(1) recurrent step. Both paths are validated against the naive sequential
+scan oracle in tests; the Pallas kernel in ``repro.kernels.ssd_scan``
+implements the same chunk program with explicit VMEM tiling.
+
+All decays g are ≤ 0 (log-space), so every exponential in the chunked path is
+≤ 1 — no stabilizer bookkeeping is needed.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+DEFAULT_GLA_CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# chunked GLA core
+# ---------------------------------------------------------------------------
+
+def gla_scan_reference(q, k, v, g, h0=None):
+    """Sequential oracle. q,k: [B,S,H,dk]; v: [B,S,H,dv]; g: [B,S,H] (log)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(hst, xs):
+        qt, kt, vt, gt = xs
+        hst = jnp.exp(gt)[..., None, None] * hst + jnp.einsum(
+            "bhk,bhv->bhkv", kt.astype(jnp.float32), vt.astype(jnp.float32)
+        )
+        yt = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32), hst)
+        return hst, yt
+
+    xs = tuple(
+        jnp.moveaxis(a, 1, 0)
+        for a in (q, k, v, g.astype(jnp.float32))
+    )
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype), hT
+
+
+def chunked_gla(
+    q: jax.Array,  # [B,S,H,dk]
+    k: jax.Array,  # [B,S,H,dk]
+    v: jax.Array,  # [B,S,H,dv]
+    g: jax.Array,  # [B,S,H] log-decay per step (<= 0)
+    h0: Optional[jax.Array] = None,  # [B,H,dk,dv]
+    chunk: int = DEFAULT_GLA_CHUNK,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunk-parallel evaluation of the GLA recurrence. Returns (y, h_final)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if s % chunk != 0:
+        return gla_scan_reference(q, k, v, g, h0)
+    n = s // chunk
+    if h0 is None:
+        h0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    qc = q.reshape(b, n, chunk, h, dk)
+    kc = k.reshape(b, n, chunk, h, dk)
+    vc = v.reshape(b, n, chunk, h, dv)
+    gc = g.astype(jnp.float32).reshape(b, n, chunk, h)
+    bcum = jnp.cumsum(gc, axis=2)  # decay from chunk start through t (inclusive)
+
+    # intra-chunk: y_intra[t] = sum_{s<=t} exp(b_t - b_s) (q_t.k_s) v_s
+    # (b_t - b_s <= 0 for s <= t, so all exponentials are <= 1)
+    diff = bcum[:, :, :, None, :] - bcum[:, :, None, :, :]  # [B,n,T,S,H]
+    mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])[
+        None, None, :, :, None
+    ]
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bnthk,bnshk->bntsh", qc.astype(jnp.float32), kc.astype(jnp.float32))
+    y_intra = jnp.einsum("bntsh,bnshv->bnthv", scores * decay, vc.astype(jnp.float32))
+
+    # per-chunk aggregated state contribution: sum_s exp(b_L - b_s) k_s v_s
+    b_end = bcum[:, :, -1:, :]  # [B,n,1,H]
+    k_scaled = kc.astype(jnp.float32) * jnp.exp(b_end - bcum)[..., None]
+    chunk_state = jnp.einsum("bnshk,bnshv->bnhkv", k_scaled, vc.astype(jnp.float32))
+    chunk_decay = jnp.exp(b_end[:, :, 0, :])  # [B,n,H] total chunk decay
+
+    # inter-chunk scan: h_{c} = chunk_decay_c * h_{c-1} + chunk_state_c
+    def step(hst, xs):
+        cs, cd = xs  # [B,H,dk,dv], [B,H]
+        h_in = hst
+        hst = cd[..., None, None] * hst + cs
+        return hst, h_in
+
+    hT, h_starts = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_starts = jnp.moveaxis(h_starts, 0, 1)  # [B,n,H,dk,dv] state entering chunk
+
+    # inter-chunk contribution: y_inter[t] = exp(b_t) q_t . h_start
+    q_scaled = qc.astype(jnp.float32) * jnp.exp(bcum)[..., None]
+    y_inter = jnp.einsum("bnthk,bnhkv->bnthv", q_scaled, h_starts)
+
+    y = (y_intra + y_inter).reshape(b, s, h, dv)
+    return y.astype(v.dtype), hT
+
+
+def gla_decode_step(q, k, v, g, h):
+    """One recurrent step. q,k: [B,H,dk]; v: [B,H,dv]; g: [B,H]; h: [B,H,dk,dv]."""
+    h = jnp.exp(g.astype(jnp.float32))[..., None, None] * h + jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), h)
+    return y.astype(v.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (Mamba front conv)
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """x: [B,S,C]; w: [K,C] depthwise; returns [B,S,C] (causal, left-padded)."""
+    kk = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (kk - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(kk)
+    )
+    return out + bias
+
+
+def causal_conv_step(x_t, conv_cache, w, bias):
+    """x_t: [B,C]; conv_cache: [B,K-1,C] (previous inputs). Returns (y, cache)."""
+    full = jnp.concatenate([conv_cache, x_t[:, None, :]], 1)  # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", full, w) + bias
+    return y, full[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 mixer
+# ---------------------------------------------------------------------------
+
+class Mamba2Dims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    d_state: int
+    conv_k: int
+
+    @staticmethod
+    def make(d_model: int, d_state: int, expand: int = 2, head_dim: int = 64, conv_k: int = 4):
+        d_inner = expand * d_model
+        return Mamba2Dims(
+            d_model, d_inner, d_inner // head_dim, head_dim, d_state, conv_k
+        )
+
+    @property
+    def conv_channels(self):
+        return self.d_inner + 2 * self.d_state
+
+
+def mamba2_init(key, dims: Mamba2Dims, dtype):
+    """Separately-shardable projections (TP adaptation, DESIGN.md §5).
+
+    The reference implementation uses one concatenated ``in_proj`` whose
+    output mixes head-sharded (z, x), replicated (B, C) and per-head (dt)
+    segments — unshardable as a single matrix. Splitting it (same math,
+    same FLOPs) lets z/x column-shard and out_proj row-shard over the
+    ``model`` axis: Mamba compute scales with TP instead of being
+    replicated (EXPERIMENTS.md §Perf iteration: zamba2).
+    """
+    ks = jax.random.split(key, 8)
+    # dt bias init: softplus^-1 of dt in [1e-3, 1e-1] (mamba2 reference init)
+    u = jax.random.uniform(ks[6], (dims.n_heads,), jnp.float32)
+    dt = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "z_proj": dense_init(ks[0], dims.d_model, dims.d_inner, dtype),
+        "x_proj": dense_init(ks[1], dims.d_model, dims.d_inner, dtype),
+        "bc_proj": dense_init(ks[2], dims.d_model, 2 * dims.d_state, dtype),
+        "dt_proj": dense_init(ks[3], dims.d_model, dims.n_heads, dtype),
+        "conv_w_x": (
+            jax.random.normal(ks[4], (dims.conv_k, dims.d_inner), jnp.float32)
+            / math.sqrt(dims.conv_k)
+        ).astype(dtype),
+        "conv_b_x": jnp.zeros((dims.d_inner,), dtype),
+        "conv_w_bc": (
+            jax.random.normal(ks[5], (dims.conv_k, 2 * dims.d_state), jnp.float32)
+            / math.sqrt(dims.conv_k)
+        ).astype(dtype),
+        "conv_b_bc": jnp.zeros((2 * dims.d_state,), dtype),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, dims.n_heads, dtype=jnp.float32)
+        ),
+        "D": jnp.ones((dims.n_heads,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm_g": jnp.ones((dims.d_inner,), dtype),
+        "out_proj": dense_init(ks[7], dims.d_inner, dims.d_model, dtype),
+    }
+
+
+def _mamba2_split(p, x, dims: Mamba2Dims):
+    """(z, x_in, bc, dt_raw) from the separate projections."""
+    z = x @ p["z_proj"]
+    xin = x @ p["x_proj"]
+    bc = x @ p["bc_proj"]
+    dt_raw = x @ p["dt_proj"]
+    return z, xin, bc, dt_raw
+
+
+def mamba2_apply(
+    p,
+    x: jax.Array,  # [B,S,D]
+    dims: Mamba2Dims,
+    h0: Optional[jax.Array] = None,
+    conv0: Optional[Tuple[jax.Array, jax.Array]] = None,
+    chunk: int = DEFAULT_GLA_CHUNK,
+    eps: float = 1e-5,
+):
+    """Training/prefill path. Returns (y, (h_final, (conv_x, conv_bc)))."""
+    b, s, _ = x.shape
+    z, xraw, bcraw, dt_raw = _mamba2_split(p, x, dims)
+
+    def conv_branch(raw, w, bias, cache):
+        if cache is not None:
+            xp = jnp.concatenate([cache.astype(raw.dtype), raw], 1)
+            out = causal_conv(xp, w, bias)[:, cache.shape[1] :]
+        else:
+            out = causal_conv(raw, w, bias)
+        new_cache = (
+            jnp.concatenate([cache.astype(raw.dtype), raw], 1)[:, -(dims.conv_k - 1) :]
+            if cache is not None
+            else _last_k(raw, dims.conv_k - 1)
+        )
+        return jax.nn.silu(out), new_cache
+
+    cx0, cbc0 = conv0 if conv0 is not None else (None, None)
+    xin_flat, new_cx = conv_branch(xraw, p["conv_w_x"], p["conv_b_x"], cx0)
+    bc, new_cbc = conv_branch(bcraw, p["conv_w_bc"], p["conv_b_bc"], cbc0)
+    B, C = jnp.split(bc, 2, axis=-1)
+    xin = xin_flat.reshape(b, s, dims.n_heads, dims.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["A_log"])  # [H] negative
+    g = dt * A  # log decay <= 0
+
+    # broadcast single-group B,C over heads; dt absorbed into k
+    k = B[:, :, None, :] * dt[..., None]  # [B,S,H,N]
+    q = jnp.broadcast_to(
+        C[:, :, None, :], (b, s, dims.n_heads, dims.d_state)
+    )
+    y, hT = chunked_gla(q, k.astype(jnp.float32), xin, g, h0, chunk)
+    y = y + xin * p["D"][None, None, :, None]
+    y = y.reshape(b, s, dims.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_g"], eps)
+    return (y @ p["out_proj"]).astype(x.dtype), (hT, (new_cx, new_cbc))
+
+
+def _last_k(x, k):
+    b, s, c = x.shape
+    pad = jnp.zeros((b, max(k - s, 0), c), x.dtype)
+    return jnp.concatenate([pad, x], 1)[:, -k:]
+
+
+def mamba2_decode(p, x_t, dims: Mamba2Dims, state, eps: float = 1e-5):
+    """One-token step. x_t: [B,D]; state = (h [B,H,N,hd], (conv_x, conv_bc))."""
+    h, (conv_x, conv_bc) = state
+    b = x_t.shape[0]
+    z, xraw, bcraw, dt_raw = _mamba2_split(p, x_t[:, None, :], dims)
+    z, xraw, bcraw, dt_raw = z[:, 0], xraw[:, 0], bcraw[:, 0], dt_raw[:, 0]
+    xin_flat, conv_x = causal_conv_step(
+        xraw, conv_x.astype(xraw.dtype), p["conv_w_x"], p["conv_b_x"]
+    )
+    bc, conv_bc = causal_conv_step(
+        bcraw, conv_bc.astype(bcraw.dtype), p["conv_w_bc"], p["conv_b_bc"]
+    )
+    xin_flat = jax.nn.silu(xin_flat)
+    bc = jax.nn.silu(bc)
+    B, C = jnp.split(bc, 2, axis=-1)
+    xin = xin_flat.reshape(b, dims.n_heads, dims.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    g = dt * A
+    k = B[:, None, :] * dt[..., None]  # [B,H,N]
+    q = jnp.broadcast_to(C[:, None, :], (b, dims.n_heads, dims.d_state))
+    y, h = gla_decode_step(q, k, xin, g, h)
+    y = y + xin * p["D"][None, :, None]
+    y = y.reshape(b, dims.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_g"], eps)
+    return (y @ p["out_proj"]).astype(x_t.dtype), (h, (conv_x, conv_bc))
+
+
+def mamba2_state_shape(dims: Mamba2Dims, batch: int):
+    return (
+        (batch, dims.n_heads, dims.d_state, dims.head_dim),
+        (
+            (batch, dims.conv_k - 1, dims.d_inner),
+            (batch, dims.conv_k - 1, 2 * dims.d_state),
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM) — gated linear attention form
+# ---------------------------------------------------------------------------
+
+class MLstmDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int
+
+    @staticmethod
+    def make(d_model: int, n_heads: int, expand: int = 2):
+        d_inner = expand * d_model
+        return MLstmDims(d_model, d_inner, n_heads, d_inner // n_heads)
+
+
+def mlstm_init(key, dims: MLstmDims, dtype):
+    ks = jax.random.split(key, 7)
+    di = dims.d_inner
+    return {
+        "up_proj": dense_init(ks[0], dims.d_model, 2 * di, dtype),
+        "wq": dense_init(ks[1], di, di, dtype),
+        "wk": dense_init(ks[2], di, di, dtype),
+        "wv": dense_init(ks[3], di, di, dtype),
+        "w_if": dense_init(ks[4], di, 2 * dims.n_heads, jnp.float32),
+        # forget-gate bias init > 0 -> long memory at init
+        "b_if": jnp.concatenate(
+            [jnp.zeros(dims.n_heads), 3.0 * jnp.ones(dims.n_heads)]
+        ).astype(jnp.float32),
+        "norm_g": jnp.ones((di,), dtype),
+        "down_proj": dense_init(ks[5], di, dims.d_model, dtype),
+    }
+
+
+def _mlstm_qkvg(p, xin, dims: MLstmDims):
+    b, s, _ = xin.shape
+    h, hd = dims.n_heads, dims.head_dim
+    q = (xin @ p["wq"]).reshape(b, s, h, hd) / math.sqrt(hd)
+    k = (xin @ p["wk"]).reshape(b, s, h, hd)
+    v = (xin @ p["wv"]).reshape(b, s, h, hd)
+    if_raw = xin.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_raw, f_raw = jnp.split(if_raw, 2, axis=-1)  # [B,S,H]
+    i_gate = jax.nn.sigmoid(i_raw)
+    g = jax.nn.log_sigmoid(f_raw)  # log decay <= 0
+    return q, k * i_gate[..., None], v, g
+
+
+def mlstm_apply(
+    p,
+    x: jax.Array,
+    dims: MLstmDims,
+    state=None,
+    chunk: int = DEFAULT_GLA_CHUNK,
+    eps: float = 1e-5,
+):
+    """Returns (y, (h_final, n_final)). state: (h [B,H,hd,hd], n [B,H,hd,1])."""
+    b, s, _ = x.shape
+    up = x @ p["up_proj"]
+    xin, z = jnp.split(up, 2, axis=-1)
+    q, k, v, g = _mlstm_qkvg(p, xin, dims)
+    h0, n0 = state if state is not None else (None, None)
+    y, hT = chunked_gla(q, k, v, g, h0, chunk)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    nq, nT = chunked_gla(q, k, ones, g, n0, chunk)  # denominator q.n_t
+    denom = jnp.maximum(jnp.abs(nq.astype(jnp.float32)), 1.0)
+    y = (y.astype(jnp.float32) / denom).astype(x.dtype)
+    y = y.reshape(b, s, dims.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_g"], eps)
+    return y @ p["down_proj"], (hT, nT)
+
+
+def mlstm_decode(p, x_t, dims: MLstmDims, state, eps: float = 1e-5):
+    h, n = state
+    b = x_t.shape[0]
+    up = x_t[:, None, :] @ p["up_proj"]
+    xin, z = jnp.split(up, 2, axis=-1)
+    q, k, v, g = _mlstm_qkvg(p, xin, dims)
+    q, k, v, g = q[:, 0], k[:, 0], v[:, 0], g[:, 0]
+    y, h = gla_decode_step(q, k, v, g, h)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    nq, n = gla_decode_step(q, k, ones, g, n)
+    denom = jnp.maximum(jnp.abs(nq.astype(jnp.float32)), 1.0)
+    y = (y.astype(jnp.float32) / denom).astype(x_t.dtype)
+    y = y.reshape(b, dims.d_inner)
+    y = rms_norm(y * jax.nn.silu(z[:, 0]), p["norm_g"], eps)
+    return y @ p["down_proj"], (h, n)
+
+
+def mlstm_state_shape(dims: MLstmDims, batch: int):
+    return (
+        (batch, dims.n_heads, dims.head_dim, dims.head_dim),
+        (batch, dims.n_heads, dims.head_dim, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM) — strictly sequential scalar-memory cell
+# ---------------------------------------------------------------------------
+
+class SLstmDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int
+
+    @staticmethod
+    def make(d_model: int, n_heads: int, expand: int = 1):
+        d_inner = expand * d_model
+        return SLstmDims(d_model, d_inner, n_heads, d_inner // n_heads)
+
+
+def slstm_init(key, dims: SLstmDims, dtype):
+    ks = jax.random.split(key, 4)
+    di = dims.d_inner
+    return {
+        "w_in": dense_init(ks[0], dims.d_model, 4 * di, dtype),
+        # block-diagonal recurrent weights, one block per head
+        "r": (
+            jax.random.normal(
+                ks[1], (dims.n_heads, dims.head_dim, 4 * dims.head_dim), jnp.float32
+            )
+            / math.sqrt(dims.head_dim)
+        ).astype(dtype),
+        "b": jnp.concatenate(
+            [jnp.zeros(3 * di), 3.0 * jnp.ones(di)]  # forget bias > 0
+        ).astype(jnp.float32),
+        "norm_g": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], di, dims.d_model, dtype),
+    }
+
+
+class SLstmState(NamedTuple):
+    c: jax.Array  # [B, di]
+    n: jax.Array  # [B, di]
+    m: jax.Array  # [B, di]
+    h: jax.Array  # [B, di]
+
+
+def slstm_zero_state(dims: SLstmDims, batch: int) -> SLstmState:
+    z = jnp.zeros((batch, dims.d_inner), jnp.float32)
+    return SLstmState(z, z, z - 10.0, z)
+
+
+def _slstm_cell(p, dims: SLstmDims, x_gates_t, st: SLstmState):
+    """x_gates_t: [B, 4*di] (input contribution). Stabilized exp gating."""
+    b = st.h.shape[0]
+    hh = st.h.reshape(b, dims.n_heads, dims.head_dim).astype(p["r"].dtype)
+    rec = jnp.einsum("bhd,hdf->bhf", hh, p["r"]).reshape(b, 4 * dims.d_inner)
+    gates = x_gates_t.astype(jnp.float32) + rec.astype(jnp.float32) + p["b"]
+    z_raw, i_raw, o_raw, f_raw = jnp.split(gates, 4, axis=-1)
+    z = jnp.tanh(z_raw)
+    o = jax.nn.sigmoid(o_raw)
+    f_log = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(f_log + st.m, i_raw)
+    i_p = jnp.exp(i_raw - m_new)
+    f_p = jnp.exp(f_log + st.m - m_new)
+    c = f_p * st.c + i_p * z
+    n = f_p * st.n + i_p
+    h = o * c / jnp.maximum(n, 1e-6)
+    return SLstmState(c, n, m_new, h)
+
+
+def slstm_apply(p, x, dims: SLstmDims, state: Optional[SLstmState] = None, eps=1e-5):
+    b, s, _ = x.shape
+    st = state if state is not None else slstm_zero_state(dims, b)
+    x_gates = x @ p["w_in"]  # [B,S,4di]
+
+    def step(st, xg_t):
+        st = _slstm_cell(p, dims, xg_t, st)
+        return st, st.h
+
+    stT, hs = jax.lax.scan(step, st, jnp.moveaxis(x_gates, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # [B,S,di]
+    y = rms_norm(y, p["norm_g"], eps)
+    return y @ p["out_proj"], stT
+
+
+def slstm_decode(p, x_t, dims: SLstmDims, state: SLstmState, eps=1e-5):
+    xg = x_t @ p["w_in"]
+    st = _slstm_cell(p, dims, xg, state)
+    y = rms_norm(st.h.astype(x_t.dtype), p["norm_g"], eps)
+    return y @ p["out_proj"], st

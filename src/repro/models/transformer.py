@@ -1,0 +1,607 @@
+"""Generic block-programmed LM stack.
+
+An architecture is a *block program*: a tuple of (block_type, count) stages
+(``ArchConfig.block_program()``). Within a stage, per-layer parameters are
+stacked on a leading axis and applied with ``lax.scan`` (+ optional
+``jax.checkpoint`` remat), keeping the HLO size O(#stage-types) rather than
+O(#layers) — essential for compiling 314B-parameter programs quickly.
+
+Block types:
+  dense        attn(GQA/RoPE/qk-norm) + SwiGLU
+  moe          attn + (shared + routed top-k) experts
+  zamba_super  ``mamba_per_super`` Mamba-2 blocks + one weight-tied shared
+               attention block (Zamba2 hybrid pattern)
+  xlstm_pair   mLSTM block + sLSTM block (xLSTM alternation)
+  enc          bidirectional attn + GELU MLP (whisper encoder)
+  dec          causal self-attn + cross-attn + GELU MLP (whisper decoder)
+
+Three execution paths per model: ``loss``/``forward`` (training, no cache),
+``prefill`` (build caches, return last-position logits), ``decode_step``
+(one token, O(1) or O(ctx) per step). Caches are plain pytrees whose
+structure mirrors the stage list.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+PyTree = Any
+
+
+def _tp_out(h: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Mark a post-TP-all-reduce activation for the save_tp remat policy."""
+    if cfg.remat and cfg.remat_policy == "save_tp":
+        from jax.ad_checkpoint import checkpoint_name
+
+        return checkpoint_name(h, "tp_out")
+    return h
+
+
+def _remat(fn, cfg: ArchConfig):
+    """Wrap a scan body with the configured rematerialization policy."""
+    if cfg.remat_policy == "save_tp":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names("tp_out")
+        )
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# per-block init
+# ---------------------------------------------------------------------------
+
+def _attn_block_init(key, cfg: ArchConfig, d_ff: int, gelu: bool, causal_dec=False):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+        "attn": L.attn_init(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.qk_norm, cfg.dtype
+        ),
+        "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+        "mlp": (
+            L.gelu_mlp_init(k2, cfg.d_model, d_ff, cfg.dtype)
+            if gelu
+            else L.swiglu_init(k2, cfg.d_model, d_ff, cfg.dtype)
+        ),
+    }
+    return p
+
+
+def block_init(key, cfg: ArchConfig, block_type: str) -> PyTree:
+    if block_type == "dense":
+        return _attn_block_init(key, cfg, cfg.d_ff, gelu=False)
+    if block_type == "enc":
+        return _attn_block_init(key, cfg, cfg.d_ff, gelu=True)
+    if block_type == "dec":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+            "self_attn": L.attn_init(
+                k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.qk_norm, cfg.dtype
+            ),
+            "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+            "cross_attn": L.attn_init(
+                k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, False, cfg.dtype
+            ),
+            "ln3": jnp.ones((cfg.d_model,), cfg.dtype),
+            "mlp": L.gelu_mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.dtype),
+        }
+    if block_type == "moe":
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+            "attn": L.attn_init(
+                k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.qk_norm, cfg.dtype
+            ),
+            "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+            "moe": M.moe_init(
+                k2,
+                cfg.d_model,
+                cfg.n_experts,
+                cfg.expert_d_ff,
+                cfg.n_shared_experts,
+                cfg.shared_d_ff,
+                cfg.dtype,
+            ),
+        }
+    if block_type == "mamba2":
+        dims = _mamba_dims(cfg)
+        return {
+            "ln": jnp.ones((cfg.d_model,), cfg.dtype),
+            "mixer": S.mamba2_init(key, dims, cfg.dtype),
+        }
+    if block_type == "zamba_super":
+        ks = jax.random.split(key, cfg.mamba_per_super)
+        return {
+            "mamba": jax.vmap(
+                lambda k: block_init(k, cfg, "mamba2")
+            )(jnp.stack(ks)),
+        }
+    if block_type == "mlstm":
+        dims = S.MLstmDims.make(cfg.d_model, cfg.n_heads, cfg.ssm_expand)
+        return {
+            "ln": jnp.ones((cfg.d_model,), cfg.dtype),
+            "mixer": S.mlstm_init(key, dims, cfg.dtype),
+        }
+    if block_type == "slstm":
+        dims = S.SLstmDims.make(cfg.d_model, cfg.n_heads)
+        return {
+            "ln": jnp.ones((cfg.d_model,), cfg.dtype),
+            "mixer": S.slstm_init(key, dims, cfg.dtype),
+        }
+    if block_type == "xlstm_pair":
+        k1, k2 = jax.random.split(key)
+        return {
+            "mlstm": block_init(k1, cfg, "mlstm"),
+            "slstm": block_init(k2, cfg, "slstm"),
+        }
+    raise ValueError(f"unknown block type {block_type}")
+
+
+def _mamba_dims(cfg: ArchConfig) -> S.Mamba2Dims:
+    return S.Mamba2Dims.make(
+        cfg.d_model, cfg.ssm_state, cfg.ssm_expand, cfg.ssm_head_dim
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-block apply (train path: no cache)
+# ---------------------------------------------------------------------------
+
+def _attn_args(cfg: ArchConfig, rope: bool):
+    return dict(
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        theta=cfg.rope_theta if rope else 0.0,
+        qk_norm=cfg.qk_norm,
+        eps=cfg.norm_eps,
+        chunk=cfg.attn_chunk,
+    )
+
+
+def _shared_attn_apply(shared, x, cfg, positions, cache=None, cache_pos=None):
+    h, kv = L.attn_apply(
+        shared["attn"],
+        L.rms_norm(x, shared["ln1"], cfg.norm_eps),
+        positions=positions,
+        causal=True,
+        cache=cache,
+        cache_pos=cache_pos,
+        **_attn_args(cfg, rope=True),
+    )
+    x = x + h
+    x = x + L.swiglu_apply(shared["mlp"], L.rms_norm(x, shared["ln2"], cfg.norm_eps))
+    return x, kv
+
+
+def block_apply(
+    p: PyTree,
+    x: jax.Array,
+    cfg: ArchConfig,
+    block_type: str,
+    positions: jax.Array,
+    extras: Dict[str, Any],
+    cache: Optional[PyTree] = None,
+    cache_pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
+    """Apply one block. Returns (x, new_cache, aux_loss)."""
+    eps = cfg.norm_eps
+    zero = jnp.zeros((), jnp.float32)
+
+    if block_type in ("dense", "moe"):
+        h, kv = L.attn_apply(
+            p["attn"],
+            L.rms_norm(x, p["ln1"], eps),
+            positions=positions,
+            causal=True,
+            cache=cache,
+            cache_pos=cache_pos,
+            **_attn_args(cfg, rope=True),
+        )
+        h = _tp_out(h, cfg)  # post-all-reduce point (remat_policy="save_tp")
+        x = x + h
+        inner = L.rms_norm(x, p["ln2"], eps)
+        if block_type == "dense":
+            x = x + _tp_out(L.swiglu_apply(p["mlp"], inner), cfg)
+            return x, kv, zero
+        y, aux = M.moe_apply(
+            p["moe"],
+            inner,
+            n_experts=cfg.n_experts,
+            top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+            batch_axes=cfg.batch_axes,
+        )
+        return x + _tp_out(y, cfg), kv, aux
+
+    if block_type == "enc":
+        h, _ = L.attn_apply(
+            p["attn"],
+            L.rms_norm(x, p["ln1"], eps),
+            positions=positions,
+            causal=False,
+            **_attn_args(cfg, rope=False),
+        )
+        x = x + h
+        x = x + L.gelu_mlp_apply(p["mlp"], L.rms_norm(x, p["ln2"], eps))
+        return x, None, zero
+
+    if block_type == "dec":
+        h, self_kv = L.attn_apply(
+            p["self_attn"],
+            L.rms_norm(x, p["ln1"], eps),
+            positions=positions,
+            causal=True,
+            cache=None if cache is None else cache["self"],
+            cache_pos=cache_pos,
+            **_attn_args(cfg, rope=True),
+        )
+        x = x + h
+        # cross attention over encoder memory
+        xq = L.rms_norm(x, p["ln2"], eps)
+        b, s, _ = xq.shape
+        q = (xq @ p["cross_attn"]["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+        if cache is not None and "cross" in cache and extras.get("memory") is None:
+            km, vm = cache["cross"]
+        else:
+            mem = extras["memory"]
+            km = (mem @ p["cross_attn"]["wk"]).reshape(
+                mem.shape[0], mem.shape[1], cfg.n_kv_heads, cfg.hd
+            )
+            vm = (mem @ p["cross_attn"]["wv"]).reshape(
+                mem.shape[0], mem.shape[1], cfg.n_kv_heads, cfg.hd
+            )
+        attn_out = L.attention_naive(q, km, vm, causal=False)
+        x = x + attn_out.reshape(b, s, cfg.n_heads * cfg.hd) @ p["cross_attn"]["wo"]
+        x = x + L.gelu_mlp_apply(p["mlp"], L.rms_norm(x, p["ln3"], eps))
+        new_cache = None if cache is None else {"self": self_kv, "cross": (km, vm)}
+        return x, new_cache, zero
+
+    if block_type == "mamba2":
+        dims = _mamba_dims(cfg)
+        inner = L.rms_norm(x, p["ln"], eps)
+        if cache is None:
+            y, _ = S.mamba2_apply(p["mixer"], inner, dims, chunk=cfg.gla_chunk, eps=eps)
+            return x + y, None, zero
+        if x.shape[1] == 1:  # decode
+            y, st = S.mamba2_decode(p["mixer"], inner[:, 0], dims, cache, eps=eps)
+            return x + y[:, None], st, zero
+        y, st = S.mamba2_apply(
+            p["mixer"], inner, dims, h0=cache[0], conv0=cache[1],
+            chunk=cfg.gla_chunk, eps=eps,
+        )
+        return x + y, st, zero
+
+    if block_type == "mlstm":
+        dims = S.MLstmDims.make(cfg.d_model, cfg.n_heads, cfg.ssm_expand)
+        inner = L.rms_norm(x, p["ln"], eps)
+        if cache is None:
+            y, _ = S.mlstm_apply(p["mixer"], inner, dims, chunk=cfg.gla_chunk, eps=eps)
+            return x + y, None, zero
+        if x.shape[1] == 1:
+            y, st = S.mlstm_decode(p["mixer"], inner[:, 0], dims, cache, eps=eps)
+            return x + y[:, None], st, zero
+        y, st = S.mlstm_apply(
+            p["mixer"], inner, dims, state=cache, chunk=cfg.gla_chunk, eps=eps
+        )
+        return x + y, st, zero
+
+    if block_type == "slstm":
+        dims = S.SLstmDims.make(cfg.d_model, cfg.n_heads)
+        inner = L.rms_norm(x, p["ln"], eps)
+        if cache is None:
+            y, _ = S.slstm_apply(p["mixer"], inner, dims, eps=eps)
+            return x + y, None, zero
+        if x.shape[1] == 1:
+            y, st = S.slstm_decode(p["mixer"], inner[:, 0], dims, cache, eps=eps)
+            return x + y[:, None], st, zero
+        y, st = S.slstm_apply(p["mixer"], inner, dims, state=cache, eps=eps)
+        return x + y, st, zero
+
+    if block_type == "xlstm_pair":
+        x, c1, _ = block_apply(
+            p["mlstm"], x, cfg, "mlstm", positions, extras,
+            None if cache is None else cache["mlstm"], cache_pos,
+        )
+        x, c2, _ = block_apply(
+            p["slstm"], x, cfg, "slstm", positions, extras,
+            None if cache is None else cache["slstm"], cache_pos,
+        )
+        new_cache = None if cache is None else {"mlstm": c1, "slstm": c2}
+        return x, new_cache, zero
+
+    if block_type == "zamba_super":
+        mamba_cache = None if cache is None else cache["mamba"]
+
+        def mamba_body(carry, xs):
+            xx = carry
+            if cache is None:
+                lp = xs
+                xx, _, _ = block_apply(lp, xx, cfg, "mamba2", positions, extras)
+                return xx, None
+            lp, lc = xs
+            xx, nc, _ = block_apply(
+                lp, xx, cfg, "mamba2", positions, extras, lc, cache_pos
+            )
+            return xx, nc
+
+        if cfg.remat and cache is None:
+            mamba_body = _remat(mamba_body, cfg)
+        xs = p["mamba"] if cache is None else (p["mamba"], mamba_cache)
+        x, new_mamba_cache = jax.lax.scan(mamba_body, x, xs)
+        # weight-tied shared attention application
+        shared = extras["shared"]
+        attn_cache = None if cache is None else cache["attn"]
+        x, kv = _shared_attn_apply(shared, x, cfg, positions, attn_cache, cache_pos)
+        new_cache = (
+            None if cache is None else {"mamba": new_mamba_cache, "attn": kv}
+        )
+        return x, new_cache, zero
+
+    raise ValueError(block_type)
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def block_cache(cfg: ArchConfig, block_type: str, batch: int, cache_len: int):
+    """Zero cache for ONE layer of the given type."""
+    dt = cfg.dtype
+    kv = lambda: (
+        jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), dt),
+        jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), dt),
+    )
+    if block_type in ("dense", "moe"):
+        return kv()
+    if block_type == "dec":
+        return {
+            "self": kv(),
+            "cross": (
+                jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd), dt),
+                jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd), dt),
+            ),
+        }
+    if block_type == "mamba2":
+        dims = _mamba_dims(cfg)
+        hs, (cxs, cbcs) = S.mamba2_state_shape(dims, batch)
+        return (
+            jnp.zeros(hs, jnp.float32),
+            (jnp.zeros(cxs, jnp.float32), jnp.zeros(cbcs, jnp.float32)),
+        )
+    if block_type == "zamba_super":
+        one = block_cache(cfg, "mamba2", batch, cache_len)
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.mamba_per_super,) + a.shape), one
+        )
+        return {"mamba": stacked, "attn": kv()}
+    if block_type == "mlstm":
+        dims = S.MLstmDims.make(cfg.d_model, cfg.n_heads, cfg.ssm_expand)
+        hs, ns = S.mlstm_state_shape(dims, batch)
+        return (jnp.zeros(hs, jnp.float32), jnp.zeros(ns, jnp.float32))
+    if block_type == "slstm":
+        dims = S.SLstmDims.make(cfg.d_model, cfg.n_heads)
+        return S.slstm_zero_state(dims, batch)
+    if block_type == "xlstm_pair":
+        return {
+            "mlstm": block_cache(cfg, "mlstm", batch, cache_len),
+            "slstm": block_cache(cfg, "slstm", batch, cache_len),
+        }
+    if block_type == "enc":
+        return None
+    raise ValueError(block_type)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+class Model(NamedTuple):
+    config: ArchConfig
+    init: Callable
+    forward: Callable  # (params, batch) -> (logits, aux)
+    loss: Callable  # (params, batch) -> (loss, metrics)
+    prefill: Callable  # (params, batch) -> (last_logits, cache)
+    decode_step: Callable  # (params, tokens[B,1], cache, pos) -> (logits, cache)
+    init_cache: Callable  # (batch_size, cache_len) -> cache
+    n_params: Callable  # (params) -> int
+
+
+def _sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / (half - 1)))
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    program = cfg.block_program()
+    dt = cfg.dtype
+    Vp = cfg.padded_vocab
+
+    # ---------------- init ----------------
+    def init(key) -> PyTree:
+        n_stage = len(program)
+        keys = jax.random.split(key, n_stage + 5)
+        params: Dict[str, Any] = {
+            "embed": L.embed_init(keys[0], Vp, cfg.d_model, dt),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "lm_head": L.dense_init(keys[1], cfg.d_model, Vp, dt),
+        }
+        stages = []
+        for i, (btype, count) in enumerate(program):
+            ks = jax.random.split(keys[2 + i], count)
+            stages.append(jax.vmap(lambda k: block_init(k, cfg, btype))(jnp.stack(ks)))
+        params["stages"] = tuple(stages)
+        if any(bt == "zamba_super" for bt, _ in program):
+            params["shared_attn"] = {
+                "ln1": jnp.ones((cfg.d_model,), dt),
+                "attn": L.attn_init(
+                    keys[-3], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                    cfg.qk_norm, dt,
+                ),
+                "ln2": jnp.ones((cfg.d_model,), dt),
+                "mlp": L.swiglu_init(keys[-2], cfg.d_model, cfg.d_ff, dt),
+            }
+        if cfg.encoder_layers:
+            ks = jax.random.split(keys[-1], cfg.encoder_layers)
+            params["encoder"] = {
+                "stage": jax.vmap(lambda k: block_init(k, cfg, "enc"))(jnp.stack(ks)),
+                "final_norm": jnp.ones((cfg.d_model,), dt),
+            }
+        return params
+
+    # ---------------- shared machinery ----------------
+    def run_stages(params, x, positions, extras, caches=None, cache_pos=None):
+        """caches: tuple parallel to program (stacked per stage) or None."""
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for i, (btype, count) in enumerate(program):
+            stage_p = params["stages"][i]
+            stage_c = None if caches is None else caches[i]
+
+            if caches is None:
+
+                def body(carry, lp, _btype=btype):
+                    xx, aux = carry
+                    xx, _, a = block_apply(lp, xx, cfg, _btype, positions, extras)
+                    return (xx, aux + a), None
+
+                if cfg.remat:
+                    body = _remat(body, cfg)
+                (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), stage_p)
+                new_caches.append(None)
+            else:
+
+                def body(carry, xs, _btype=btype):
+                    xx, aux = carry
+                    lp, lc = xs
+                    xx, nc, a = block_apply(
+                        lp, xx, cfg, _btype, positions, extras, lc, cache_pos
+                    )
+                    return (xx, aux + a), nc
+
+                (x, aux_total), nc = jax.lax.scan(
+                    body, (x, aux_total), (stage_p, stage_c)
+                )
+                new_caches.append(nc)
+        return x, tuple(new_caches), aux_total
+
+    def encode(params, frames):
+        """Whisper encoder over precomputed (stub) frame embeddings."""
+        b, s, _ = frames.shape
+        pos = jnp.arange(s)
+        x = frames.astype(dt) + _sinusoidal(pos, cfg.d_model).astype(dt)[None]
+        enc = params["encoder"]
+
+        def body(xx, lp):
+            xx, _, _ = block_apply(lp, xx, cfg, "enc", pos, {})
+            return xx, None
+
+        if cfg.remat:
+            body = _remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, enc["stage"])
+        return L.rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+    def embed_inputs(params, batch):
+        tokens = batch["tokens"]
+        x = params["embed"][jnp.clip(tokens, 0, Vp - 1)]
+        if cfg.n_image_embeds:
+            img = batch["image_embeds"].astype(dt)  # [B, n_img, D]
+            x = jnp.concatenate([img, x[:, cfg.n_image_embeds :]], 1)
+        return x
+
+    def make_extras(params, batch, memory="auto"):
+        extras: Dict[str, Any] = {}
+        if "shared_attn" in params:
+            extras["shared"] = params["shared_attn"]
+        if cfg.encoder_layers:
+            if isinstance(memory, str) and memory == "auto":
+                memory = encode(params, batch["encoder_frames"])
+            extras["memory"] = memory  # None => read cross-KV from the cache
+        return extras
+
+    def lm_logits(params, x):
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return (x @ params["lm_head"]).astype(jnp.float32)
+
+    # ---------------- train ----------------
+    def forward(params, batch):
+        x = embed_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])
+        extras = make_extras(params, batch)
+        x, _, aux = run_stages(params, x, positions, extras)
+        return lm_logits(params, x), aux
+
+    def loss(params, batch):
+        logits, aux = forward(params, batch)
+        targets = batch["tokens"][:, 1:]
+        lg = logits[:, :-1]
+        mask = (targets >= 0).astype(jnp.float32)
+        if cfg.n_image_embeds:
+            pos_mask = jnp.arange(targets.shape[1]) >= cfg.n_image_embeds
+            mask = mask * pos_mask[None, :]
+        tgt = jnp.clip(targets, 0, Vp - 1)
+        logz = jax.nn.logsumexp(lg, -1)
+        gold = jnp.take_along_axis(lg, tgt[..., None], -1)[..., 0]
+        nll = (logz - gold) * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum(nll) / denom
+        total = ce + cfg.moe_aux_weight * aux
+        return total, {"ce": ce, "aux": aux, "tokens": denom}
+
+    # ---------------- serve ----------------
+    def init_cache(batch_size: int, cache_len: int):
+        return tuple(
+            jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy() if a is not None else None,
+                block_cache(cfg, btype, batch_size, cache_len),
+                is_leaf=lambda a: a is None,
+            )
+            if block_cache(cfg, btype, batch_size, cache_len) is not None
+            else None
+            for btype, count in program
+        )
+
+    def prefill(params, batch, cache_len: Optional[int] = None):
+        x = embed_inputs(params, batch)
+        b, s, _ = x.shape
+        positions = jnp.arange(s)
+        extras = make_extras(params, batch)
+        caches = init_cache(b, cache_len or s)
+        x, caches, _ = run_stages(
+            params, x, positions, extras, caches, jnp.asarray(0, jnp.int32)
+        )
+        return lm_logits(params, x[:, -1:]), caches
+
+    def decode_step(params, tokens, caches, pos):
+        """tokens: [B,1]; pos: scalar current position (cache write offset)."""
+        x = params["embed"][jnp.clip(tokens, 0, Vp - 1)]
+        positions = pos + jnp.arange(1)
+        extras = make_extras(params, {"tokens": tokens}, memory=None)
+        x, caches, _ = run_stages(params, x, positions, extras, caches, pos)
+        return lm_logits(params, x), caches
+
+    def n_params(params) -> int:
+        return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+    return Model(
+        config=cfg,
+        init=init,
+        forward=forward,
+        loss=loss,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        n_params=n_params,
+    )

@@ -1,0 +1,19 @@
+"""Distributed training runtime: optimizers, train step, checkpointing,
+data pipeline, elasticity, gradient compression."""
+from repro.training.optimizer import (
+    OptState,
+    adamw,
+    adafactor,
+    sgd,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+
+__all__ = [
+    "OptState",
+    "adamw",
+    "adafactor",
+    "sgd",
+    "clip_by_global_norm",
+    "cosine_schedule",
+]

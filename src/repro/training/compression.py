@@ -1,0 +1,114 @@
+"""Gradient compression for cross-pod reduces: int8 quantization and top-k
+sparsification with error feedback.
+
+At 2+ pods the gradient all-reduce crosses the (slow) inter-pod links; a
+314B-model's bf16 gradients are ~630 GB per step of wire traffic. Two
+standard mitigations, both pure pytree transforms:
+
+* ``int8``  — per-tensor symmetric quantization. The wire carries int8 +
+  one f32 scale (4x less than bf16); here the quant-dequant roundtrip is
+  applied *before* the (GSPMD-inserted) all-reduce so the numerics match a
+  production int8-wire implementation whose reduce is performed on the
+  dequantized values.
+* ``topk``  — keep the largest-|g| fraction per tensor; the wire carries
+  (indices, values). Biased on its own, so pair it with ``ErrorFeedback``
+  (Karimireddy et al., 2019): the residual of what was not sent is added
+  back to the next step's gradient — SGD convergence is then preserved.
+
+``COMPRESSORS`` maps ``TrainStepConfig.compression`` names to stateless
+transforms; ``ErrorFeedback`` is the stateful wrapper used by the launcher
+when ``--compression topk`` is combined with ``--error-feedback``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# int8 per-tensor symmetric quantization
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def int8_compress(grads: PyTree) -> PyTree:
+    """Quant-dequant roundtrip (wire-numerics simulation, 4x compression)."""
+
+    def leaf(g):
+        if g.ndim < 1 or g.size < 1024:  # tiny tensors: not worth the scale
+            return g
+        q, s = quantize_int8(g)
+        return dequantize_int8(q, s, g.dtype)
+
+    return jax.tree_util.tree_map(leaf, grads)
+
+
+# ---------------------------------------------------------------------------
+# top-k magnitude sparsification
+# ---------------------------------------------------------------------------
+
+def topk_compress(grads: PyTree, fraction: float = 0.05) -> PyTree:
+    """Keep the top-``fraction`` |g| entries per tensor (rest zeroed)."""
+
+    def leaf(g):
+        if g.ndim < 1 or g.size < 1024:
+            return g
+        k = max(1, int(g.size * fraction))
+        flat = jnp.abs(g.reshape(-1).astype(jnp.float32))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        mask = jnp.abs(g.astype(jnp.float32)) >= thresh
+        return jnp.where(mask, g, jnp.zeros_like(g))
+
+    return jax.tree_util.tree_map(leaf, grads)
+
+
+COMPRESSORS: Dict[str, Callable[[PyTree], PyTree]] = {
+    "int8": int8_compress,
+    "topk": topk_compress,
+}
+
+
+# ---------------------------------------------------------------------------
+# error feedback (stateful wrapper)
+# ---------------------------------------------------------------------------
+
+class ErrorFeedbackState(NamedTuple):
+    residual: PyTree  # f32, same structure as grads
+
+
+def error_feedback_init(params: PyTree) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def error_feedback_apply(
+    state: ErrorFeedbackState,
+    grads: PyTree,
+    compressor: Callable[[PyTree], PyTree],
+) -> Tuple[PyTree, ErrorFeedbackState]:
+    """compressed(g + residual); residual' = (g + residual) - compressed."""
+    corrected = jax.tree_util.tree_map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, state.residual
+    )
+    sent = compressor(corrected)
+    residual = jax.tree_util.tree_map(
+        lambda c, s: c - s.astype(jnp.float32), corrected, sent
+    )
+    sent = jax.tree_util.tree_map(
+        lambda s, g: s.astype(g.dtype), sent, grads
+    )
+    return sent, ErrorFeedbackState(residual)

@@ -1,0 +1,249 @@
+"""Optimizers as pure pytree transforms (no optax dependency).
+
+API (optax-like, minimal):
+
+    opt = adamw(lr=3e-4, weight_decay=0.1, moment_dtype=jnp.bfloat16)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+``moment_dtype=bfloat16`` halves optimizer HBM for the large assigned archs;
+``adafactor`` factors the second moment (rank-1) for grok-1-class models where
+even bf16 Adam moments are too expensive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, Optional[PyTree]], Tuple[PyTree, OptState]]
+
+
+def _tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return _tree_map(lambda p, u: (p + u.astype(p.dtype)) if p is not None else None, params, updates)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return _tree_map(lambda x: x * scale.astype(x.dtype), tree), g
+
+
+def cosine_schedule(
+    base_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum)
+# ---------------------------------------------------------------------------
+
+def sgd(lr=1e-2, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            m = _tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        else:
+            m = None
+        return OptState(jnp.zeros((), jnp.int32), m)
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            m = _tree_map(
+                lambda mm, g: momentum * mm + g.astype(jnp.float32), state.inner, grads
+            )
+            upd = _tree_map(lambda mm: -lr_t * mm, m)
+            return upd, OptState(step, m)
+        upd = _tree_map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return upd, OptState(step, None)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class _AdamMoments(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw(
+    lr=3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    moment_dtype=jnp.float32,
+    mask: Optional[Callable[[PyTree], PyTree]] = None,
+) -> Optimizer:
+    """AdamW with optional low-precision moments (bf16 halves optimizer HBM).
+
+    ``mask(params)`` returns a pytree of bools selecting leaves that receive
+    weight decay (default: all leaves with ndim >= 2 — norms/biases excluded).
+    """
+
+    def decay_mask(params):
+        if mask is not None:
+            return mask(params)
+        return _tree_map(lambda p: p.ndim >= 2, params)
+
+    def init(params):
+        mu = _tree_map(lambda p: jnp.zeros_like(p, moment_dtype), params)
+        nu = _tree_map(lambda p: jnp.zeros_like(p, moment_dtype), params)
+        return OptState(jnp.zeros((), jnp.int32), _AdamMoments(mu, nu))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        stepf = step.astype(jnp.float32)
+        bc1 = 1 - b1**stepf
+        bc2 = 1 - b2**stepf
+
+        def upd_moments(mu, nu, g):
+            g32 = g.astype(jnp.float32)
+            mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g32
+            nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g32)
+            return mu32, nu32
+
+        mus, nus = [], []
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_mu = treedef.flatten_up_to(state.inner.mu)
+        flat_nu = treedef.flatten_up_to(state.inner.nu)
+        flat_p = treedef.flatten_up_to(params) if params is not None else [None] * len(flat_g)
+        flat_mask = (
+            treedef.flatten_up_to(decay_mask(params)) if params is not None else [False] * len(flat_g)
+        )
+        upds = []
+        for g, mu, nu, p, dm in zip(flat_g, flat_mu, flat_nu, flat_p, flat_mask):
+            mu32, nu32 = upd_moments(mu, nu, g)
+            u = -lr_t * (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr_t * weight_decay * jnp.where(dm, 1.0, 0.0) * p.astype(jnp.float32)
+            upds.append(u)
+            mus.append(mu32.astype(moment_dtype))
+            nus.append(nu32.astype(moment_dtype))
+        inner = _AdamMoments(
+            treedef.unflatten(mus), treedef.unflatten(nus)
+        )
+        return treedef.unflatten(upds), OptState(step, inner)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; default for grok-1-314b-class models)
+# ---------------------------------------------------------------------------
+
+class _FactorState(NamedTuple):
+    vr: PyTree  # row stats (or full v for <2D leaves)
+    vc: PyTree  # col stats (or None-placeholders)
+
+
+def adafactor(
+    lr=1e-2,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    min_dim_size_to_factor: int = 128,
+) -> Optimizer:
+    """Adafactor (Shazeer & Stern, 2018) without momentum.
+
+    2D+ leaves with both trailing dims >= min_dim_size_to_factor store
+    factored row/col second-moment stats: O(n+m) instead of O(nm) memory.
+    """
+
+    def factored(p):
+        return p.ndim >= 2 and min(p.shape[-2:]) >= min_dim_size_to_factor
+
+    def init(params):
+        def vr_init(p):
+            if factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros_like(p, jnp.float32)
+
+        def vc_init(p):
+            if factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)  # unused placeholder
+
+        return OptState(
+            jnp.zeros((), jnp.int32),
+            _FactorState(_tree_map(vr_init, params), _tree_map(vc_init, params)),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_vr = treedef.flatten_up_to(state.inner.vr)
+        flat_vc = treedef.flatten_up_to(state.inner.vc)
+        upds, vrs, vcs = [], [], []
+        for g, vr, vc in zip(flat_g, flat_vr, flat_vc):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if g.ndim >= 2 and vr.shape == g.shape[:-1]:
+                vr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True) + eps
+                )
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = g32 * rfac[..., None] * cfac[..., None, :]
+            else:
+                vr = beta * vr + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(vr + eps)
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            upds.append(-lr_t * u)
+            vrs.append(vr)
+            vcs.append(vc)
+        inner = _FactorState(treedef.unflatten(vrs), treedef.unflatten(vcs))
+        return treedef.unflatten(upds), OptState(step, inner)
+
+    return Optimizer(init, update)
+
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}

@@ -1,0 +1,144 @@
+"""Train / serve step builders: loss + grad + optimizer update with optional
+microbatch gradient accumulation (``lax.scan``), remat policy inherited from
+the model's scan-over-layers blocks.
+
+Gradient accumulation is also the compute/comm overlap mechanism: with the
+update outside the microbatch scan, XLA overlaps each microbatch's gradient
+reduce-scatter with the next microbatch's compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.training.optimizer import (
+    Optimizer,
+    OptState,
+    adafactor,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+)
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    accum_steps: int = 1
+    max_grad_norm: float = 1.0
+    lr: float = 3e-4
+    compression: Optional[str] = None  # None | "int8" | "topk" (see compression.py)
+    # mesh axes carrying the batch dim; with accumulation the
+    # (B,) -> (accum, B/accum) reshape loses the batch sharding unless it is
+    # re-pinned, and GSPMD then runs every microbatch over the FULL local
+    # batch (4-8x redundant FLOPs — found via the roofline dry-run, see
+    # EXPERIMENTS.md §Perf iteration 1)
+    batch_axes: Optional[Tuple[str, ...]] = None
+    # PartitionSpec pytree matching params: pins the f32 gradient
+    # accumulator to the parameter sharding so the cross-data-axis reduce
+    # happens ONCE per step instead of per microbatch (qwen2-moe: the
+    # accumulator was replicated -> per-microbatch expert-grad all-reduces;
+    # EXPERIMENTS.md §Perf)
+    grad_specs: Optional[Any] = None
+
+
+def make_optimizer(name: str, lr) -> Optimizer:
+    if name == "adafactor":
+        return adafactor(lr=lr)
+    if name == "adamw":
+        return adamw(lr=lr, b2=0.95, weight_decay=0.1, moment_dtype=jnp.bfloat16)
+    raise KeyError(name)
+
+
+def make_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    cfg: TrainStepConfig = TrainStepConfig(),
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With accum_steps > 1, the batch's leading axis is split into
+    (accum, B/accum) microbatches scanned sequentially; gradients are
+    averaged in f32.
+    """
+    compress = None
+    if cfg.compression:
+        from repro.training.compression import COMPRESSORS
+
+        compress = COMPRESSORS[cfg.compression]
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        return loss, metrics, grads
+
+    def train_step(params, opt_state: OptState, batch):
+        if cfg.accum_steps == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            a = cfg.accum_steps
+
+            def split(x):
+                y = x.reshape((a, x.shape[0] // a) + x.shape[1:])
+                if cfg.batch_axes:
+                    from jax.sharding import PartitionSpec as P
+
+                    spec = P(None, cfg.batch_axes, *([None] * (y.ndim - 2)))
+                    y = jax.lax.with_sharding_constraint(y, spec)
+                return y
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def pin_grads(tree):
+                if cfg.grad_specs is None:
+                    return tree
+                return jax.tree_util.tree_map(
+                    lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                    tree,
+                    cfg.grad_specs,
+                )
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                loss, _, grads = grads_of(params, mb)
+                gsum = pin_grads(
+                    jax.tree_util.tree_map(
+                        lambda acc, g: acc + g.astype(jnp.float32), gsum, grads
+                    )
+                )
+                return (gsum, lsum + loss), None
+
+            gzero = pin_grads(
+                jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+            )
+            (gsum, lsum), _ = jax.lax.scan(body, (gzero, 0.0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / a, gsum)
+            loss = lsum / a
+            metrics = {}
+        if compress is not None:
+            grads = compress(grads)
+        grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        out_metrics = {"loss": loss, "grad_norm": gnorm}
+        out_metrics.update({k: v for k, v in (metrics or {}).items()})
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step

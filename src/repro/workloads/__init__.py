@@ -1,0 +1,26 @@
+"""Workload & platform modeling (paper §2.3.1).
+
+JSON schemas mirror SPARS's ``platform.json`` / ``workload.json``; SWF traces
+from the Parallel Workloads Archive are parsed by :mod:`repro.workloads.workload`.
+"""
+from repro.workloads.platform import (
+    PlatformSpec,
+    DEFAULT_PLATFORM,
+    load_platform,
+    make_platform,
+)
+from repro.workloads.workload import Job, Workload, load_workload, parse_swf
+from repro.workloads.generator import generate_workload, PRESETS
+
+__all__ = [
+    "PlatformSpec",
+    "DEFAULT_PLATFORM",
+    "load_platform",
+    "make_platform",
+    "Job",
+    "Workload",
+    "load_workload",
+    "parse_swf",
+    "generate_workload",
+    "PRESETS",
+]

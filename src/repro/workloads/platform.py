@@ -1,0 +1,154 @@
+"""Platform model — the paper's ``platform.json`` (§2.3.1, Table 3).
+
+A platform describes the simulated HPC machine: node count, per-state power
+draw, state-transition delays, and (schema-level) DVFS profiles. The paper's
+illustrative configuration (Table 3) is exposed as :data:`DEFAULT_PLATFORM`:
+
+    active 190 W · idle 190 W · sleep 9 W
+    switch-on  190 W for 30 min · switch-off 9 W for 45 min
+
+DVFS profiles are carried in the schema for forward compatibility (the paper
+models them but does not evaluate them for lack of public traces); the engine
+uses the node's default profile's ``speed`` to scale runtimes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Mapping, Optional
+
+# Node power-state encoding shared by the Python oracle and the JAX engine.
+# Order matters: the engine indexes power/legality tables by these values.
+SLEEP = 0
+SWITCHING_ON = 1
+IDLE = 2
+ACTIVE = 3
+SWITCHING_OFF = 4
+N_STATES = 5
+
+STATE_NAMES = ("sleep", "switching_on", "idle", "active", "switching_off")
+
+
+@dataclasses.dataclass(frozen=True)
+class DvfsProfile:
+    """One DVFS operating point: nominal power (W) and normalized speed."""
+
+    name: str
+    power: float
+    speed: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformSpec:
+    """Hardware description of the simulated machine.
+
+    Attributes mirror the paper's platform JSON: every node shares the same
+    power model in the illustrative setup, so the spec is homogeneous; the
+    JSON loader accepts per-node entries and collapses them when identical.
+    """
+
+    nb_nodes: int
+    power_active: float = 190.0
+    power_idle: float = 190.0
+    power_sleep: float = 9.0
+    power_switch_on: float = 190.0
+    power_switch_off: float = 9.0
+    t_switch_on: int = 30 * 60  # seconds (paper: 30 minutes)
+    t_switch_off: int = 45 * 60  # seconds (paper: 45 minutes)
+    compute_speed: float = 1.0
+    dvfs_profiles: tuple = ()
+    dvfs_mode: Optional[str] = None
+
+    def power_table(self):
+        """Per-state power draw indexed by the state encoding above."""
+        return (
+            self.power_sleep,
+            self.power_switch_on,
+            self.power_idle,
+            self.power_active,
+            self.power_switch_off,
+        )
+
+    def speed(self) -> float:
+        if self.dvfs_mode:
+            for p in self.dvfs_profiles:
+                if p.name == self.dvfs_mode:
+                    return p.speed
+        return self.compute_speed
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "nb_nodes": self.nb_nodes,
+            "compute_speed": self.compute_speed,
+            "dvfs_mode": self.dvfs_mode,
+            "dvfs_profiles": [dataclasses.asdict(p) for p in self.dvfs_profiles],
+            "states": {
+                "sleep": {"power": self.power_sleep},
+                "idle": {"power": self.power_idle},
+                "active": {"power": self.power_active},
+                "switching_on": {
+                    "power": self.power_switch_on,
+                    "transition_time": self.t_switch_on,
+                },
+                "switching_off": {
+                    "power": self.power_switch_off,
+                    "transition_time": self.t_switch_off,
+                },
+            },
+            "transitions": [
+                {"from": "sleep", "to": "switching_on"},
+                {"from": "switching_on", "to": "idle"},
+                {"from": "idle", "to": "active"},
+                {"from": "active", "to": "idle"},
+                {"from": "idle", "to": "switching_off"},
+                {"from": "switching_off", "to": "sleep"},
+            ],
+        }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2)
+
+
+def make_platform(nb_nodes: int, **kw) -> PlatformSpec:
+    return PlatformSpec(nb_nodes=nb_nodes, **kw)
+
+
+def _from_json(obj: Mapping[str, Any]) -> PlatformSpec:
+    states = obj.get("states", {})
+
+    def p(name, default):
+        return float(states.get(name, {}).get("power", default))
+
+    def t(name, default):
+        return int(states.get(name, {}).get("transition_time", default))
+
+    profiles = tuple(
+        DvfsProfile(d["name"], float(d["power"]), float(d.get("speed", 1.0)))
+        for d in obj.get("dvfs_profiles", [])
+    )
+    return PlatformSpec(
+        nb_nodes=int(obj["nb_nodes"]),
+        power_active=p("active", 190.0),
+        power_idle=p("idle", p("active", 190.0)),
+        power_sleep=p("sleep", 9.0),
+        power_switch_on=p("switching_on", 190.0),
+        power_switch_off=p("switching_off", 9.0),
+        t_switch_on=t("switching_on", 1800),
+        t_switch_off=t("switching_off", 2700),
+        compute_speed=float(obj.get("compute_speed", 1.0)),
+        dvfs_profiles=profiles,
+        dvfs_mode=obj.get("dvfs_mode"),
+    )
+
+
+def load_platform(path_or_obj) -> PlatformSpec:
+    """Load a platform from a JSON file path or a parsed dict."""
+    if isinstance(path_or_obj, Mapping):
+        return _from_json(path_or_obj)
+    with open(path_or_obj) as f:
+        return _from_json(json.load(f))
+
+
+# Paper Table 3 (power model); node count chosen per workload trace.
+DEFAULT_PLATFORM = PlatformSpec(nb_nodes=128)

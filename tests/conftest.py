@@ -1,0 +1,50 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+host's real (single) device; multi-device tests spawn subprocesses that set
+``--xla_force_host_platform_device_count`` before importing jax."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture(scope="session")
+def repo_root():
+    return REPO
+
+
+def run_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run python code in a clean subprocess with N fake devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+        cwd=REPO,
+    )
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={res.returncode})\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+        )
+    return res.stdout
+
+
+@pytest.fixture(scope="session")
+def small_platform():
+    from repro.workloads.platform import PlatformSpec
+
+    return PlatformSpec(nb_nodes=16)
+
+
+@pytest.fixture(scope="session")
+def small_workload():
+    from repro.workloads.generator import GeneratorConfig, generate_workload
+
+    return generate_workload(GeneratorConfig(n_jobs=80, nb_res=16, seed=7))

@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward/train step on CPU, output shapes + no NaNs,
+plus prefill+decode consistency with the no-cache forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.models import build_model
+from repro.training.train_step import TrainStepConfig, make_optimizer, make_train_step
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.n_image_embeds:
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_image_embeds, cfg.d_model)), cfg.dtype
+        )
+    if cfg.encoder_layers:
+        batch["encoder_frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_seq, cfg.d_model)), cfg.dtype
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_arch(arch)
+    spec = {
+        "zamba2-2.7b": dict(n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, d_ff=10240, vocab_size=32000, ssm_state=64),
+        "glm4-9b": dict(n_layers=40, d_model=4096, n_heads=32, n_kv_heads=2, d_ff=13696, vocab_size=151552),
+        "qwen3-14b": dict(n_layers=40, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=17408, vocab_size=151936, qk_norm=True),
+        "stablelm-3b": dict(n_layers=32, d_model=2560, n_heads=32, n_kv_heads=32, d_ff=6912, vocab_size=50304),
+        "internlm2-1.8b": dict(n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8, d_ff=8192, vocab_size=92544),
+        "xlstm-350m": dict(n_layers=24, d_model=1024, n_heads=4, vocab_size=50304),
+        "qwen2-moe-a2.7b": dict(n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16, vocab_size=151936, n_experts=60, top_k=4, expert_d_ff=1408, n_shared_experts=4),
+        "grok-1-314b": dict(n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=32768, vocab_size=131072, n_experts=8, top_k=2),
+        "internvl2-26b": dict(n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=16384, vocab_size=92553),
+        "whisper-tiny": dict(n_layers=4, d_model=384, n_heads=6, n_kv_heads=6, d_ff=1536, vocab_size=51865, encoder_layers=4),
+    }[arch]
+    for k, v in spec.items():
+        assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_arch(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    opt = make_optimizer(cfg.optimizer, 1e-3)
+    step = jax.jit(make_train_step(model, opt, TrainStepConfig()))
+    p2, o2, metrics = step(params, opt.init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    diff = sum(
+        float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2))
+    )
+    assert diff > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes(arch):
+    cfg = get_arch(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """Greedy continuation via (prefill, decode) == slicing full forward."""
+    cfg = get_arch(arch, reduced=True)
+    if cfg.n_experts:
+        # ample capacity: token-drop patterns depend on sequence length, so
+        # dropping must be disabled to compare cached vs uncached paths
+        cfg = cfg.replace(capacity_factor=16.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 24
+    batch = make_batch(cfg, b=b, s=s, seed=3)
+
+    logits_full, _ = jax.jit(model.forward)(params, batch)
+    last_full = logits_full[:, -1]
+
+    logits_pre, cache = jax.jit(
+        lambda p, bt: model.prefill(p, bt, cache_len=s + 8)
+    )(params, batch)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre[:, -1]), np.asarray(last_full), atol=2e-2, rtol=2e-2
+    )
+
+    # decode one token and compare against forward on the extended sequence
+    tok = jnp.argmax(last_full, -1).astype(jnp.int32)[:, None]
+    logits_dec, cache = jax.jit(model.decode_step)(
+        params, tok, cache, jnp.asarray(s, jnp.int32)
+    )
+    ext = dict(batch)
+    ext["tokens"] = jnp.concatenate([batch["tokens"], tok], 1)
+    logits_ext, _ = jax.jit(model.forward)(params, ext)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0]),
+        np.asarray(logits_ext[:, -1]),
+        atol=3e-2,
+        rtol=3e-2,
+    )
+
+
+def test_long_500k_applicability_flags():
+    """DESIGN.md §Arch-applicability: exactly the sub-quadratic archs run."""
+    from repro.launch.shapes import SHAPE_SETS, applicable
+
+    runs = {
+        a: applicable(get_arch(a), SHAPE_SETS["long_500k"])[0] for a in ARCHS
+    }
+    assert runs == {
+        "zamba2-2.7b": True,
+        "xlstm-350m": True,
+        "glm4-9b": False,
+        "qwen3-14b": False,
+        "stablelm-3b": False,
+        "internlm2-1.8b": False,
+        "internvl2-26b": False,
+        "whisper-tiny": False,
+        "qwen2-moe-a2.7b": False,
+        "grok-1-314b": False,
+    }

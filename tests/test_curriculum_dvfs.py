@@ -1,0 +1,101 @@
+"""Curriculum learning (paper ref [7] analogue) + DVFS speed semantics."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.metrics import metrics_from_state, schedule_table
+from repro.core.ref.pydes import run_pydes
+from repro.core.rl.curriculum import default_curriculum, train_a2c_curriculum
+from repro.core.rl.env import EnvConfig
+from repro.core.rl.a2c import A2CConfig
+from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+from repro.workloads.generator import GeneratorConfig, generate_workload
+from repro.workloads.platform import DvfsProfile, PlatformSpec
+
+
+# ------------------------------------------------------------------ DVFS
+
+def dvfs_platform(speed):
+    return PlatformSpec(
+        nb_nodes=8,
+        t_switch_on=60,
+        t_switch_off=90,
+        dvfs_profiles=(
+            DvfsProfile("eco", power=120.0, speed=0.5),
+            DvfsProfile("turbo", power=250.0, speed=2.0),
+        ),
+        dvfs_mode={0.5: "eco", 2.0: "turbo", 1.0: None}[speed],
+    )
+
+
+@pytest.mark.parametrize("speed", [0.5, 2.0])
+def test_dvfs_speed_scales_runtimes_and_keeps_parity(speed):
+    wl = generate_workload(GeneratorConfig(n_jobs=40, nb_res=8, seed=3))
+    cfg = EngineConfig(
+        base=BasePolicy.EASY, psm=PSMVariant.PSUS, timeout=120,
+        terminate_overrun=True,
+    )
+    plat = dvfs_platform(speed)
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+    # both engines agree under DVFS scaling
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, plat.power_active)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+
+    # realized runtimes actually scaled: makespan orders with 1/speed
+    base = engine.simulate(dvfs_platform(1.0), wl, cfg)
+    mb = metrics_from_state(base, 190.0)
+    if speed < 1.0:
+        assert m.makespan_s > mb.makespan_s
+    else:
+        assert m.makespan_s < mb.makespan_s
+
+
+def test_dvfs_turbo_increases_terminations_less():
+    """turbo (speed 2) finishes jobs within walltime that overran at eco."""
+    wl = generate_workload(
+        GeneratorConfig(n_jobs=60, nb_res=8, seed=9, overrun_prob=0.0,
+                        overreq_factor=1.3)
+    )
+    cfg = EngineConfig(base=BasePolicy.EASY, psm=PSMVariant.PSUS,
+                       terminate_overrun=True)
+    m_eco = metrics_from_state(
+        engine.simulate(dvfs_platform(0.5), wl, cfg), 120.0
+    )
+    m_turbo = metrics_from_state(
+        engine.simulate(dvfs_platform(2.0), wl, cfg), 250.0
+    )
+    assert m_turbo.n_terminated <= m_eco.n_terminated
+
+
+# ------------------------------------------------------------ curriculum
+
+def test_curriculum_stages_ramp_and_train():
+    plat = PlatformSpec(nb_nodes=16, t_switch_on=120, t_switch_off=180)
+    target = GeneratorConfig(n_jobs=16, nb_res=16, mean_interarrival=300.0, seed=0)
+    stages = default_curriculum(target, n_stages=3, updates_per_stage=2)
+    assert len(stages) == 3
+    inter = [s[0].mean_interarrival for s in stages]
+    assert inter[0] > inter[1] > inter[2]
+    assert inter[-1] == pytest.approx(300.0)
+
+    ecfg = EnvConfig(
+        engine=EngineConfig(
+            psm=PSMVariant.RL, base=BasePolicy.EASY, rl_decision_interval=600
+        ),
+        max_steps=32,
+    )
+    acfg = A2CConfig(n_envs=4, n_steps=4, n_updates=2)
+    params, history = train_a2c_curriculum(plat, ecfg, stages, acfg)
+    assert len(history) == 6  # 3 stages x 2 updates
+    assert [h["stage"] for h in history] == [0, 0, 1, 1, 2, 2]
+    assert all(np.isfinite(h["loss"]) for h in history)
+    # params exist and are finite
+    assert all(
+        np.isfinite(np.asarray(x)).all()
+        for x in jax.tree_util.tree_leaves(params)
+    )

@@ -1,0 +1,96 @@
+"""JAX engine vs sequential Python oracle: exact schedule parity and
+energy agreement across all six paper schedulers (paper §3.1 validation —
+the Batsim comparison analogue, here with a bit-exact semantic oracle)."""
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.metrics import metrics_from_state, schedule_table
+from repro.core.ref.pydes import run_pydes
+from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+from repro.workloads.generator import GeneratorConfig, generate_workload
+from repro.workloads.platform import PlatformSpec
+
+SCHEDULERS = [
+    (base, psm)
+    for base in (BasePolicy.FCFS, BasePolicy.EASY)
+    for psm in (PSMVariant.PSUS, PSMVariant.PSAS, PSMVariant.PSAS_IPM)
+]
+
+
+@pytest.mark.parametrize("base,psm", SCHEDULERS)
+@pytest.mark.parametrize("seed", [0, 3])
+def test_schedule_parity(base, psm, seed):
+    plat = PlatformSpec(nb_nodes=16)
+    wl = generate_workload(
+        GeneratorConfig(n_jobs=100, nb_res=16, seed=seed, overrun_prob=0.2)
+    )
+    cfg = EngineConfig(base=base, psm=psm, timeout=300, terminate_overrun=True)
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+
+    # exact schedule equality (same tie-breaking rules on both engines)
+    tab_jax = schedule_table(s)
+    tab_ref = des.schedule_table()
+    np.testing.assert_array_equal(tab_jax, tab_ref)
+
+    # energy: f32 Kahan vs f64 oracle
+    m_jax = metrics_from_state(s, plat.power_active)
+    assert m_jax.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+    assert m_jax.wasted_energy_j == pytest.approx(m_ref.wasted_energy_j, rel=1e-5)
+    assert m_jax.mean_wait_s == pytest.approx(m_ref.mean_wait_s, rel=1e-6, abs=1e-6)
+    assert m_jax.makespan_s == m_ref.makespan_s
+    assert m_jax.n_terminated == m_ref.n_terminated
+
+
+@pytest.mark.parametrize("timeout", [60, 900, None])
+def test_timeout_sweep_parity(timeout):
+    plat = PlatformSpec(nb_nodes=32)
+    wl = generate_workload(GeneratorConfig(n_jobs=60, nb_res=32, seed=11))
+    cfg = EngineConfig(
+        base=BasePolicy.EASY, psm=PSMVariant.PSAS_IPM, timeout=timeout
+    )
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, plat.power_active)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+
+
+def test_always_on_baseline():
+    """PSM=NONE: nodes never sleep; energy = N * P * makespan-ish."""
+    plat = PlatformSpec(nb_nodes=8)
+    wl = generate_workload(GeneratorConfig(n_jobs=30, nb_res=8, seed=5))
+    cfg = EngineConfig(base=BasePolicy.EASY, psm=PSMVariant.NONE)
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+    m = metrics_from_state(s, plat.power_active)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+    # never any sleep or transition energy
+    assert m.energy_by_state_j[0] == 0.0
+    assert m.energy_by_state_j[1] == 0.0
+    assert m.energy_by_state_j[4] == 0.0
+
+
+def test_vmapped_timeout_sweep_matches_scalar():
+    """One compiled program sweeping timeouts == per-timeout runs."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    plat = PlatformSpec(nb_nodes=16)
+    wl = generate_workload(GeneratorConfig(n_jobs=50, nb_res=16, seed=2))
+    cfg = EngineConfig(base=BasePolicy.EASY, psm=PSMVariant.PSUS, timeout=300)
+    s0 = engine.init_state(plat, wl, cfg)
+    const = engine.make_const(plat, cfg)
+    timeouts = jnp.asarray([60, 300, 1800], jnp.int32)
+    consts = jax.vmap(lambda t: const._replace(timeout=t))(timeouts)
+    batched = jax.vmap(lambda c: engine.run_sim(s0, c, cfg))(consts)
+    for i, t in enumerate([60, 300, 1800]):
+        single = engine.simulate(
+            plat, wl, EngineConfig(base=cfg.base, psm=cfg.psm, timeout=t)
+        )
+        np.testing.assert_allclose(
+            np.asarray(batched.energy[i]), np.asarray(single.energy), rtol=1e-6
+        )

@@ -1,0 +1,158 @@
+"""Hypothesis property tests on the engine's invariants (DESIGN.md §6)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine
+from repro.core.metrics import metrics_from_state, np_state
+from repro.core.ref.pydes import run_pydes
+from repro.core.types import (
+    ACTIVE,
+    DONE,
+    BasePolicy,
+    EngineConfig,
+    PSMVariant,
+)
+from repro.workloads.platform import PlatformSpec
+from repro.workloads.workload import workload_from_arrays
+
+# -- strategies --------------------------------------------------------------
+
+N_NODES = 8
+
+
+@st.composite
+def workloads(draw, max_jobs=18):
+    n = draw(st.integers(1, max_jobs))
+    res = draw(
+        st.lists(st.integers(1, N_NODES), min_size=n, max_size=n)
+    )
+    subtime = draw(
+        st.lists(st.integers(0, 5000), min_size=n, max_size=n)
+    )
+    runtime = draw(st.lists(st.integers(1, 4000), min_size=n, max_size=n))
+    over = draw(st.lists(st.integers(-50, 300), min_size=n, max_size=n))
+    reqtime = [max(1, r + o) for r, o in zip(runtime, over)]
+    return workload_from_arrays(
+        res, sorted(subtime), runtime, reqtime, nb_res=N_NODES
+    )
+
+
+@st.composite
+def configs(draw):
+    return EngineConfig(
+        base=draw(st.sampled_from([BasePolicy.FCFS, BasePolicy.EASY])),
+        psm=draw(
+            st.sampled_from(
+                [PSMVariant.PSUS, PSMVariant.PSAS, PSMVariant.PSAS_IPM]
+            )
+        ),
+        timeout=draw(st.sampled_from([None, 30, 600])),
+        terminate_overrun=draw(st.booleans()),
+    )
+
+
+PLAT = PlatformSpec(nb_nodes=N_NODES, t_switch_on=120, t_switch_off=180)
+
+
+# -- properties ---------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(wl=workloads(), cfg=configs())
+def test_engine_invariants(wl, cfg):
+    s = engine.simulate(PLAT, wl, cfg)
+    d = np_state(s)
+    exists = d["job_exists"]
+
+    # every real job completed
+    assert (d["job_status"][exists] == DONE).all()
+
+    # no job started before submission
+    started = d["job_start"] >= 0
+    assert (d["job_start"][started & exists] >= d["job_subtime"][started & exists]).all()
+
+    # finish = start + effective runtime
+    np.testing.assert_array_equal(
+        d["job_finish"][exists & started],
+        d["job_start"][exists & started] + d["job_eff"][exists & started],
+    )
+
+    # terminate-overrun semantics
+    if cfg.terminate_overrun:
+        assert (d["job_eff"][exists] <= d["job_reqtime"][exists]).all()
+    else:
+        np.testing.assert_array_equal(
+            d["job_eff"][exists],
+            np.minimum(d["job_eff"][exists], d["job_eff"][exists]),
+        )
+
+    # energy bookkeeping: total = sum of per-state energies, all >= 0
+    m = metrics_from_state(s, PLAT.power_active)
+    assert m.total_energy_j >= 0
+    assert m.total_energy_j == pytest_approx(sum(m.energy_by_state_j))
+    assert m.wasted_energy_j <= m.total_energy_j + 1e-6
+
+    # ACTIVE energy == power_active * sum(job runtimes * res)
+    node_seconds = float(
+        np.sum(d["job_eff"][exists & started] * d["job_res"][exists & started])
+    )
+    active_j = m.energy_by_state_j[ACTIVE]
+    assert active_j == pytest_approx(PLAT.power_active * node_seconds, rel=1e-4)
+
+    # all nodes released at the end
+    assert (d["node_job"] == -1).all()
+
+
+def pytest_approx(x, rel=1e-5):
+    import pytest
+
+    return pytest.approx(x, rel=rel, abs=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(wl=workloads(max_jobs=14), cfg=configs())
+def test_property_parity_with_oracle(wl, cfg):
+    """Random workloads: JAX engine == Python oracle, schedules and energy."""
+    from repro.core.metrics import schedule_table
+
+    s = engine.simulate(PLAT, wl, cfg)
+    m_ref, des = run_pydes(PLAT, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, PLAT.power_active)
+    assert m.total_energy_j == pytest_approx(m_ref.total_energy_j)
+
+
+@settings(max_examples=15, deadline=None)
+@given(wl=workloads(max_jobs=10))
+def test_no_double_allocation_trace(wl):
+    """Step the engine manually; at every batch a node belongs to <= 1 job
+    and RUNNING jobs hold exactly res nodes."""
+    import jax
+
+    cfg = EngineConfig(base=BasePolicy.EASY, psm=PSMVariant.PSAS_IPM, timeout=60)
+    s = engine.init_state(PLAT, wl, cfg)
+    const = engine.make_const(PLAT, cfg)
+    step = jax.jit(
+        lambda s: engine.process_batch(
+            engine.accrue_energy(s, engine.next_time(s, const, cfg), const)._replace(
+                t=engine.next_time(s, const, cfg)
+            ),
+            const,
+            cfg,
+        )
+    )
+    s = engine.process_batch(s, const, cfg)
+    for _ in range(200):
+        d = np_state(s)
+        nj = d["node_job"]
+        held = nj[nj >= 0]
+        # a node maps to one job by construction; check job->node counts
+        running = np.nonzero((d["job_status"] == 2) & d["job_exists"])[0]
+        for j in running:
+            assert (nj == j).sum() == d["job_res"][j]
+        if (d["job_status"][d["job_exists"]] == DONE).all():
+            break
+        nt = engine.next_time(s, const, cfg)
+        if int(nt) >= int(2**30):
+            break
+        s = step(s)

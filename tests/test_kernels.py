@@ -1,0 +1,158 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dt):
+    return dict(atol=3e-2, rtol=3e-2) if dt == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------- flash attn
+
+FLASH_CASES = [
+    # b, sq, sk, h, kh, hd, causal
+    (1, 128, 128, 2, 2, 64, True),
+    (2, 256, 256, 4, 2, 64, True),
+    (1, 256, 256, 8, 1, 128, True),   # MQA
+    (2, 128, 384, 4, 4, 64, False),   # cross-ish, sk > sq
+    (1, 384, 256, 2, 2, 128, True),   # sq > sk
+    (1, 128, 320, 4, 2, 64, True),    # sk not a block multiple (tail pad)
+]
+
+
+@pytest.mark.parametrize("b,sq,sk,h,kh,hd,causal", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_reference(b, sq, sk, h, kh, hd, causal, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, sq, h, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, sk, kh, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, sk, kh, hd)), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_attention_matches_xla_twin():
+    """Kernel == the model stack's chunked-XLA implementation."""
+    from repro.models.layers import attention_chunked
+
+    q = jnp.asarray(RNG.normal(size=(2, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 256, 2, 64)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    twin = attention_chunked(q, k, v, causal=True, chunk=128)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(twin), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_flash_attention_grad_path_falls_back():
+    """Ragged shapes route to the reference (wrapper contract)."""
+    q = jnp.asarray(RNG.normal(size=(1, 100, 2, 64)), jnp.float32)  # 100 % 128 != 0
+    k = jnp.asarray(RNG.normal(size=(1, 100, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 100, 2, 64)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# ------------------------------------------------------------------ ssd scan
+
+SSD_CASES = [
+    # b, s, h, dk, dv, chunk
+    (1, 128, 1, 32, 32, 32),
+    (2, 256, 2, 64, 64, 64),
+    (1, 256, 4, 32, 128, 128),
+    (2, 128, 2, 128, 64, 128),  # chunk == S
+]
+
+
+@pytest.mark.parametrize("b,s,h,dk,dv,chunk", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_reference(b, s, h, dk, dv, chunk, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, s, h, dk)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, s, h, dk)) * 0.3, dtype)
+    v = jnp.asarray(RNG.normal(size=(b, s, h, dv)), dtype)
+    g = jnp.asarray(-np.abs(RNG.normal(size=(b, s, h)) * 0.05), jnp.float32)
+    y, hT = ops.ssd_scan(q, k, v, g, chunk=chunk, interpret=True)
+    y_ref, hT_ref = ref.gla_reference(q, k, v, g)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32), **_tol(dtype)
+    )
+    np.testing.assert_allclose(
+        np.asarray(hT), np.asarray(hT_ref), atol=1e-4, rtol=1e-3
+    )
+
+
+def test_ssd_scan_matches_xla_twin():
+    from repro.models.ssm import chunked_gla
+
+    q = jnp.asarray(RNG.normal(size=(2, 256, 2, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 256, 2, 32)) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 256, 2, 64)), jnp.float32)
+    g = jnp.asarray(-np.abs(RNG.normal(size=(2, 256, 2)) * 0.05), jnp.float32)
+    y, hT = ops.ssd_scan(q, k, v, g, chunk=64, interpret=True)
+    y_twin, hT_twin = chunked_gla(q, k, v, g, chunk=64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_twin), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_twin), atol=1e-5, rtol=1e-5)
+
+
+def test_ssd_scan_decay_extremes():
+    """g = 0 (no decay: running sum) and strongly negative (memoryless)."""
+    b, s, h, dk, dv = 1, 128, 1, 16, 16
+    q = jnp.ones((b, s, h, dk), jnp.float32) * 0.1
+    k = jnp.ones((b, s, h, dk), jnp.float32) * 0.1
+    v = jnp.asarray(RNG.normal(size=(b, s, h, dv)), jnp.float32)
+    for gval in (0.0, -30.0):
+        g = jnp.full((b, s, h), gval, jnp.float32)
+        y, _ = ops.ssd_scan(q, k, v, g, chunk=32, interpret=True)
+        y_ref, _ = ref.gla_reference(q, k, v, g)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+
+
+# ---------------------------------------------------------------- event fuse
+
+@pytest.mark.parametrize("e,n", [(1, 16), (8, 64), (37, 200), (64, 128)])
+def test_event_fuse_matches_reference(e, n):
+    state = jnp.asarray(RNG.integers(0, 5, (e, n)), jnp.int32)
+    until = jnp.asarray(RNG.integers(0, 100000, (e, n)), jnp.int32)
+    t = jnp.asarray(RNG.integers(0, 50000, (e,)), jnp.int32)
+    power = jnp.asarray([9.0, 190.0, 190.0, 190.0, 9.0], jnp.float32)
+    d, nx = ops.event_fuse(state, until, t, power, interpret=True)
+    d_ref, nx_ref = ref.event_fuse_reference(state, until, t, power)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_ref), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(nx), np.asarray(nx_ref))
+
+
+def test_event_fuse_matches_engine_semantics():
+    """Kernel semantics == engine.next_time's transition term + power draw."""
+    from repro.core import engine
+    from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+    from repro.workloads.generator import GeneratorConfig, generate_workload
+    from repro.workloads.platform import PlatformSpec
+
+    plat = PlatformSpec(nb_nodes=32)
+    wl = generate_workload(GeneratorConfig(n_jobs=20, nb_res=32, seed=9))
+    cfg = EngineConfig(base=BasePolicy.EASY, psm=PSMVariant.PSUS, timeout=60)
+    const = engine.make_const(plat, cfg)
+    s = engine.init_state(plat, wl, cfg)
+    s = engine.process_batch(s, const, cfg)
+    # advance a few batches to populate transitions
+    for _ in range(10):
+        nt = engine.next_time(s, const, cfg)
+        if int(nt) >= 2**30:
+            break
+        s = engine.process_batch(s._replace(t=nt), const, cfg)
+    d, nx = ops.event_fuse(
+        s.node_state[None], s.node_until[None], s.t[None], const.power,
+        interpret=True,
+    )
+    want_draw = float(jnp.sum(const.power[s.node_state]))
+    assert float(d[0]) == pytest.approx(want_draw, rel=1e-6)

@@ -1,0 +1,79 @@
+"""The paper's runner.py analogue: config-file-driven simulation runs."""
+import json
+import os
+
+import pytest
+
+from repro.launch.sim import SCHEDULERS, _load_mini_yaml, run
+
+
+def test_yaml_subset_parser(tmp_path):
+    p = tmp_path / "cfg.yaml"
+    p.write_text(
+        "workload: preset:fig3_small\n"
+        "platform: 16\n"
+        "scheduler: EASY PSUS\n"
+        "timeout: 50   # comment\n"
+        "terminate_overrun: true\n"
+        "gantt: false\n"
+        "out: out/x\n"
+    )
+    cfg = _load_mini_yaml(str(p))
+    assert cfg["platform"] == 16
+    assert cfg["timeout"] == 50
+    assert cfg["terminate_overrun"] is True
+    assert cfg["gantt"] is False
+    assert cfg["scheduler"] == "EASY PSUS"
+
+
+def test_run_writes_outputs(tmp_path):
+    out = str(tmp_path / "run")
+    res = run(
+        {
+            "workload": "preset:fig3_small",
+            "platform": 16,
+            "scheduler": "EASY PSUS",
+            "timeout": 50,
+            "terminate_overrun": True,
+            "out": out,
+        }
+    )
+    assert res["n_jobs"] == 200
+    assert os.path.exists(os.path.join(out, "metrics.json"))
+    assert os.path.exists(os.path.join(out, "jobs.csv"))
+    assert os.path.exists(os.path.join(out, "gantt.csv"))
+    with open(os.path.join(out, "jobs.csv")) as f:
+        lines = f.read().strip().splitlines()
+    assert len(lines) == 201  # header + 200 jobs
+
+
+def test_all_schedulers_resolvable(tmp_path):
+    for name in SCHEDULERS:
+        res = run(
+            {
+                "workload": "preset:fig3_small",
+                "platform": 16,
+                "scheduler": name,
+                "timeout": 300,
+                "gantt": False,
+                "out": str(tmp_path / name.replace(" ", "_")),
+            }
+        )
+        assert res["total_energy_kwh"] > 0, name
+
+
+def test_job_profiles_workload():
+    from repro.configs.job_profiles import build_profiles, profile_workload
+
+    profs = build_profiles()
+    # every applicable (arch x shape) cell present: 40 - 8 skips = 32
+    assert len(profs) == 32
+    names = {p.name for p in profs}
+    assert "zamba2-2.7b:long_500k" in names
+    assert "glm4-9b:long_500k" not in names
+    wl = profile_workload(n_jobs=50, nb_nodes=128, seed=1)
+    assert len(wl) == 50
+    for j in wl.jobs:
+        assert 1 <= j.res <= 128
+        assert j.runtime >= 60
+        assert j.reqtime >= j.runtime

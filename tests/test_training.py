@@ -1,0 +1,262 @@
+"""Training substrate: optimizers, schedules, accumulation-equivalence,
+compression, stragglers, elastic batch planning, data determinism."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training.compression import (
+    COMPRESSORS,
+    error_feedback_apply,
+    error_feedback_init,
+    int8_compress,
+    topk_compress,
+)
+from repro.training.elastic import plan_batch, shrink_env_axis, grow_env_axis
+from repro.training.optimizer import (
+    adafactor,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    sgd,
+)
+from repro.training.stragglers import StepWatchdog, WatchdogConfig, attribute
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------------ optimizer
+
+def quadratic_loss(params):
+    return sum(
+        jnp.sum(jnp.square(x)) for x in jax.tree_util.tree_leaves(params)
+    )
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(lr=0.1, momentum=0.9),
+    lambda: adamw(lr=0.1),
+    lambda: adafactor(lr=0.5),
+])
+def test_optimizers_descend_quadratic(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.asarray(RNG.normal(size=(16, 16)) * 2, jnp.float32)}
+    state = opt.init(params)
+    l0 = float(quadratic_loss(params))
+    for _ in range(60):
+        grads = jax.grad(quadratic_loss)(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(quadratic_loss(params)) < 0.2 * l0
+
+
+def test_adamw_bf16_moments_track_f32():
+    params = {"w": jnp.asarray(RNG.normal(size=(64,)), jnp.float32)}
+    g = {"w": jnp.asarray(RNG.normal(size=(64,)), jnp.float32)}
+    o32 = adamw(lr=1e-2, moment_dtype=jnp.float32)
+    o16 = adamw(lr=1e-2, moment_dtype=jnp.bfloat16)
+    s32, s16 = o32.init(params), o16.init(params)
+    u32, _ = o32.update(g, s32, params)
+    u16, _ = o16.update(g, s16, params)
+    np.testing.assert_allclose(
+        np.asarray(u32["w"]), np.asarray(u16["w"]), rtol=2e-2, atol=2e-3
+    )
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(90 + 160), rel=1e-6)
+    _, n2 = clip_by_global_norm(clipped, 1e9)
+    assert float(n2) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_cosine_schedule_shape():
+    f = cosine_schedule(1.0, warmup_steps=10, total_steps=100, min_ratio=0.1)
+    assert float(f(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(f(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(f(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_grad_accumulation_equivalence():
+    """accum=4 over batch 8 == accum=1, same update (f32 grads averaged)."""
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.training.train_step import (
+        TrainStepConfig,
+        make_optimizer,
+        make_train_step,
+    )
+
+    cfg = get_arch("internlm2-1.8b", reduced=True).replace(remat=False)
+    model = build_model(cfg)
+    opt = make_optimizer("adamw", 1e-3)
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (8, 32)), jnp.int32)
+    }
+    p0 = model.init(jax.random.PRNGKey(0))
+    s1 = jax.jit(make_train_step(model, opt, TrainStepConfig(accum_steps=1)))
+    s4 = jax.jit(make_train_step(model, opt, TrainStepConfig(accum_steps=4)))
+    p1, _, m1 = s1(p0, opt.init(p0), batch)
+    p4, _, m4 = s4(p0, opt.init(p0), batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p4)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=5e-3, rtol=5e-3,
+        )
+
+
+# ---------------------------------------------------------------- compression
+
+def test_int8_compression_error_bounded():
+    g = {"w": jnp.asarray(RNG.normal(size=(128, 128)), jnp.float32)}
+    gq = int8_compress(g)
+    rel = float(
+        jnp.linalg.norm(gq["w"] - g["w"]) / jnp.linalg.norm(g["w"])
+    )
+    assert rel < 0.02
+
+
+def test_topk_keeps_largest():
+    g = {"w": jnp.asarray(RNG.normal(size=(64, 64)), jnp.float32)}
+    gs = topk_compress(g, fraction=0.1)
+    nz = int(jnp.sum(gs["w"] != 0))
+    assert abs(nz - int(0.1 * 64 * 64)) <= 64  # ties at threshold
+    kept_min = float(jnp.min(jnp.abs(gs["w"][gs["w"] != 0])))
+    dropped_max = float(jnp.max(jnp.abs(jnp.where(gs["w"] == 0, g["w"], 0))))
+    assert kept_min >= dropped_max - 1e-6
+
+
+def test_error_feedback_is_lossless_over_time():
+    """Sum of sent + final residual == sum of true gradients."""
+    g_total = jnp.zeros((32, 32), jnp.float32)
+    sent_total = jnp.zeros((32, 32), jnp.float32)
+    st = error_feedback_init({"w": g_total})
+    comp = functools.partial(topk_compress, fraction=0.05)
+    for i in range(10):
+        g = {"w": jnp.asarray(RNG.normal(size=(32, 32)), jnp.float32)}
+        g_total = g_total + g["w"]
+        sent, st = error_feedback_apply(st, g, comp)
+        sent_total = sent_total + sent["w"]
+    np.testing.assert_allclose(
+        np.asarray(sent_total + st.residual["w"]),
+        np.asarray(g_total),
+        atol=1e-4,
+    )
+
+
+def test_compression_in_train_step_smoke():
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.training.train_step import (
+        TrainStepConfig,
+        make_optimizer,
+        make_train_step,
+    )
+
+    cfg = get_arch("internlm2-1.8b", reduced=True)
+    model = build_model(cfg)
+    opt = make_optimizer("adamw", 1e-3)
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32)}
+    p0 = model.init(jax.random.PRNGKey(0))
+    for name in COMPRESSORS:
+        step = jax.jit(
+            make_train_step(model, opt, TrainStepConfig(compression=name))
+        )
+        _, _, m = step(p0, opt.init(p0), batch)
+        assert np.isfinite(float(m["loss"]))
+
+
+# ------------------------------------------------------------------ watchdog
+
+def test_watchdog_fires_on_sustained_slowdown():
+    clock = {"t": 0.0}
+    times = [1.0] * 10 + [5.0] * 5  # sustained 5x slowdown
+    it = iter(times)
+    fired = []
+
+    def fake_clock():
+        return clock["t"]
+
+    wd = StepWatchdog(
+        WatchdogConfig(threshold=2.0, patience=3, warmup_steps=2),
+        on_straggler=lambda s, dt, base: fired.append(s),
+        clock=fake_clock,
+    )
+    for dt in times:
+        wd.start()
+        clock["t"] += dt
+        wd.stop()
+    assert wd.fired >= 1
+    assert fired  # callback invoked
+
+
+def test_watchdog_tolerates_transients():
+    clock = {"t": 0.0}
+    wd = StepWatchdog(
+        WatchdogConfig(threshold=2.0, patience=3, warmup_steps=1),
+        clock=lambda: clock["t"],
+    )
+    pattern = [1.0, 1.0, 6.0, 1.0, 1.0, 6.0, 1.0]  # isolated spikes
+    for dt in pattern:
+        wd.start()
+        clock["t"] += dt
+        wd.stop()
+    assert wd.fired == 0
+
+
+def test_attribute_stragglers():
+    times = np.asarray([1.0, 1.1, 0.9, 1.0, 3.5, 1.05])
+    idx, med = attribute(times)
+    assert idx == [4]
+
+
+# -------------------------------------------------------------------- elastic
+
+def test_plan_batch_spills_to_accumulation():
+    p = plan_batch(global_batch=256, dp_degree=8, max_per_device=8)
+    assert p.per_device * p.accum_steps * p.dp_degree == 256
+    assert p.per_device <= 8
+    p2 = plan_batch(global_batch=256, dp_degree=4, max_per_device=8)
+    assert p2.per_device * p2.accum_steps * p2.dp_degree == 256
+
+
+def test_env_axis_resize():
+    tree = {"x": jnp.arange(8.0)[:, None] * jnp.ones((8, 3))}
+    small = shrink_env_axis(tree, 5)
+    assert small["x"].shape == (5, 3)
+    big = grow_env_axis(small, 8)
+    assert big["x"].shape == (8, 3)
+
+
+# ----------------------------------------------------------------------- data
+
+def test_token_stream_determinism_and_sharding():
+    from repro.data.pipeline import TokenStream
+
+    s = TokenStream(vocab_size=100, seq_len=16, global_batch=8, seed=1)
+    a = s.batch_at(5)
+    b = s.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(a["tokens"], s.batch_at(6)["tokens"])
+    # host sharding partitions the batch deterministically
+    h0 = TokenStream(100, 16, 8, seed=1, host_id=0, num_hosts=2)
+    h1 = TokenStream(100, 16, 8, seed=1, host_id=1, num_hosts=2)
+    assert h0.batch_at(5)["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0.batch_at(5)["tokens"], h1.batch_at(5)["tokens"])
+
+
+def test_batch_iterator_prefetch():
+    from repro.data.pipeline import TokenStream, make_batch_iterator
+
+    s = TokenStream(vocab_size=50, seq_len=8, global_batch=2, seed=0)
+    it = make_batch_iterator(s, start_index=3)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"], s.batch_at(3)["tokens"])
+    second = next(it)
+    np.testing.assert_array_equal(second["tokens"], s.batch_at(4)["tokens"])
+    it.close()

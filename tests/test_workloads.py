@@ -1,0 +1,145 @@
+"""Workload/platform substrate: generator determinism, JSON/SWF round-trips,
+paper Table 3 defaults, gantt export."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.gantt import intervals_from_log, write_csv
+from repro.core.ref.pydes import run_pydes
+from repro.core.types import BasePolicy, EngineConfig, PSMVariant, STATE_NAMES
+from repro.workloads.generator import (
+    PRESETS,
+    GeneratorConfig,
+    generate_workload,
+    preset,
+)
+from repro.workloads.platform import DEFAULT_PLATFORM, PlatformSpec, load_platform
+from repro.workloads.workload import Workload, load_workload, parse_swf
+
+
+def test_generator_deterministic():
+    a = generate_workload(GeneratorConfig(n_jobs=50, seed=3))
+    b = generate_workload(GeneratorConfig(n_jobs=50, seed=3))
+    assert a.to_json() == b.to_json()
+    c = generate_workload(GeneratorConfig(n_jobs=50, seed=4))
+    assert a.to_json() != c.to_json()
+
+
+def test_generator_respects_bounds():
+    wl = generate_workload(
+        GeneratorConfig(n_jobs=200, nb_res=32, min_res=2, max_res=16, seed=0)
+    )
+    for j in wl.jobs:
+        assert 2 <= j.res <= 16
+        assert j.runtime >= 1
+        assert j.reqtime >= 1
+    subs = [j.subtime for j in wl.jobs]
+    assert subs == sorted(subs)
+
+
+def test_power_of_two_preset():
+    wl = preset("nasa_ipsc")
+    assert wl.nb_res == 128
+    for j in wl.jobs:
+        assert j.res & (j.res - 1) == 0  # power of two
+
+
+def test_paper_table3_platform_defaults():
+    p = DEFAULT_PLATFORM
+    assert p.power_active == 190.0
+    assert p.power_sleep == 9.0
+    assert p.power_switch_on == 190.0
+    assert p.power_switch_off == 9.0
+    assert p.t_switch_on == 30 * 60
+    assert p.t_switch_off == 45 * 60
+    assert PRESETS["cea_curie"].nb_res == 11200
+    assert PRESETS["ciemat_euler"].nb_res == 64
+
+
+def test_platform_json_roundtrip(tmp_path):
+    p = PlatformSpec(nb_nodes=48, power_active=200.0, t_switch_on=900)
+    path = str(tmp_path / "platform.json")
+    p.save(path)
+    q = load_platform(path)
+    assert q.nb_nodes == 48
+    assert q.power_active == 200.0
+    assert q.t_switch_on == 900
+    assert q.t_switch_off == p.t_switch_off
+
+
+def test_workload_json_roundtrip(tmp_path):
+    wl = generate_workload(GeneratorConfig(n_jobs=20, seed=1))
+    path = str(tmp_path / "workload.json")
+    wl.save(path)
+    wl2 = load_workload(path)
+    assert wl.to_json() == wl2.to_json()
+
+
+def test_parse_swf(tmp_path):
+    swf = "\n".join(
+        [
+            "; MaxProcs: 64",
+            "; some header",
+            # id submit wait run alloc cpu mem reqproc reqtime reqmem st uid gid exe q part prev think
+            "1 0 5 100 4 -1 -1 4 200 -1 1 1 1 1 1 1 -1 -1",
+            "2 50 0 300 8 -1 -1 16 400 -1 1 1 1 1 1 1 -1 -1",
+            "3 60 0 -1 2 -1 -1 2 100 -1 0 1 1 1 1 1 -1 -1",  # unknown runtime: drop
+        ]
+    )
+    path = str(tmp_path / "trace.swf")
+    with open(path, "w") as f:
+        f.write(swf)
+    wl = parse_swf(path)
+    assert wl.nb_res == 64
+    assert len(wl) == 2
+    assert wl.jobs[0].res == 4
+    assert wl.jobs[1].res == 16
+    assert wl.jobs[1].reqtime == 400
+
+
+def test_workload_tail_shifts_time():
+    wl = generate_workload(GeneratorConfig(n_jobs=30, seed=5))
+    t = wl.tail(10)
+    assert len(t) == 10
+    assert t.jobs[0].subtime == 0
+
+
+def test_gantt_csv_export(tmp_path):
+    plat = PlatformSpec(nb_nodes=4, t_switch_on=60, t_switch_off=60)
+    wl = generate_workload(GeneratorConfig(n_jobs=10, nb_res=4, seed=2))
+    cfg = EngineConfig(
+        base=BasePolicy.EASY, psm=PSMVariant.PSUS, timeout=50, record_gantt=True
+    )
+    s0 = engine.init_state(plat, wl, cfg)
+    const = engine.make_const(plat, cfg)
+    s, log = engine.run_sim_gantt(s0, const, cfg, max_batches=500)
+    ivs = intervals_from_log(log)
+    assert ivs, "no intervals recorded"
+    # intervals tile the timeline per node without overlap
+    by_node = {}
+    for t0, t1, nid, st, job in ivs:
+        assert t1 > t0
+        assert 0 <= st < len(STATE_NAMES)
+        by_node.setdefault(nid, []).append((t0, t1))
+    for nid, spans in by_node.items():
+        spans.sort()
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert a1 <= b0
+    path = str(tmp_path / "gantt.csv")
+    write_csv(ivs, path)
+    assert os.path.getsize(path) > 0
+
+    # oracle gantt agrees on ACTIVE intervals
+    _, des = run_pydes(
+        plat, wl, cfg
+    )
+    ref_active = sorted(
+        (t0, t1, nid, job) for t0, t1, nid, st, job in des.gantt if st == 3
+    )
+    jax_active = sorted(
+        (float(t0), float(t1), nid, job) for t0, t1, nid, st, job in ivs if st == 3
+    )
+    assert ref_active == jax_active
