@@ -1,0 +1,24 @@
+# Test / benchmark entry points. See tests/README.md for details.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-all test-slow bench-scale
+
+# tier-1 gate (what CI and the ROADMAP "Tier-1 verify" line run);
+# pytest.ini excludes the `slow` marker from this run
+test:
+	$(PY) -m pytest -x -q
+
+# everything, including the large `slow` parity sweeps
+test-all:
+	$(PY) -m pytest -q -m "slow or not slow"
+
+# only the large sweeps
+test-slow:
+	$(PY) -m pytest -q -m slow
+
+# §3.1-scale benchmark; --hetero exercises the mixed-platform sweep
+# (asserts the sweep stays ONE compiled program)
+bench-scale:
+	$(PY) benchmarks/bench_scale.py --jobs 200 --nodes 512 --oracle-jobs 50 --hetero

@@ -23,7 +23,7 @@ from repro.core.metrics import metrics_from_state
 from repro.core.ref.pydes import run_pydes
 from repro.core.types import BasePolicy, EngineConfig, PSMVariant
 from repro.workloads.generator import PRESETS, GeneratorConfig, generate_workload
-from repro.workloads.platform import PlatformSpec
+from repro.workloads.platform import PlatformSpec, mixed_platform_example
 
 
 def main(argv=None):
@@ -34,14 +34,28 @@ def main(argv=None):
                     help="jobs for the oracle run (default: same as --jobs)")
     ap.add_argument("--sweep", type=int, default=8, help="vmapped sweep width")
     ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--hetero", action="store_true",
+                    help="3-group mixed platform; sweep stays ONE compiled "
+                         "program (EngineConst per-node tables are traced "
+                         "operands, not static config)")
     args = ap.parse_args(argv)
 
     gcfg = PRESETS["cea_curie"]
-    gcfg = GeneratorConfig(**{**gcfg.__dict__, "n_jobs": args.jobs})
+    gcfg = GeneratorConfig(**{
+        **gcfg.__dict__,
+        "n_jobs": args.jobs,
+        # jobs must fit the benched platform when --nodes shrinks it
+        "nb_res": min(gcfg.nb_res, args.nodes),
+        "max_res": min(gcfg.max_res or gcfg.nb_res, args.nodes),
+    })
     wl = generate_workload(gcfg)
-    plat = PlatformSpec(nb_nodes=args.nodes)
+    if args.hetero:
+        plat = mixed_platform_example(args.nodes)
+    else:
+        plat = PlatformSpec(nb_nodes=args.nodes)
     cfg = EngineConfig(
-        base=BasePolicy.EASY, psm=PSMVariant.PSUS, timeout=args.timeout
+        base=BasePolicy.EASY, psm=PSMVariant.PSUS, timeout=args.timeout,
+        node_order="cheap" if args.hetero else "id",
     )
 
     # --- vectorized engine, single simulation ---
@@ -57,7 +71,7 @@ def main(argv=None):
     out = run_j(s0, const)
     jax.block_until_ready(out.energy)
     t_jax = time.perf_counter() - t0
-    m = metrics_from_state(out, plat.power_active)
+    m = metrics_from_state(out, plat)
     batches = int(out.n_batches)
 
     # --- vectorized engine, K-point sweep in ONE program ---
@@ -73,6 +87,13 @@ def main(argv=None):
     outs = sweep_j(consts)
     jax.block_until_ready(outs.energy)
     t_sweep = time.perf_counter() - t0
+    # the no-recompile guarantee: the K timeouts (and, under --hetero, the
+    # full per-node power/speed tables) were traced operands of ONE program.
+    # _cache_size is a private jit API; absent on some JAX versions
+    cache_size = getattr(sweep_j, "_cache_size", None)
+    n_compiles = cache_size() if callable(cache_size) else None
+    if n_compiles is not None:
+        assert n_compiles == 1, f"sweep recompiled: {n_compiles} programs"
 
     # --- sequential Python oracle (the paper's SPARS engine class) ---
     oracle_jobs = args.oracle_jobs or args.jobs
@@ -88,7 +109,11 @@ def main(argv=None):
     dev = abs(m.total_energy_j - m_ref.total_energy_j) / m_ref.total_energy_j \
         if oracle_jobs == args.jobs else float("nan")
 
-    print(f"nodes={args.nodes} jobs={args.jobs} batches={batches}")
+    print(
+        f"nodes={args.nodes} jobs={args.jobs} batches={batches} "
+        f"platform={'hetero[3 groups]' if args.hetero else 'homogeneous'} "
+        f"sweep_programs={n_compiles}"
+    )
     print(f"pydes_single_run_s={t_oracle:.2f}"
           + ("" if oracle_jobs == args.jobs else " (extrapolated)"))
     print(f"jax_single_run_s={t_jax:.2f} (first incl. compile: {t_first:.2f})")

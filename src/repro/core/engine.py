@@ -9,12 +9,16 @@ split simultaneous events.
 
 Everything is pure-functional over :class:`SimState`, so the engine jits,
 vmaps over thousands of environments (the RL use-case: envs sharded over the
-mesh ``data`` axis), and vmaps over platform scalars (e.g. a timeout sweep is
+mesh ``data`` axis), and vmaps over platform values (e.g. a timeout sweep is
 a single compiled program).
 
-Static configuration (policy structure, window size) lives in
-:class:`EngineConfig`; dynamic per-run scalars (timeout, transition times,
-powers) live in :class:`EngineConst` so parameter sweeps don't recompile.
+Static configuration (policy structure, window size, node ordering mode)
+lives in :class:`EngineConfig`; dynamic per-run values (timeout, per-node
+transition times, per-node powers and speeds) live in :class:`EngineConst`
+so parameter sweeps don't recompile. Heterogeneous platforms (mixed node
+groups with different power models, transition delays, and compute speeds)
+are first-class: every node-indexed quantity is a per-node table and energy
+is accounted per node group (core/SEMANTICS.md §Heterogeneity).
 """
 from __future__ import annotations
 
@@ -49,11 +53,20 @@ INF = jnp.asarray(INF_TIME, I32)
 
 
 class EngineConst(NamedTuple):
-    """Dynamic (traced) per-run platform scalars — sweepable without recompile."""
+    """Dynamic (traced) per-run platform tables — sweepable without recompile.
 
-    power: jax.Array  # f32[5] per-state watts
-    t_on: jax.Array  # i32 switch-on delay (s)
-    t_off: jax.Array  # i32 switch-off delay (s)
+    All node-indexed members are per-node arrays (core/SEMANTICS.md
+    §Heterogeneity); :func:`make_const` broadcasts the homogeneous scalars
+    lazily, so a sweep over platform values is still one compiled program —
+    the arrays are traced operands, never static config.
+    """
+
+    power: jax.Array  # f32[N, 5] per-node per-state watts
+    t_on: jax.Array  # i32[N] switch-on delay (s)
+    t_off: jax.Array  # i32[N] switch-off delay (s)
+    speed: jax.Array  # f32[N] compute speed (realized runtime = work/speed)
+    order_key: jax.Array  # f32[N] allocation preference (lower = cheaper/faster)
+    group_id: jax.Array  # i32[N] node-group index (per-group energy accounting)
     timeout: jax.Array  # i32 idle-timeout (s); INF_TIME = never
     rl_interval: jax.Array  # i32 RL decision tick; INF_TIME = event-driven only
 
@@ -69,16 +82,17 @@ class SimState(NamedTuple):
     job_res: jax.Array  # i32[J]
     job_subtime: jax.Array  # i32[J]
     job_reqtime: jax.Array  # i32[J]
-    job_eff: jax.Array  # i32[J] effective runtime (overrun policy folded in)
+    job_run: jax.Array  # i32[J] nominal runtime (work at speed 1)
+    job_eff: jax.Array  # i32[J] effective runtime (speed + overrun folded in at start)
     job_status: jax.Array  # i32[J]
     job_start: jax.Array  # i32[J] (-1 until started)
     job_finish: jax.Array  # i32[J] (INF until started)
     job_alloc_ready: jax.Array  # i32[J] predicted start at allocation
     job_exists: jax.Array  # bool[J] (False for padding)
     job_terminated: jax.Array  # bool[J]
-    # accounting (Kahan-compensated f32 per state)
-    energy: jax.Array  # f32[5]
-    energy_c: jax.Array  # f32[5]
+    # accounting (Kahan-compensated f32 per node group x state)
+    energy: jax.Array  # f32[G, 5]
+    energy_c: jax.Array  # f32[G, 5]
     wait_integral: jax.Array  # f32: ∫ #(arrived ∧ not-started) dt
     wait_c: jax.Array  # Kahan compensation
     # counters (Table-4-style breakdown)
@@ -109,10 +123,35 @@ def make_const(
     platform: PlatformSpec,
     config: EngineConfig,
 ) -> EngineConst:
+    N = platform.nb_nodes
+    if platform.node_groups:
+        power = jnp.asarray(platform.node_power_table(), jnp.float32)
+        t_on = jnp.asarray(platform.node_t_switch_on(), I32)
+        t_off = jnp.asarray(platform.node_t_switch_off(), I32)
+        speed = jnp.asarray(platform.node_speed(), jnp.float32)
+        order_key = jnp.asarray(platform.node_order_key(), jnp.float32)
+        group_id = jnp.asarray(platform.node_group_id(), I32)
+    else:
+        # homogeneous: broadcast the scalars lazily (no N-sized host copies)
+        power = jnp.broadcast_to(
+            jnp.asarray(platform.power_table(), jnp.float32), (N, 5)
+        )
+        t_on = jnp.broadcast_to(jnp.asarray(platform.t_switch_on, I32), (N,))
+        t_off = jnp.broadcast_to(jnp.asarray(platform.t_switch_off, I32), (N,))
+        speed = jnp.broadcast_to(
+            jnp.asarray(platform.speed(), jnp.float32), (N,)
+        )
+        # same f32 expression as PlatformSpec.node_order_key()
+        key = np.float32(platform.power_active) / np.float32(platform.speed())
+        order_key = jnp.broadcast_to(jnp.asarray(key, jnp.float32), (N,))
+        group_id = jnp.zeros(N, I32)
     return EngineConst(
-        power=jnp.asarray(platform.power_table(), jnp.float32),
-        t_on=jnp.asarray(platform.t_switch_on, I32),
-        t_off=jnp.asarray(platform.t_switch_off, I32),
+        power=power,
+        t_on=t_on,
+        t_off=t_off,
+        speed=speed,
+        order_key=order_key,
+        group_id=group_id,
         timeout=jnp.asarray(config.timeout_or_inf, I32),
         rl_interval=jnp.asarray(
             config.rl_decision_interval or int(INF_TIME), I32
@@ -144,22 +183,15 @@ def init_state(
     subtime = pad(arrs["subtime"], int(INF_TIME))
     reqtime = pad(arrs["reqtime"], 1)
     runtime = pad(arrs["runtime"], 1)
-    # DVFS / compute-speed model (platform.json dvfs_profiles): nominal
-    # runtime is work at speed 1; the realized wall time scales by the
-    # platform's operating speed. Overrun is judged on realized time.
-    speed = platform.speed()
-    if speed != 1.0:
-        runtime = np.maximum(np.ceil(runtime / speed), 1).astype(np.int32)
-    if config.terminate_overrun:
-        eff = np.minimum(runtime, reqtime)
-        terminated = runtime > reqtime
-    else:
-        eff = runtime
-        terminated = np.zeros(J, bool)
+    # DVFS / compute-speed model: ``runtime`` is nominal work at speed 1.
+    # The realized wall time depends on the speed of the nodes a job lands
+    # on, so it is resolved in _start_jobs (core/SEMANTICS.md §Heterogeneity)
+    # — overrun is judged there on realized time.
     status = np.full(J, WAITING, np.int32)
     status[n:] = DONE
     exists = np.zeros(J, bool)
     exists[:n] = True
+    G = platform.n_groups()
 
     return SimState(
         t=jnp.asarray(0, I32),
@@ -170,15 +202,16 @@ def init_state(
         job_res=jnp.asarray(res),
         job_subtime=jnp.asarray(subtime),
         job_reqtime=jnp.asarray(reqtime),
-        job_eff=jnp.asarray(eff),
+        job_run=jnp.asarray(runtime),
+        job_eff=jnp.asarray(runtime),
         job_status=jnp.asarray(status),
         job_start=jnp.full(J, -1, I32),
         job_finish=jnp.full(J, int(INF_TIME), I32),
         job_alloc_ready=jnp.full(J, int(INF_TIME), I32),
         job_exists=jnp.asarray(exists),
-        job_terminated=jnp.asarray(terminated),
-        energy=jnp.zeros(5, jnp.float32),
-        energy_c=jnp.zeros(5, jnp.float32),
+        job_terminated=jnp.zeros(J, bool),
+        energy=jnp.zeros((G, 5), jnp.float32),
+        energy_c=jnp.zeros((G, 5), jnp.float32),
         wait_integral=jnp.zeros((), jnp.float32),
         wait_c=jnp.zeros((), jnp.float32),
         n_batches=jnp.asarray(0, I32),
@@ -282,27 +315,50 @@ def _queue_window(s: SimState, W: int) -> jax.Array:
     return window[:W]
 
 
-def _try_allocate(s, const, cfg, j, shadow, extra, node_order_key=None):
+def _try_allocate(s, const, cfg, j, shadow, extra):
     """Attempt to allocate job j. Returns (ok, new_state, ready_max).
 
     shadow < 0 means head-phase (no backfill constraint).
 
+    Node selection order (core/SEMANTICS.md §Heterogeneity): nodes are taken
+    by ``(ready, order_key, nid)`` — with ``cfg.node_order == "id"`` the
+    ``order_key`` term is dropped, reproducing the homogeneous tie-breaking
+    ``(ready, nid)``; with ``"cheap"`` the per-node ``const.order_key``
+    (active watts per unit work, lower first) steers allocation onto
+    cheap/fast nodes.
+
     PSUS-family variants ignore power states, so every eligible node has
-    ready == t: selection degenerates to "first res_j unreserved by id",
-    an O(N) cumsum instead of an O(N log N) argsort — the §Perf item that
-    makes 11 200-node platforms cheap (oracle tie-breaking (ready, nid) is
-    preserved: all keys equal -> lowest id).
+    ready == t: under "id" ordering selection degenerates to "first res_j
+    unreserved by id", an O(N) cumsum instead of an O(N log N) argsort — the
+    §Perf item that makes 11 200-node platforms cheap (oracle tie-breaking
+    (ready, nid) is preserved: all keys equal -> lowest id). Under "cheap"
+    it is a single argsort of the order key.
     """
     eligible = s.node_job < 0
     res_j = s.job_res[j]
     n_elig = jnp.sum(eligible, dtype=I32)
+    sel_by_key = cfg.node_order == "cheap"
     if cfg.psm in (PSMVariant.PSUS, PSMVariant.NONE, PSMVariant.RL):
-        chosen = eligible & (jnp.cumsum(eligible) <= res_j)
+        if sel_by_key:
+            key = jnp.where(eligible, const.order_key, jnp.inf)
+            order = jnp.argsort(key, stable=True)  # (order_key, nid)
+            sorted_sel = jnp.arange(key.shape[0]) < res_j
+            chosen = jnp.zeros_like(eligible).at[order].set(sorted_sel) & eligible
+        else:
+            chosen = eligible & (jnp.cumsum(eligible) <= res_j)
         ready_max = s.t
     else:
         ready = _ready_times(s, const, cfg)
         key = jnp.where(eligible, ready, INF)
-        order = jnp.argsort(key, stable=True)  # ties -> lowest node id
+        if sel_by_key:
+            # lexicographic (ready, order_key, nid): stable argsort by the
+            # secondary key first, then by ready over that permutation
+            perm1 = jnp.argsort(
+                jnp.where(eligible, const.order_key, jnp.inf), stable=True
+            )
+            order = perm1[jnp.argsort(key[perm1], stable=True)]
+        else:
+            order = jnp.argsort(key, stable=True)  # ties -> lowest node id
         sorted_sel = jnp.arange(key.shape[0]) < res_j
         ready_sorted = key[order]
         ready_max = jnp.max(jnp.where(sorted_sel, ready_sorted, -1)).astype(I32)
@@ -397,7 +453,7 @@ def _scheduler_pass(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimSt
     return s
 
 
-def _start_jobs(s: SimState) -> SimState:
+def _start_jobs(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
     J = s.job_status.shape[0]
     nj = s.node_job
     cj = _clamp_job(nj)
@@ -405,10 +461,29 @@ def _start_jobs(s: SimState) -> SimState:
     ready_count = jnp.zeros(J, I32).at[cj].add(contrib)
     start = (s.job_status == ALLOCATED) & (ready_count == s.job_res)
     node_starts = (nj >= 0) & start[cj]
+    # realized wall time = nominal work / slowest allocated node, resolved
+    # now that the allocation is known (core/SEMANTICS.md §Heterogeneity);
+    # the f32 ceil is the cross-engine contract — the oracle computes the
+    # identical float32 expression so schedules stay bit-exact
+    speed_min = jnp.full(J, jnp.inf, jnp.float32).at[cj].min(
+        jnp.where(nj >= 0, const.speed, jnp.inf)
+    )
+    speed_min = jnp.where(start, speed_min, jnp.float32(1.0))
+    realized = jnp.maximum(
+        jnp.ceil(s.job_run.astype(jnp.float32) / speed_min).astype(I32), 1
+    )
+    if cfg.terminate_overrun:
+        eff = jnp.minimum(realized, s.job_reqtime)
+        term = realized > s.job_reqtime
+    else:
+        eff = realized
+        term = jnp.zeros(J, bool)
     return s._replace(
         job_status=jnp.where(start, RUNNING, s.job_status),
         job_start=jnp.where(start, s.t, s.job_start),
-        job_finish=jnp.where(start, s.t + s.job_eff, s.job_finish),
+        job_eff=jnp.where(start, eff, s.job_eff),
+        job_terminated=jnp.where(start, term, s.job_terminated),
+        job_finish=jnp.where(start, s.t + eff, s.job_finish),
         node_state=jnp.where(node_starts, ACTIVE, s.node_state),
         node_until=jnp.where(node_starts, INF, s.node_until),
         n_starts=s.n_starts + jnp.sum(start, dtype=I32),
@@ -492,7 +567,7 @@ def process_batch(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimStat
     s = _complete_jobs(s)
     s = _complete_transitions(s, const)
     s = _scheduler_pass(s, const, cfg)
-    s = _start_jobs(s)
+    s = _start_jobs(s, const, cfg)
     if cfg.psm == PSMVariant.RL:
         s = _apply_rl_commands(s, const)
     else:
@@ -527,8 +602,16 @@ def next_time(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
 
 def accrue_energy(s: SimState, t_next: jax.Array, const: EngineConst) -> SimState:
     dt = jnp.maximum(t_next - s.t, 0).astype(jnp.float32)
-    counts = jnp.zeros(5, jnp.float32).at[s.node_state].add(1.0)
-    delta = counts * const.power * dt
+    # per-node draw scattered into the [G, 5] group x state energy ledger
+    node_power = jnp.take_along_axis(
+        const.power, s.node_state[:, None], axis=1
+    )[:, 0]
+    delta = (
+        jnp.zeros_like(s.energy)
+        .at[const.group_id, s.node_state]
+        .add(node_power)
+        * dt
+    )
     e, c = _kahan_add(s.energy, s.energy_c, delta)
     n_waiting = jnp.sum(
         ((s.job_status == WAITING) & (s.job_subtime <= s.t))

@@ -57,8 +57,8 @@ class _Job:
     res: int
     subtime: int
     reqtime: int
-    runtime: int
-    eff_runtime: int
+    runtime: int  # nominal work at speed 1
+    eff_runtime: int  # realized effective runtime (resolved at start)
     terminated: bool
     status: int = WAITING
     start: float = -1.0
@@ -82,32 +82,31 @@ class PyDES:
         self.cfg = config
         self.split = split_simultaneous_events
         self.rl_policy = rl_policy
-        self.power = platform.power_table()
-        self.t_on = platform.t_switch_on
-        self.t_off = platform.t_switch_off
+        # per-node platform tables (core/SEMANTICS.md §Heterogeneity);
+        # identical semantics to the JAX engine's EngineConst
+        self.power = platform.node_power_table()  # f32[N, 5]
+        self.t_on = platform.node_t_switch_on()  # i32[N]
+        self.t_off = platform.node_t_switch_off()  # i32[N]
+        self.speed = platform.node_speed()  # f32[N]
+        self.okey = platform.node_order_key()  # f32[N]
+        self.gid = platform.node_group_id()  # i32[N]
+        self.n_groups = platform.n_groups()
 
         wl = workload.sorted_by_subtime()
         self.jobs: List[_Job] = []
-        speed = platform.speed()
         for i, j in enumerate(wl.jobs):
-            # DVFS / compute-speed model: realized wall time = work / speed
-            runtime = j.runtime
-            if speed != 1.0:
-                runtime = max(int(np.ceil(j.runtime / speed)), 1)
-            if config.terminate_overrun:
-                eff = min(runtime, j.reqtime)
-                term = runtime > j.reqtime
-            else:
-                eff, term = runtime, False
+            # realized wall time (work / slowest allocated node's speed) and
+            # the overrun verdict are resolved at job start; eff_runtime
+            # starts as the nominal work
             self.jobs.append(
-                _Job(i, j.res, j.subtime, j.reqtime, runtime, eff, term)
+                _Job(i, j.res, j.subtime, j.reqtime, j.runtime, j.runtime, False)
             )
         self.nodes = [
             _Node(i, state=start_state, idle_since=0.0)
             for i in range(platform.nb_nodes)
         ]
         self.t = 0.0
-        self.energy_by_state = [0.0] * 5
+        self.energy_by_group = [[0.0] * 5 for _ in range(self.n_groups)]
         self.n_batches = 0
         self.gantt: List[Tuple[float, float, int, int, int]] = []  # (t0,t1,node,state,job)
         self._gantt_open: Dict[int, Tuple[float, int, int]] = {}
@@ -124,6 +123,13 @@ class PyDES:
             "timeout_policy": 0,
         }
 
+    @property
+    def energy_by_state(self) -> List[float]:
+        """Per-state energy summed over node groups (legacy view)."""
+        return [
+            sum(g[k] for g in self.energy_by_group) for k in range(5)
+        ]
+
     # ---------- ready times (SEMANTICS.md variant table) ----------
     def _ready(self, nd: _Node) -> float:
         if self.cfg.psm in (PSMVariant.PSUS, PSMVariant.NONE, PSMVariant.RL):
@@ -133,10 +139,16 @@ class PyDES:
         if nd.state == SWITCHING_ON:
             return nd.until
         if nd.state == SLEEP:
-            return self.t + self.t_on
+            return self.t + float(self.t_on[nd.nid])
         if nd.state == SWITCHING_OFF:
-            return nd.until + self.t_on
+            return nd.until + float(self.t_on[nd.nid])
         return INF  # ACTIVE (not eligible anyway)
+
+    def _sort_key(self, nd: _Node):
+        """Allocation order (SEMANTICS.md §Heterogeneity): (ready, [key,] nid)."""
+        if self.cfg.node_order == "cheap":
+            return (self._ready(nd), self.okey[nd.nid], nd.nid)
+        return (self._ready(nd), nd.nid)
 
     def _gantt_mark(self, nd: _Node) -> None:
         if not self.cfg.record_gantt:
@@ -159,7 +171,7 @@ class PyDES:
         elig = self._eligible()
         if len(elig) < job.res:
             return False
-        elig.sort(key=lambda nd: (self._ready(nd), nd.nid))
+        elig.sort(key=self._sort_key)
         chosen = elig[: job.res]
         ready = max(self._ready(nd) for nd in chosen)
         if shadow is not None:
@@ -170,7 +182,7 @@ class PyDES:
             nd.job = job.jid
             if nd.state == SLEEP:
                 nd.state = SWITCHING_ON
-                nd.until = self.t + self.t_on
+                nd.until = self.t + float(self.t_on[nd.nid])
                 self._gantt_mark(nd)
         job.status = ALLOCATED
         job.alloc_ready = ready
@@ -191,7 +203,9 @@ class PyDES:
                 else:  # DONE shouldn't hold nodes
                     rel.append(self.t)
         rel.sort()
-        S = rel[head.res - 1]
+        # head.res can exceed N (an unsatisfiable request); clamp like the
+        # JAX engine's out-of-bounds gather does
+        S = rel[min(head.res, len(rel)) - 1]
         E = sum(1 for r in rel if r <= S) - head.res
         return S, E
 
@@ -228,6 +242,24 @@ class PyDES:
         for jid, cnt in sorted(per_job_ready.items()):
             j = self.jobs[jid]
             if j.status == ALLOCATED and cnt == j.res:
+                # realized runtime = work / slowest allocated node; the f32
+                # expression is the cross-engine contract (SEMANTICS.md
+                # §Heterogeneity) — the JAX engine evaluates the identical
+                # float32 ceil, keeping schedule tables bit-exact
+                speed_min = min(
+                    np.float32(self.speed[nd.nid])
+                    for nd in self.nodes
+                    if nd.job == jid
+                )
+                realized = max(
+                    int(np.ceil(np.float32(j.runtime) / speed_min)), 1
+                )
+                if self.cfg.terminate_overrun:
+                    j.eff_runtime = min(realized, j.reqtime)
+                    j.terminated = realized > j.reqtime
+                else:
+                    j.eff_runtime = realized
+                    j.terminated = False
                 j.status = RUNNING
                 j.start = self.t
                 j.finish = self.t + j.eff_runtime
@@ -270,7 +302,7 @@ class PyDES:
             cands = cands[:surplus]
         for nd in cands:
             nd.state = SWITCHING_OFF
-            nd.until = self.t + self.t_off
+            nd.until = self.t + float(self.t_off[nd.nid])
             self._gantt_mark(nd)
 
     def _ipm_wake(self) -> None:
@@ -289,7 +321,7 @@ class PyDES:
                 break
             if nd.job < 0 and nd.state == SLEEP:
                 nd.state = SWITCHING_ON
-                nd.until = self.t + self.t_on
+                nd.until = self.t + float(self.t_on[nd.nid])
                 self._gantt_mark(nd)
                 deficit -= 1
 
@@ -301,7 +333,7 @@ class PyDES:
                 break
             if nd.job < 0 and nd.state == SLEEP:
                 nd.state = SWITCHING_ON
-                nd.until = self.t + self.t_on
+                nd.until = self.t + float(self.t_on[nd.nid])
                 self._gantt_mark(nd)
                 woken += 1
         cands = [
@@ -310,7 +342,7 @@ class PyDES:
         cands.sort(key=lambda nd: (nd.idle_since, nd.nid))
         for nd in cands[:n_off]:
             nd.state = SWITCHING_OFF
-            nd.until = self.t + self.t_off
+            nd.until = self.t + float(self.t_off[nd.nid])
             self._gantt_mark(nd)
 
     # ---------- event machinery ----------
@@ -345,7 +377,9 @@ class PyDES:
         if dt <= 0:
             return
         for nd in self.nodes:
-            self.energy_by_state[nd.state] += self.power[nd.state] * dt
+            self.energy_by_group[self.gid[nd.nid]][nd.state] += (
+                float(self.power[nd.nid, nd.state]) * dt
+            )
 
     def _process_batch(self) -> None:
         t = self.t
@@ -400,7 +434,7 @@ class PyDES:
                 self._gantt_mark(nd)
                 if nd.job >= 0:  # reserved while shutting down: chain to on
                     nd.state = SWITCHING_ON
-                    nd.until = t + self.t_on
+                    nd.until = t + float(self.t_on[nd.nid])
                     self._gantt_mark(nd)
 
     def run(self, max_batches: Optional[int] = None) -> SimMetrics:
@@ -427,27 +461,34 @@ class PyDES:
             j.start - j.subtime for j in self.jobs if j.start >= 0
         ]
         makespan = max((j.finish for j in self.jobs if j.status == DONE), default=0.0)
-        active_j = self.energy_by_state[ACTIVE]
+        by_state = self.energy_by_state
         util = 0.0
         if makespan > 0:
-            active_node_s = active_j / self.power[ACTIVE] if self.power[ACTIVE] else 0.0
+            # active node-seconds recovered per group from its own draw
+            active_node_s = sum(
+                g[ACTIVE] / p_active
+                for g, p_active in zip(
+                    self.energy_by_group, self.p.group_active_powers()
+                )
+                if p_active
+            )
             util = active_node_s / (len(self.nodes) * makespan)
-        total = float(sum(self.energy_by_state))
+        total = float(sum(by_state))
         wasted = float(
-            self.energy_by_state[IDLE]
-            + self.energy_by_state[SWITCHING_ON]
-            + self.energy_by_state[SWITCHING_OFF]
+            by_state[IDLE] + by_state[SWITCHING_ON] + by_state[SWITCHING_OFF]
         )
         return SimMetrics(
             total_energy_j=total,
             wasted_energy_j=wasted,
-            energy_by_state_j=tuple(self.energy_by_state),
+            energy_by_state_j=tuple(by_state),
             mean_wait_s=float(np.mean(waits)) if waits else 0.0,
             max_wait_s=float(np.max(waits)) if waits else 0.0,
             utilization=float(util),
             makespan_s=int(makespan),
             n_jobs=len(self.jobs),
             n_terminated=sum(1 for j in self.jobs if j.terminated and j.status == DONE),
+            energy_by_group_j=tuple(tuple(g) for g in self.energy_by_group),
+            group_names=self.p.group_names(),
         )
 
     def schedule_table(self) -> np.ndarray:

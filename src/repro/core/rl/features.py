@@ -26,8 +26,43 @@ def _t_norm(x):
     return jnp.log1p(jnp.maximum(x.astype(jnp.float32), 0.0) / _TIME_SCALE)
 
 
+def _masked_mean(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    n = jnp.sum(mask, dtype=jnp.float32)
+    return jnp.sum(jnp.where(mask, values, 0.0)) / jnp.maximum(n, 1.0)
+
+
+def hetero_features(s: SimState, const: EngineConst) -> jnp.ndarray:
+    """4-dim per-node power/speed summary (core/SEMANTICS.md §Heterogeneity).
+
+    Tells the agent *which* nodes are currently idle/sleeping, not just how
+    many: on a mixed platform sleeping the expensive-idle group first and
+    waking the fast/cheap group first is the whole game. All terms are
+    normalized by cluster-wide maxima, so they are exactly constant (0 spread)
+    on homogeneous platforms and the same MLP config transfers.
+    """
+    key = const.order_key
+    key_max = jnp.maximum(jnp.max(key), 1e-6)
+    speed = const.speed
+    speed_max = jnp.maximum(jnp.max(speed), 1e-6)
+    idle = s.node_state == IDLE
+    sleeping = s.node_state == SLEEP
+    return jnp.stack(
+        [
+            # heterogeneity spread: 0 on homogeneous platforms
+            (jnp.max(key) - jnp.min(key)) / key_max,
+            # how expensive the currently-idle pool is (sleep these first)
+            _masked_mean(key / key_max, idle),
+            # how fast the currently-sleeping pool is (wake these first)
+            _masked_mean(speed / speed_max, sleeping),
+            # how fast the currently-idle pool is
+            _masked_mean(speed / speed_max, idle),
+        ]
+    )
+
+
 def compact_features(s: SimState, const: EngineConst) -> jnp.ndarray:
-    """16-dim summary: node-state mix, queue pressure, head-job profile.
+    """20-dim summary: node-state mix, queue pressure, head-job profile,
+    per-node power/speed heterogeneity summary.
 
     Mirrors the observation designs of the paper's refs [7],[24]
     (state-mix + queue statistics), adapted to fixed-width vector form.
@@ -61,7 +96,7 @@ def compact_features(s: SimState, const: EngineConst) -> jnp.ndarray:
     remaining = jnp.sum(s.job_exists & (s.job_status != 3), dtype=jnp.float32)
     total = jnp.maximum(jnp.sum(s.job_exists, dtype=jnp.float32), 1.0)
 
-    return jnp.stack(
+    base = jnp.stack(
         state_frac
         + [
             reserved_frac,
@@ -77,6 +112,7 @@ def compact_features(s: SimState, const: EngineConst) -> jnp.ndarray:
             remaining / total,
         ]
     )
+    return jnp.concatenate([base, hetero_features(s, const)])
 
 
 def queue_window_features(s: SimState, const: EngineConst, W: int = 8) -> jnp.ndarray:
@@ -102,7 +138,7 @@ FEATURE_EXTRACTORS = {
 
 def feature_size(name: str, window: int = 8) -> int:
     if name == "compact":
-        return 16
+        return 20
     if name == "queue_window":
-        return 16 + 4 * window
+        return 20 + 4 * window
     raise KeyError(name)

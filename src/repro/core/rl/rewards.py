@@ -21,7 +21,17 @@ class RewardWeights:
 
 
 def _waste_j(s: SimState) -> jnp.ndarray:
-    return s.energy[IDLE] + s.energy[SWITCHING_ON] + s.energy[SWITCHING_OFF]
+    # energy ledger is [G, 5]; sum the waste states over node groups
+    return (
+        jnp.sum(s.energy[..., IDLE])
+        + jnp.sum(s.energy[..., SWITCHING_ON])
+        + jnp.sum(s.energy[..., SWITCHING_OFF])
+    )
+
+
+def _cluster_active_watts(const: EngineConst) -> jnp.ndarray:
+    """Full-cluster active draw (W) — per-node on heterogeneous platforms."""
+    return jnp.sum(const.power[..., 3])
 
 
 def waste_wait_tradeoff(
@@ -34,7 +44,7 @@ def waste_wait_tradeoff(
     express the operator's actual trade-off preference.
     """
     N = new.node_state.shape[0]
-    e_scale = jnp.float32(N) * const.power[3] * 3600.0  # J per cluster-hour
+    e_scale = _cluster_active_watts(const) * 3600.0  # J per cluster-hour
     w_scale = jnp.float32(N) * 3600.0  # node-seconds per cluster-hour
     d_waste = (_waste_j(new) - _waste_j(prev)) / e_scale
     d_wait = (new.wait_integral - prev.wait_integral) / w_scale
@@ -42,8 +52,7 @@ def waste_wait_tradeoff(
 
 
 def energy_only(prev, new, const, w):
-    N = new.node_state.shape[0]
-    e_scale = jnp.float32(N) * const.power[3] * 3600.0
+    e_scale = _cluster_active_watts(const) * 3600.0
     return -(jnp.sum(new.energy) - jnp.sum(prev.energy)) / e_scale
 
 

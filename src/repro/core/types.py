@@ -40,10 +40,20 @@ class EngineConfig:
     timeout: Optional[int] = None  # idle seconds before switch-off; None = never
     terminate_overrun: bool = False
     window: int = 32  # scheduler scan window W (bounded backfill depth)
+    # node selection order for allocation (core/SEMANTICS.md §Heterogeneity):
+    #   "id"    — (ready, nid): the homogeneous tie-breaking, O(N) fast path
+    #   "cheap" — (ready, order_key, nid): prefer cheap/fast nodes first
+    node_order: str = "id"
     record_gantt: bool = False
     gantt_capacity: int = 0  # 0 -> auto
     max_batches: Optional[int] = None  # safety cap; None -> auto
     rl_decision_interval: Optional[int] = None  # RL: also wake every Δ seconds
+
+    def __post_init__(self):
+        if self.node_order not in ("id", "cheap"):
+            raise ValueError(
+                f"node_order must be 'id' or 'cheap', got {self.node_order!r}"
+            )
 
     @property
     def timeout_or_inf(self) -> int:
@@ -73,9 +83,13 @@ class SimMetrics(NamedTuple):
     makespan_s: int
     n_jobs: int
     n_terminated: int
+    # per node-group 5-tuples (group order matches PlatformSpec.groups());
+    # a homogeneous platform has exactly one group == energy_by_state_j
+    energy_by_group_j: tuple = ()
+    group_names: tuple = ()
 
     def row(self) -> dict:
-        return {
+        out = {
             "total_energy_kwh": self.total_energy_j / 3.6e6,
             "wasted_energy_kwh": self.wasted_energy_j / 3.6e6,
             "mean_wait_s": self.mean_wait_s,
@@ -85,3 +99,17 @@ class SimMetrics(NamedTuple):
             "n_jobs": self.n_jobs,
             "n_terminated": self.n_terminated,
         }
+        if len(self.energy_by_group_j) > 1:
+            names = list(self.group_names) + [
+                f"group{i}"
+                for i in range(len(self.group_names), len(self.energy_by_group_j))
+            ]
+            # duplicate group names would collide as dict keys and silently
+            # drop groups; qualify repeats with their group index
+            names = [
+                n if names.count(n) == 1 else f"{n}{i}"
+                for i, n in enumerate(names)
+            ]
+            for name, e in zip(names, self.energy_by_group_j):
+                out[f"energy_kwh.{name}"] = float(sum(e)) / 3.6e6
+        return out

@@ -1,0 +1,25 @@
+"""Pallas API compatibility across JAX versions.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in newer
+JAX releases; resolve whichever name the installed version provides so the
+kernels import on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+def _unsupported(*args, **kwargs):
+    raise ImportError(
+        "jax.experimental.pallas.tpu provides neither CompilerParams nor "
+        "TPUCompilerParams; this JAX version is unsupported by the Pallas "
+        "kernels"
+    )
+
+
+CompilerParams = (
+    getattr(pltpu, "CompilerParams", None)
+    or getattr(pltpu, "TPUCompilerParams", None)
+    or _unsupported
+)
+
+__all__ = ["CompilerParams"]

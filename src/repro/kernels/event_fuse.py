@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 from repro.core.types import INF_TIME, N_STATES, SWITCHING_OFF, SWITCHING_ON
 
 PAD_STATE = 7  # padding nodes: zero power, never transitioning
@@ -112,7 +114,7 @@ def event_fuse(
             jax.ShapeDtypeStruct((e_pad, 1), jnp.float32),
             jax.ShapeDtypeStruct((e_pad, 1), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -8,10 +8,14 @@ config; PyYAML not required).
 
 Config keys (paper's runtime layer):
     workload:   path to workload.json | "preset:<name>" | "profiles"
-    platform:   path to platform.json | node count (int)
+    platform:   path to platform.json | node count (int); heterogeneous
+                platforms use the "node_groups"/"nodes" JSON schema
+                (core/SEMANTICS.md §Heterogeneity) and get per-group
+                energy breakdowns in metrics.json
     scheduler:  "FCFS|EASY PSUS|PSAS|PSAS+IPM|AlwaysOn|RL"
     timeout:    idle seconds before switch-off (null = never)
     terminate_overrun: bool
+    node_order: "id" | "cheap" (default: "cheap" when heterogeneous)
     rl:         {checkpoint: path, decision_interval: s}   (scheduler "RL")
     out:        output directory (CSV logs + metrics.json + gantt)
 """
@@ -99,12 +103,18 @@ def run(config: Dict[str, Any]) -> Dict[str, Any]:
     plat = resolve_platform(config.get("platform", wl.nb_res))
     sched = config.get("scheduler", "EASY PSUS")
     base, psm = SCHEDULERS[sched]
+    # heterogeneous platforms default to cost-aware node selection
+    # (core/SEMANTICS.md §Heterogeneity); override with node_order: id
+    node_order = config.get(
+        "node_order", "cheap" if plat.is_heterogeneous else "id"
+    )
     ecfg = EngineConfig(
         base=base,
         psm=psm,
         timeout=config.get("timeout"),
         terminate_overrun=bool(config.get("terminate_overrun", False)),
         record_gantt=bool(config.get("gantt", True)),
+        node_order=node_order,
     )
     out_dir = config.get("out", "out/sim")
     os.makedirs(out_dir, exist_ok=True)
@@ -126,7 +136,7 @@ def run(config: Dict[str, Any]) -> Dict[str, Any]:
     else:
         s = engine.simulate(plat, wl, ecfg)
 
-    m = metrics_from_state(s, plat.power_active)
+    m = metrics_from_state(s, plat)
 
     # CSV job log (paper §2.3.3: "CSV outputs including job execution logs")
     d = np_state(s)

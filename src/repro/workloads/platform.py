@@ -7,15 +7,25 @@ illustrative configuration (Table 3) is exposed as :data:`DEFAULT_PLATFORM`:
     active 190 W · idle 190 W · sleep 9 W
     switch-on  190 W for 30 min · switch-off 9 W for 45 min
 
+Heterogeneous machines (mixed partitions, staggered hardware generations,
+big.LITTLE-style islands) are described as an ordered tuple of
+:class:`NodeGroup` entries; node ids are assigned contiguously in group
+order. The homogeneous case keeps the flat scalar fields, and the per-node
+table accessors (:meth:`PlatformSpec.node_power_table` and friends)
+broadcast them, so both cases feed the engines through one code path
+(core/SEMANTICS.md §Heterogeneity).
+
 DVFS profiles are carried in the schema for forward compatibility (the paper
 models them but does not evaluate them for lack of public traces); the engine
-uses the node's default profile's ``speed`` to scale runtimes.
+uses the node's operating ``speed`` to scale realized runtimes.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Dict, Mapping, Optional
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
 
 # Node power-state encoding shared by the Python oracle and the JAX engine.
 # Order matters: the engine indexes power/legality tables by these values.
@@ -37,14 +47,78 @@ class DvfsProfile:
     power: float
     speed: float = 1.0
 
+    def __post_init__(self):
+        if self.speed <= 0:
+            raise ValueError(
+                f"DvfsProfile.speed must be positive, got {self.speed}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeGroup:
+    """A contiguous block of identical nodes inside a heterogeneous platform.
+
+    ``speed`` is the group's operating compute speed (realized wall time of a
+    job = nominal runtime / min speed over its allocated nodes — see
+    core/SEMANTICS.md §Heterogeneity).
+    """
+
+    count: int
+    name: str = "default"
+    power_active: float = 190.0
+    power_idle: float = 190.0
+    power_sleep: float = 9.0
+    power_switch_on: float = 190.0
+    power_switch_off: float = 9.0
+    t_switch_on: int = 30 * 60
+    t_switch_off: int = 45 * 60
+    speed: float = 1.0
+
+    def __post_init__(self):
+        if self.count <= 0:
+            raise ValueError(f"NodeGroup.count must be positive, got {self.count}")
+        if self.speed <= 0:
+            raise ValueError(f"NodeGroup.speed must be positive, got {self.speed}")
+
+    def power_table(self) -> Tuple[float, ...]:
+        return (
+            self.power_sleep,
+            self.power_switch_on,
+            self.power_idle,
+            self.power_active,
+            self.power_switch_off,
+        )
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "count": self.count,
+            "compute_speed": self.speed,
+            "states": {
+                "sleep": {"power": self.power_sleep},
+                "idle": {"power": self.power_idle},
+                "active": {"power": self.power_active},
+                "switching_on": {
+                    "power": self.power_switch_on,
+                    "transition_time": self.t_switch_on,
+                },
+                "switching_off": {
+                    "power": self.power_switch_off,
+                    "transition_time": self.t_switch_off,
+                },
+            },
+        }
+
 
 @dataclasses.dataclass(frozen=True)
 class PlatformSpec:
     """Hardware description of the simulated machine.
 
-    Attributes mirror the paper's platform JSON: every node shares the same
-    power model in the illustrative setup, so the spec is homogeneous; the
-    JSON loader accepts per-node entries and collapses them when identical.
+    Attributes mirror the paper's platform JSON. The scalar fields describe a
+    homogeneous machine; ``node_groups`` (when non-empty) describes a
+    heterogeneous one and takes precedence — the scalar fields then only act
+    as defaults mirrored from the first group. Node ids run contiguously in
+    group order.
     """
 
     nb_nodes: int
@@ -58,7 +132,114 @@ class PlatformSpec:
     compute_speed: float = 1.0
     dvfs_profiles: tuple = ()
     dvfs_mode: Optional[str] = None
+    node_groups: Tuple[NodeGroup, ...] = ()
 
+    def __post_init__(self):
+        if self.compute_speed <= 0:
+            raise ValueError(
+                f"compute_speed must be positive, got {self.compute_speed}"
+            )
+        if self.node_groups:
+            object.__setattr__(self, "node_groups", tuple(self.node_groups))
+            total = sum(g.count for g in self.node_groups)
+            if total != self.nb_nodes:
+                raise ValueError(
+                    f"node_groups cover {total} nodes != nb_nodes {self.nb_nodes}"
+                )
+            # keep the legacy scalar views mirrored from the first group on
+            # every construction path (not just platform_from_groups), so
+            # legacy callers never see defaults that disagree with the
+            # per-node tables the engines actually simulate
+            g0 = self.node_groups[0]
+            object.__setattr__(self, "power_active", g0.power_active)
+            object.__setattr__(self, "power_idle", g0.power_idle)
+            object.__setattr__(self, "power_sleep", g0.power_sleep)
+            object.__setattr__(self, "power_switch_on", g0.power_switch_on)
+            object.__setattr__(self, "power_switch_off", g0.power_switch_off)
+            object.__setattr__(self, "t_switch_on", g0.t_switch_on)
+            object.__setattr__(self, "t_switch_off", g0.t_switch_off)
+            object.__setattr__(self, "compute_speed", g0.speed)
+
+    # ---- group views -----------------------------------------------------
+    @property
+    def is_heterogeneous(self) -> bool:
+        return len(self.node_groups) > 1
+
+    def groups(self) -> Tuple[NodeGroup, ...]:
+        """Group view; a homogeneous spec synthesizes one group from scalars."""
+        if self.node_groups:
+            return self.node_groups
+        return (
+            NodeGroup(
+                count=self.nb_nodes,
+                power_active=self.power_active,
+                power_idle=self.power_idle,
+                power_sleep=self.power_sleep,
+                power_switch_on=self.power_switch_on,
+                power_switch_off=self.power_switch_off,
+                t_switch_on=self.t_switch_on,
+                t_switch_off=self.t_switch_off,
+                speed=self.speed(),
+            ),
+        )
+
+    def n_groups(self) -> int:
+        return len(self.groups())
+
+    def group_names(self) -> Tuple[str, ...]:
+        return tuple(g.name for g in self.groups())
+
+    # ---- per-node tables (the engines' native representation) ------------
+    def node_group_id(self) -> np.ndarray:
+        """i32[N] group index of every node (contiguous in group order)."""
+        return np.repeat(
+            np.arange(len(self.groups()), dtype=np.int32),
+            [g.count for g in self.groups()],
+        )
+
+    def node_power_table(self) -> np.ndarray:
+        """f32[N, 5] per-node per-state watts."""
+        return np.repeat(
+            np.asarray([g.power_table() for g in self.groups()], np.float32),
+            [g.count for g in self.groups()],
+            axis=0,
+        )
+
+    def node_t_switch_on(self) -> np.ndarray:
+        """i32[N] per-node switch-on delay (s)."""
+        return np.repeat(
+            np.asarray([g.t_switch_on for g in self.groups()], np.int32),
+            [g.count for g in self.groups()],
+        )
+
+    def node_t_switch_off(self) -> np.ndarray:
+        """i32[N] per-node switch-off delay (s)."""
+        return np.repeat(
+            np.asarray([g.t_switch_off for g in self.groups()], np.int32),
+            [g.count for g in self.groups()],
+        )
+
+    def node_speed(self) -> np.ndarray:
+        """f32[N] per-node compute speed (realized runtime = work / speed)."""
+        return np.repeat(
+            np.asarray([g.speed for g in self.groups()], np.float32),
+            [g.count for g in self.groups()],
+        )
+
+    def node_order_key(self) -> np.ndarray:
+        """f32[N] allocation preference key: active watts per unit of work.
+
+        Lower is better ("cheap/fast first"); computed in float32 so the JAX
+        engine and the Python oracle order nodes identically
+        (core/SEMANTICS.md §Heterogeneity).
+        """
+        table = self.node_power_table()
+        return (table[:, ACTIVE] / self.node_speed()).astype(np.float32)
+
+    def group_active_powers(self) -> Tuple[float, ...]:
+        return tuple(g.power_active for g in self.groups())
+
+    # ---- legacy scalar views ---------------------------------------------
     def power_table(self):
         """Per-state power draw indexed by the state encoding above."""
         return (
@@ -77,7 +258,7 @@ class PlatformSpec:
         return self.compute_speed
 
     def to_json(self) -> Dict[str, Any]:
-        return {
+        out = {
             "nb_nodes": self.nb_nodes,
             "compute_speed": self.compute_speed,
             "dvfs_mode": self.dvfs_mode,
@@ -104,6 +285,9 @@ class PlatformSpec:
                 {"from": "switching_off", "to": "sleep"},
             ],
         }
+        if self.node_groups:
+            out["node_groups"] = [g.to_json() for g in self.node_groups]
+        return out
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
@@ -114,40 +298,200 @@ def make_platform(nb_nodes: int, **kw) -> PlatformSpec:
     return PlatformSpec(nb_nodes=nb_nodes, **kw)
 
 
-def _from_json(obj: Mapping[str, Any]) -> PlatformSpec:
-    states = obj.get("states", {})
+def platform_from_groups(groups: Sequence[NodeGroup], **kw) -> PlatformSpec:
+    """Build a PlatformSpec from node groups (nb_nodes derived).
 
+    A single group collapses to the equivalent scalar (homogeneous) spec so
+    that "N identical nodes" and "one machine of N nodes" are literally the
+    same object — the metamorphic guarantee tests rely on.
+    """
+    groups = tuple(groups)
+    if not groups:
+        raise ValueError("platform_from_groups needs at least one group")
+    if len(groups) == 1:
+        g = groups[0]
+        return PlatformSpec(
+            nb_nodes=g.count,
+            power_active=g.power_active,
+            power_idle=g.power_idle,
+            power_sleep=g.power_sleep,
+            power_switch_on=g.power_switch_on,
+            power_switch_off=g.power_switch_off,
+            t_switch_on=g.t_switch_on,
+            t_switch_off=g.t_switch_off,
+            compute_speed=g.speed,
+            **kw,
+        )
+    # __post_init__ mirrors the scalar views from the first group
+    return PlatformSpec(
+        nb_nodes=sum(g.count for g in groups),
+        node_groups=groups,
+        **kw,
+    )
+
+
+def _states_from_json(
+    states: Mapping[str, Any], defaults: Mapping[str, float]
+) -> Dict[str, Any]:
     def p(name, default):
         return float(states.get(name, {}).get("power", default))
 
     def t(name, default):
         return int(states.get(name, {}).get("transition_time", default))
 
+    active = p("active", defaults["power_active"])
+    return {
+        "power_active": active,
+        # idle inherits the document-level idle like every other state; only
+        # when the document doesn't set one does it default to this entry's
+        # active draw (the paper's idle==active illustrative setup)
+        "power_idle": p("idle", defaults.get("power_idle", active)),
+        "power_sleep": p("sleep", defaults["power_sleep"]),
+        "power_switch_on": p("switching_on", defaults["power_switch_on"]),
+        "power_switch_off": p("switching_off", defaults["power_switch_off"]),
+        "t_switch_on": t("switching_on", defaults["t_switch_on"]),
+        "t_switch_off": t("switching_off", defaults["t_switch_off"]),
+    }
+
+
+_DEFAULTS = {
+    "power_active": 190.0,
+    "power_sleep": 9.0,
+    "power_switch_on": 190.0,
+    "power_switch_off": 9.0,
+    "t_switch_on": 1800,
+    "t_switch_off": 2700,
+}
+
+
+def _group_from_json(
+    d: Mapping[str, Any],
+    defaults: Mapping[str, float],
+    index: int,
+    count: int,
+    default_speed: float = 1.0,
+) -> NodeGroup:
+    fields = _states_from_json(d.get("states", {}), defaults)
+    return NodeGroup(
+        count=count,
+        name=str(d.get("name", f"group{index}")),
+        speed=float(d.get("compute_speed", d.get("speed", default_speed))),
+        **fields,
+    )
+
+
+def _coalesce_nodes(entries: List[NodeGroup]) -> Tuple[NodeGroup, ...]:
+    """Merge consecutive per-node entries that are identical up to the name.
+
+    The JSON loader *preserves* per-node heterogeneity, but N identical
+    entries collapse into one group of N so a homogeneous platform written
+    node-by-node is indistinguishable from its scalar form (metamorphic
+    guarantee; also keeps the engine's group axis small).
+    """
+    out: List[NodeGroup] = []
+    for g in entries:
+        if out and dataclasses.replace(
+            out[-1], count=g.count, name=g.name
+        ) == g:
+            out[-1] = dataclasses.replace(
+                out[-1], count=out[-1].count + g.count
+            )
+        else:
+            out.append(g)
+    return tuple(out)
+
+
+def _from_json(obj: Mapping[str, Any]) -> PlatformSpec:
     profiles = tuple(
         DvfsProfile(d["name"], float(d["power"]), float(d.get("speed", 1.0)))
         for d in obj.get("dvfs_profiles", [])
     )
-    return PlatformSpec(
-        nb_nodes=int(obj["nb_nodes"]),
-        power_active=p("active", 190.0),
-        power_idle=p("idle", p("active", 190.0)),
-        power_sleep=p("sleep", 9.0),
-        power_switch_on=p("switching_on", 190.0),
-        power_switch_off=p("switching_off", 9.0),
-        t_switch_on=t("switching_on", 1800),
-        t_switch_off=t("switching_off", 2700),
-        compute_speed=float(obj.get("compute_speed", 1.0)),
+    top = _states_from_json(obj.get("states", {}), _DEFAULTS)
+    common = dict(
         dvfs_profiles=profiles,
         dvfs_mode=obj.get("dvfs_mode"),
     )
 
+    # document-level compute_speed is the default for every group/node entry,
+    # matching the homogeneous loader's semantics
+    default_speed = float(obj.get("compute_speed", 1.0))
+    group_defaults = {**_DEFAULTS, **top}
+    if "idle" not in obj.get("states", {}):
+        # only an *explicit* document idle inherits into groups; otherwise an
+        # entry's idle defaults to its own active draw (paper idle==active)
+        group_defaults.pop("power_idle", None)
+    groups: List[NodeGroup] = []
+    if "node_groups" in obj:
+        for i, d in enumerate(obj["node_groups"]):
+            groups.append(
+                _group_from_json(
+                    d, group_defaults, i, int(d["count"]), default_speed
+                )
+            )
+    elif "nodes" in obj:
+        # per-node entries (the paper schema's per-node form) are preserved,
+        # with identical neighbours coalesced into groups
+        for i, d in enumerate(obj["nodes"]):
+            groups.append(
+                _group_from_json(
+                    d, group_defaults, i, int(d.get("count", 1)),
+                    default_speed,
+                )
+            )
+        groups = list(_coalesce_nodes(groups))
+
+    if groups:
+        spec = platform_from_groups(tuple(groups), **common)
+        if "nb_nodes" in obj and int(obj["nb_nodes"]) != spec.nb_nodes:
+            raise ValueError(
+                f"nb_nodes {obj['nb_nodes']} != nodes described {spec.nb_nodes}"
+            )
+        return spec
+
+    return PlatformSpec(
+        nb_nodes=int(obj["nb_nodes"]),
+        compute_speed=float(obj.get("compute_speed", 1.0)),
+        **top,
+        **common,
+    )
+
 
 def load_platform(path_or_obj) -> PlatformSpec:
-    """Load a platform from a JSON file path or a parsed dict."""
+    """Load a platform from a JSON file path or a parsed dict.
+
+    Accepts three schema forms: flat scalar ``states`` (homogeneous),
+    ``node_groups`` (list of {name, count, states, compute_speed}), and
+    ``nodes`` (one entry per node; identical neighbours are coalesced but
+    distinct per-node entries are preserved — never silently collapsed).
+    """
     if isinstance(path_or_obj, Mapping):
         return _from_json(path_or_obj)
     with open(path_or_obj) as f:
         return _from_json(json.load(f))
+
+
+def mixed_platform_example(nb_nodes: int = 16) -> PlatformSpec:
+    """Canonical 3-group heterogeneous example used by tests and benchmarks.
+
+    fast: hot 2x-speed nodes · eco: cool 0.5x nodes · std: paper Table 3.
+    Different idle/sleep watts, asymmetric transition delays, 2x/0.5x/1x
+    speeds — one third of the machine each (remainder to std).
+    """
+    a = nb_nodes // 3
+    b = nb_nodes // 3
+    return platform_from_groups(
+        (
+            NodeGroup(count=a, name="fast", power_active=300.0,
+                      power_idle=250.0, power_sleep=12.0,
+                      power_switch_on=300.0, power_switch_off=12.0,
+                      t_switch_on=600, t_switch_off=900, speed=2.0),
+            NodeGroup(count=b, name="eco", power_active=100.0,
+                      power_idle=80.0, power_sleep=4.0,
+                      power_switch_on=100.0, power_switch_off=4.0,
+                      t_switch_on=120, t_switch_off=180, speed=0.5),
+            NodeGroup(count=nb_nodes - a - b, name="std"),
+        )
+    )
 
 
 # Paper Table 3 (power model); node count chosen per workload trace.

@@ -9,13 +9,22 @@ from repro.core.metrics import metrics_from_state, schedule_table
 from repro.core.ref.pydes import run_pydes
 from repro.core.types import BasePolicy, EngineConfig, PSMVariant
 from repro.workloads.generator import GeneratorConfig, generate_workload
-from repro.workloads.platform import PlatformSpec
+from repro.workloads.platform import (
+    NodeGroup,
+    PlatformSpec,
+    mixed_platform_example,
+    platform_from_groups,
+)
 
 SCHEDULERS = [
     (base, psm)
     for base in (BasePolicy.FCFS, BasePolicy.EASY)
     for psm in (PSMVariant.PSUS, PSMVariant.PSAS, PSMVariant.PSAS_IPM)
 ]
+
+# 3-group mixed platform: different idle/sleep watts, asymmetric t_on/t_off,
+# speeds 2x / 0.5x / 1x (core/SEMANTICS.md §Heterogeneity)
+hetero_platform = mixed_platform_example
 
 
 @pytest.mark.parametrize("base,psm", SCHEDULERS)
@@ -41,6 +50,91 @@ def test_schedule_parity(base, psm, seed):
     assert m_jax.mean_wait_s == pytest.approx(m_ref.mean_wait_s, rel=1e-6, abs=1e-6)
     assert m_jax.makespan_s == m_ref.makespan_s
     assert m_jax.n_terminated == m_ref.n_terminated
+
+
+@pytest.mark.parametrize("base,psm", SCHEDULERS)
+@pytest.mark.parametrize("node_order", ["cheap", "id"])
+def test_heterogeneous_schedule_parity(base, psm, node_order):
+    """All six schedulers on a 3-group mixed platform: exact schedule tables
+    and energy agreement between the JAX engine and the sequential oracle,
+    under both node orderings."""
+    plat = hetero_platform(16)
+    wl = generate_workload(
+        GeneratorConfig(n_jobs=80, nb_res=16, seed=3, overrun_prob=0.2)
+    )
+    cfg = EngineConfig(
+        base=base, psm=psm, timeout=200, terminate_overrun=True,
+        node_order=node_order,
+    )
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+
+    m_jax = metrics_from_state(s, plat)
+    assert m_jax.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+    assert m_jax.wasted_energy_j == pytest.approx(m_ref.wasted_energy_j, rel=1e-5)
+    assert m_jax.makespan_s == m_ref.makespan_s
+    assert m_jax.n_terminated == m_ref.n_terminated
+    # per-group ledgers agree too (f32 Kahan vs f64)
+    assert len(m_jax.energy_by_group_j) == 3
+    for g_jax, g_ref in zip(m_jax.energy_by_group_j, m_ref.energy_by_group_j):
+        for e_jax, e_ref in zip(g_jax, g_ref):
+            assert e_jax == pytest.approx(e_ref, rel=1e-4, abs=1.0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("base,psm", SCHEDULERS)
+@pytest.mark.parametrize("seed", [1, 8])
+def test_heterogeneous_parity_sweep(base, psm, seed):
+    """Larger heterogeneous parity sweep (more jobs, second RNG stream)."""
+    plat = hetero_platform(24)
+    wl = generate_workload(
+        GeneratorConfig(n_jobs=200, nb_res=24, seed=seed, overrun_prob=0.25)
+    )
+    cfg = EngineConfig(
+        base=base, psm=psm, timeout=300, terminate_overrun=True,
+        node_order="cheap",
+    )
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, plat)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+
+
+def test_cheap_order_prefers_low_energy_nodes():
+    """With the expensive-per-work group at the low node ids,
+    node_order="cheap" routes work to the cheap/fast group instead, so the
+    ACTIVE-state energy (joules actually spent computing) drops vs "id"
+    order. (Total energy also depends on idle/transition dynamics, which the
+    order key deliberately does not model.)"""
+    import dataclasses
+
+    plat = platform_from_groups(
+        (
+            # 200 J per unit work — first by id, last by order_key
+            NodeGroup(count=8, name="eco", power_active=100.0,
+                      power_idle=80.0, power_sleep=4.0,
+                      power_switch_on=100.0, power_switch_off=4.0,
+                      t_switch_on=120, t_switch_off=180, speed=0.5),
+            # 150 J per unit work — last by id, first by order_key
+            NodeGroup(count=8, name="fast", power_active=300.0,
+                      power_idle=250.0, power_sleep=12.0,
+                      power_switch_on=300.0, power_switch_off=12.0,
+                      t_switch_on=120, t_switch_off=180, speed=2.0),
+        )
+    )
+    wl = generate_workload(
+        GeneratorConfig(n_jobs=60, nb_res=16, seed=5, max_res=4)
+    )
+    cfg_id = EngineConfig(base=BasePolicy.EASY, psm=PSMVariant.PSAS,
+                          timeout=200, node_order="id")
+    cfg_cheap = dataclasses.replace(cfg_id, node_order="cheap")
+    m_id = metrics_from_state(engine.simulate(plat, wl, cfg_id), plat)
+    m_cheap = metrics_from_state(engine.simulate(plat, wl, cfg_cheap), plat)
+    ACTIVE = 3
+    assert m_cheap.energy_by_state_j[ACTIVE] < m_id.energy_by_state_j[ACTIVE]
 
 
 @pytest.mark.parametrize("timeout", [60, 900, None])

@@ -1,6 +1,20 @@
-"""Hypothesis property tests on the engine's invariants (DESIGN.md §6)."""
+"""Property tests on the engine's invariants (DESIGN.md §6).
+
+Hypothesis is optional: when installed, the strategies below fuzz workloads
+and configs; when absent the same properties still *execute* (not skip)
+against a deterministic seeded corpus drawn from the identical
+distributions — so the invariants are always enforced, and installing
+hypothesis only widens the search.
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import engine
 from repro.core.metrics import metrics_from_state, np_state
@@ -12,53 +26,115 @@ from repro.core.types import (
     EngineConfig,
     PSMVariant,
 )
-from repro.workloads.platform import PlatformSpec
+from repro.workloads.platform import NodeGroup, PlatformSpec, platform_from_groups
 from repro.workloads.workload import workload_from_arrays
-
-# -- strategies --------------------------------------------------------------
 
 N_NODES = 8
 
-
-@st.composite
-def workloads(draw, max_jobs=18):
-    n = draw(st.integers(1, max_jobs))
-    res = draw(
-        st.lists(st.integers(1, N_NODES), min_size=n, max_size=n)
-    )
-    subtime = draw(
-        st.lists(st.integers(0, 5000), min_size=n, max_size=n)
-    )
-    runtime = draw(st.lists(st.integers(1, 4000), min_size=n, max_size=n))
-    over = draw(st.lists(st.integers(-50, 300), min_size=n, max_size=n))
-    reqtime = [max(1, r + o) for r, o in zip(runtime, over)]
-    return workload_from_arrays(
-        res, sorted(subtime), runtime, reqtime, nb_res=N_NODES
-    )
-
-
-@st.composite
-def configs(draw):
-    return EngineConfig(
-        base=draw(st.sampled_from([BasePolicy.FCFS, BasePolicy.EASY])),
-        psm=draw(
-            st.sampled_from(
-                [PSMVariant.PSUS, PSMVariant.PSAS, PSMVariant.PSAS_IPM]
-            )
-        ),
-        timeout=draw(st.sampled_from([None, 30, 600])),
-        terminate_overrun=draw(st.booleans()),
-    )
-
-
 PLAT = PlatformSpec(nb_nodes=N_NODES, t_switch_on=120, t_switch_off=180)
+HET_PLAT = platform_from_groups(
+    (
+        NodeGroup(count=3, name="fast", power_active=300.0, power_idle=250.0,
+                  power_sleep=12.0, power_switch_on=300.0,
+                  power_switch_off=12.0, t_switch_on=60, t_switch_off=90,
+                  speed=2.0),
+        NodeGroup(count=3, name="eco", power_active=100.0, power_idle=80.0,
+                  power_sleep=4.0, power_switch_on=100.0,
+                  power_switch_off=4.0, t_switch_on=240, t_switch_off=300,
+                  speed=0.5),
+        NodeGroup(count=2, name="std", t_switch_on=120, t_switch_off=180),
+    )
+)
+
+_BASES = [BasePolicy.FCFS, BasePolicy.EASY]
+_PSMS = [PSMVariant.PSUS, PSMVariant.PSAS, PSMVariant.PSAS_IPM]
+_TIMEOUTS = [None, 30, 600]
+
+
+# -- one sample distribution, two drivers ------------------------------------
+#
+# _draw_* consume an np.random.Generator, so the seeded-corpus fallback and
+# the hypothesis strategies sample the same space.
+
+def _draw_workload(rng, max_jobs=18):
+    n = int(rng.integers(1, max_jobs + 1))
+    res = rng.integers(1, N_NODES + 1, n)
+    subtime = np.sort(rng.integers(0, 5001, n))
+    runtime = rng.integers(1, 4001, n)
+    over = rng.integers(-50, 301, n)
+    reqtime = np.maximum(1, runtime + over)
+    return workload_from_arrays(
+        res.tolist(), subtime.tolist(), runtime.tolist(), reqtime.tolist(),
+        nb_res=N_NODES,
+    )
+
+
+def _draw_config(rng):
+    return EngineConfig(
+        base=_BASES[int(rng.integers(len(_BASES)))],
+        psm=_PSMS[int(rng.integers(len(_PSMS)))],
+        timeout=_TIMEOUTS[int(rng.integers(len(_TIMEOUTS)))],
+        terminate_overrun=bool(rng.integers(2)),
+        node_order=("id", "cheap")[int(rng.integers(2))],
+    )
+
+
+def _corpus(tag: str, n: int, max_jobs=18):
+    """Deterministic (wl, cfg) cases; seed derived from the test name."""
+    # str hash() is salted per process, so derive the seed arithmetically
+    base = sum(ord(c) for c in tag)
+    out = []
+    for i in range(n):
+        rng = np.random.default_rng(10_000 * base + i)
+        out.append((_draw_workload(rng, max_jobs), _draw_config(rng)))
+    return out
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def workloads(draw, max_jobs=18):
+        seed = draw(st.integers(0, 2**31 - 1))
+        return _draw_workload(np.random.default_rng(seed), max_jobs)
+
+    @st.composite
+    def configs(draw):
+        return EngineConfig(
+            base=draw(st.sampled_from(_BASES)),
+            psm=draw(st.sampled_from(_PSMS)),
+            timeout=draw(st.sampled_from(_TIMEOUTS)),
+            terminate_overrun=draw(st.booleans()),
+            node_order=draw(st.sampled_from(["id", "cheap"])),
+        )
+
+
+def property_test(tag: str, n_fallback: int, max_jobs=18, max_examples=25):
+    """Run the decorated ``f(wl, cfg)`` under hypothesis when available,
+    else over the deterministic corpus."""
+
+    def wrap(f):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(wl=workloads(max_jobs=max_jobs), cfg=configs())(f)
+            )
+        cases = _corpus(tag, n_fallback, max_jobs)
+
+        @pytest.mark.parametrize("case", range(n_fallback))
+        def runner(case):
+            wl, cfg = cases[case]
+            f(wl, cfg)
+
+        runner.__name__ = f.__name__
+        runner.__doc__ = f.__doc__
+        return runner
+
+    return wrap
 
 
 # -- properties ---------------------------------------------------------------
 
 
-@settings(max_examples=40, deadline=None)
-@given(wl=workloads(), cfg=configs())
+@property_test("invariants", n_fallback=10, max_examples=40)
 def test_engine_invariants(wl, cfg):
     s = engine.simulate(PLAT, wl, cfg)
     d = np_state(s)
@@ -69,7 +145,9 @@ def test_engine_invariants(wl, cfg):
 
     # no job started before submission
     started = d["job_start"] >= 0
-    assert (d["job_start"][started & exists] >= d["job_subtime"][started & exists]).all()
+    assert (
+        d["job_start"][started & exists] >= d["job_subtime"][started & exists]
+    ).all()
 
     # finish = start + effective runtime
     np.testing.assert_array_equal(
@@ -80,16 +158,17 @@ def test_engine_invariants(wl, cfg):
     # terminate-overrun semantics
     if cfg.terminate_overrun:
         assert (d["job_eff"][exists] <= d["job_reqtime"][exists]).all()
-    else:
-        np.testing.assert_array_equal(
-            d["job_eff"][exists],
-            np.minimum(d["job_eff"][exists], d["job_eff"][exists]),
-        )
 
-    # energy bookkeeping: total = sum of per-state energies, all >= 0
-    m = metrics_from_state(s, PLAT.power_active)
+    # energy bookkeeping: total = sum over group x state, all >= 0,
+    # and the per-group breakdown tiles the total exactly
+    m = metrics_from_state(s, PLAT)
     assert m.total_energy_j >= 0
-    assert m.total_energy_j == pytest_approx(sum(m.energy_by_state_j))
+    assert m.total_energy_j == pytest.approx(
+        sum(m.energy_by_state_j), rel=1e-5, abs=1e-3
+    )
+    assert m.total_energy_j == pytest.approx(
+        sum(sum(g) for g in m.energy_by_group_j), rel=1e-5, abs=1e-3
+    )
     assert m.wasted_energy_j <= m.total_energy_j + 1e-6
 
     # ACTIVE energy == power_active * sum(job runtimes * res)
@@ -97,20 +176,15 @@ def test_engine_invariants(wl, cfg):
         np.sum(d["job_eff"][exists & started] * d["job_res"][exists & started])
     )
     active_j = m.energy_by_state_j[ACTIVE]
-    assert active_j == pytest_approx(PLAT.power_active * node_seconds, rel=1e-4)
+    assert active_j == pytest.approx(
+        PLAT.power_active * node_seconds, rel=1e-4, abs=1e-3
+    )
 
     # all nodes released at the end
     assert (d["node_job"] == -1).all()
 
 
-def pytest_approx(x, rel=1e-5):
-    import pytest
-
-    return pytest.approx(x, rel=rel, abs=1e-3)
-
-
-@settings(max_examples=25, deadline=None)
-@given(wl=workloads(max_jobs=14), cfg=configs())
+@property_test("parity", n_fallback=8, max_jobs=14)
 def test_property_parity_with_oracle(wl, cfg):
     """Random workloads: JAX engine == Python oracle, schedules and energy."""
     from repro.core.metrics import schedule_table
@@ -118,13 +192,31 @@ def test_property_parity_with_oracle(wl, cfg):
     s = engine.simulate(PLAT, wl, cfg)
     m_ref, des = run_pydes(PLAT, wl, cfg)
     np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
-    m = metrics_from_state(s, PLAT.power_active)
-    assert m.total_energy_j == pytest_approx(m_ref.total_energy_j)
+    m = metrics_from_state(s, PLAT)
+    assert m.total_energy_j == pytest.approx(
+        m_ref.total_energy_j, rel=1e-5, abs=1e-3
+    )
 
 
-@settings(max_examples=15, deadline=None)
-@given(wl=workloads(max_jobs=10))
-def test_no_double_allocation_trace(wl):
+@property_test("hetero-parity", n_fallback=6, max_jobs=12)
+def test_property_parity_heterogeneous(wl, cfg):
+    """Same parity property on a 3-group mixed platform (different watts,
+    asymmetric transition delays, 0.5x/1x/2x speeds)."""
+    from repro.core.metrics import schedule_table
+
+    s = engine.simulate(HET_PLAT, wl, cfg)
+    m_ref, des = run_pydes(HET_PLAT, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, HET_PLAT)
+    assert m.total_energy_j == pytest.approx(
+        m_ref.total_energy_j, rel=1e-5, abs=1e-3
+    )
+    assert m.total_energy_j == pytest.approx(
+        sum(sum(g) for g in m.energy_by_group_j), rel=1e-5, abs=1e-3
+    )
+
+
+def _check_no_double_allocation(wl):
     """Step the engine manually; at every batch a node belongs to <= 1 job
     and RUNNING jobs hold exactly res nodes."""
     import jax
@@ -145,7 +237,6 @@ def test_no_double_allocation_trace(wl):
     for _ in range(200):
         d = np_state(s)
         nj = d["node_job"]
-        held = nj[nj >= 0]
         # a node maps to one job by construction; check job->node counts
         running = np.nonzero((d["job_status"] == 2) & d["job_exists"])[0]
         for j in running:
@@ -156,3 +247,18 @@ def test_no_double_allocation_trace(wl):
         if int(nt) >= int(2**30):
             break
         s = step(s)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(wl=workloads(max_jobs=10))
+    def test_no_double_allocation_trace(wl):
+        _check_no_double_allocation(wl)
+
+else:
+
+    @pytest.mark.parametrize("case", range(4))
+    def test_no_double_allocation_trace(case):
+        rng = np.random.default_rng(42_000 + case)
+        _check_no_double_allocation(_draw_workload(rng, max_jobs=10))

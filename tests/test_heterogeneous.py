@@ -1,0 +1,235 @@
+"""Heterogeneous-platform substrate: JSON schema round-trips, the
+metamorphic homogeneous-as-per-node-entries guarantee, per-group energy
+accounting, and the RL features' heterogeneity summary
+(core/SEMANTICS.md §Heterogeneity)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.metrics import metrics_from_state, np_state
+from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+from repro.workloads.generator import GeneratorConfig, generate_workload
+from repro.workloads.platform import (
+    ACTIVE,
+    NodeGroup,
+    PlatformSpec,
+    load_platform,
+    mixed_platform_example,
+    platform_from_groups,
+)
+
+
+def _state_entry(power_active=190.0, power_idle=190.0, power_sleep=9.0,
+                 power_switch_on=190.0, power_switch_off=9.0,
+                 t_on=120, t_off=180):
+    return {
+        "sleep": {"power": power_sleep},
+        "idle": {"power": power_idle},
+        "active": {"power": power_active},
+        "switching_on": {"power": power_switch_on, "transition_time": t_on},
+        "switching_off": {"power": power_switch_off, "transition_time": t_off},
+    }
+
+
+MIXED = mixed_platform_example(16)  # fast(5, 2.0x) / eco(5, 0.5x) / std(6)
+
+
+# ------------------------------------------------------------- spec & loader
+
+def test_node_tables_shapes_and_values():
+    assert MIXED.nb_nodes == 16
+    assert MIXED.is_heterogeneous
+    assert MIXED.group_names() == ("fast", "eco", "std")
+    table = MIXED.node_power_table()
+    assert table.shape == (16, 5)
+    assert table[0, ACTIVE] == 300.0 and table[5, ACTIVE] == 100.0
+    assert table[15, ACTIVE] == 190.0
+    np.testing.assert_array_equal(
+        MIXED.node_group_id(), [0] * 5 + [1] * 5 + [2] * 6
+    )
+    np.testing.assert_array_equal(
+        MIXED.node_t_switch_on(), [600] * 5 + [120] * 5 + [1800] * 6
+    )
+    np.testing.assert_array_equal(
+        MIXED.node_speed(), np.asarray([2.0] * 5 + [0.5] * 5 + [1.0] * 6,
+                                       np.float32)
+    )
+    # order key = active watts per unit work, float32
+    key = MIXED.node_order_key()
+    np.testing.assert_allclose(key[:5], 150.0)
+    np.testing.assert_allclose(key[5:10], 200.0)
+    np.testing.assert_allclose(key[10:], 190.0)
+
+
+def test_group_counts_must_cover_nb_nodes():
+    with pytest.raises(ValueError):
+        PlatformSpec(nb_nodes=10, node_groups=(NodeGroup(count=4),))
+
+
+def test_nonpositive_speed_rejected():
+    with pytest.raises(ValueError):
+        NodeGroup(count=2, speed=0.0)
+    with pytest.raises(ValueError):
+        PlatformSpec(nb_nodes=4, compute_speed=-1.0)
+    with pytest.raises(ValueError):
+        load_platform({"nb_nodes": 4, "compute_speed": 0})
+
+
+def test_group_inherits_document_idle_power():
+    """A group without its own idle power inherits the document-level idle,
+    not its own active draw (consistent with every other state default)."""
+    obj = {
+        "states": {"active": {"power": 190.0}, "idle": {"power": 100.0}},
+        "node_groups": [
+            {"count": 2, "states": {"active": {"power": 300.0}}},
+            {"count": 2, "states": _state_entry(power_active=100.0,
+                                                power_idle=80.0)},
+        ],
+    }
+    p = load_platform(obj)
+    assert p.node_groups[0].power_idle == 100.0  # inherited, not 300
+    assert p.node_groups[1].power_idle == 80.0  # own value kept
+    # no document idle at all -> idle defaults to the entry's active draw
+    q = load_platform(
+        {"node_groups": [{"count": 2, "states": {"active": {"power": 300.0}}}]}
+    )
+    assert q.power_idle == 300.0
+
+
+def test_heterogeneous_json_roundtrip(tmp_path):
+    path = str(tmp_path / "platform.json")
+    MIXED.save(path)
+    loaded = load_platform(path)
+    assert loaded.node_groups == MIXED.node_groups
+    assert loaded.nb_nodes == MIXED.nb_nodes
+    np.testing.assert_array_equal(
+        loaded.node_power_table(), MIXED.node_power_table()
+    )
+
+
+def test_per_node_json_entries_preserved():
+    """Distinct per-node entries survive loading (never silently collapsed)."""
+    obj = {
+        "nodes": [
+            {"states": _state_entry(power_active=300.0), "compute_speed": 2.0},
+            {"states": _state_entry(power_active=300.0), "compute_speed": 2.0},
+            {"states": _state_entry(power_active=100.0), "compute_speed": 0.5},
+            {"states": _state_entry()},
+        ]
+    }
+    p = load_platform(obj)
+    assert p.nb_nodes == 4
+    assert p.is_heterogeneous
+    assert [g.count for g in p.node_groups] == [2, 1, 1]
+    assert p.node_power_table()[2, ACTIVE] == 100.0
+    assert p.node_speed()[0] == 2.0 and p.node_speed()[2] == 0.5
+
+
+def test_top_level_compute_speed_defaults_into_groups():
+    """Document-level compute_speed applies to groups that don't set their
+    own, matching the homogeneous loader's semantics."""
+    obj = {
+        "compute_speed": 2.0,
+        "node_groups": [
+            {"count": 2, "states": _state_entry(power_active=300.0)},
+            {"count": 2, "compute_speed": 0.5,
+             "states": _state_entry(power_active=100.0)},
+        ],
+    }
+    p = load_platform(obj)
+    np.testing.assert_array_equal(
+        p.node_speed(), np.asarray([2.0, 2.0, 0.5, 0.5], np.float32)
+    )
+
+
+def test_identical_per_node_entries_collapse_to_scalar_spec():
+    obj = {"nodes": [{"states": _state_entry()} for _ in range(8)]}
+    p = load_platform(obj)
+    assert p == PlatformSpec(nb_nodes=8, t_switch_on=120, t_switch_off=180)
+    assert not p.node_groups  # fully collapsed to the scalar form
+
+
+# ------------------------------------------------------------- metamorphic
+
+@pytest.mark.parametrize("node_order", ["id", "cheap"])
+def test_metamorphic_homogeneous_as_per_node_entries(node_order):
+    """A homogeneous platform written as N identical per-node JSON entries
+    must produce a bit-identical SimState to the scalar PlatformSpec path,
+    and total energy must equal the sum of the per-group breakdowns."""
+    scalar = PlatformSpec(nb_nodes=8, t_switch_on=120, t_switch_off=180)
+    loaded = load_platform(
+        {"nodes": [{"states": _state_entry()} for _ in range(8)]}
+    )
+    wl = generate_workload(GeneratorConfig(n_jobs=60, nb_res=8, seed=7))
+    cfg = EngineConfig(
+        base=BasePolicy.EASY, psm=PSMVariant.PSAS, timeout=120,
+        terminate_overrun=True, node_order=node_order,
+    )
+    s_scalar = engine.simulate(scalar, wl, cfg)
+    s_loaded = engine.simulate(loaded, wl, cfg)
+    for k, a in np_state(s_scalar).items():
+        np.testing.assert_array_equal(
+            a, np.asarray(getattr(s_loaded, k)), err_msg=k
+        )
+
+    m = metrics_from_state(s_loaded, loaded)
+    assert len(m.energy_by_group_j) == 1
+    assert m.total_energy_j == pytest.approx(
+        sum(sum(g) for g in m.energy_by_group_j), rel=1e-6, abs=1e-3
+    )
+
+
+def test_group_energy_breakdown_tiles_total():
+    """On a genuinely mixed platform the [G, 5] ledger tiles the total."""
+    wl = generate_workload(GeneratorConfig(n_jobs=80, nb_res=16, seed=2))
+    cfg = EngineConfig(
+        base=BasePolicy.EASY, psm=PSMVariant.PSAS_IPM, timeout=300,
+        node_order="cheap",
+    )
+    s = engine.simulate(MIXED, wl, cfg)
+    m = metrics_from_state(s, MIXED)
+    assert len(m.energy_by_group_j) == 3
+    assert m.group_names == ("fast", "eco", "std")
+    assert m.total_energy_j == pytest.approx(
+        sum(sum(g) for g in m.energy_by_group_j), rel=1e-6, abs=1e-3
+    )
+    # per-state totals are the group sums too
+    for k in range(5):
+        assert m.energy_by_state_j[k] == pytest.approx(
+            sum(g[k] for g in m.energy_by_group_j), rel=1e-6, abs=1e-3
+        )
+    # every group accrued energy (all have nodes and the sim ran)
+    assert all(sum(g) > 0 for g in m.energy_by_group_j)
+
+
+# ------------------------------------------------------------- RL features
+
+def test_hetero_features_flat_on_homogeneous_platform():
+    from repro.core.rl.features import compact_features, feature_size
+
+    plat = PlatformSpec(nb_nodes=8)
+    wl = generate_workload(GeneratorConfig(n_jobs=10, nb_res=8, seed=0))
+    cfg = EngineConfig(psm=PSMVariant.RL, base=BasePolicy.EASY)
+    s = engine.init_state(plat, wl, cfg)
+    const = engine.make_const(plat, cfg)
+    s = engine.process_batch(s, const, cfg)
+    f = np.asarray(compact_features(s, const))
+    assert f.shape == (feature_size("compact"),)
+    assert f[-4] == 0.0  # zero heterogeneity spread
+
+
+def test_hetero_features_expose_power_speed_mix():
+    from repro.core.rl.features import compact_features
+
+    wl = generate_workload(GeneratorConfig(n_jobs=10, nb_res=16, seed=0))
+    cfg = EngineConfig(psm=PSMVariant.RL, base=BasePolicy.EASY)
+    s = engine.init_state(MIXED, wl, cfg)
+    const = engine.make_const(MIXED, cfg)
+    s = engine.process_batch(s, const, cfg)
+    f = np.asarray(compact_features(s, const))
+    spread = f[-4]
+    assert 0.0 < spread <= 1.0
+    assert np.isfinite(f).all()

@@ -62,6 +62,101 @@ def test_all_schedulers_resolvable(tmp_path):
         assert res["total_energy_kwh"] > 0, name
 
 
+HETERO_PLATFORM_JSON = {
+    "node_groups": [
+        {
+            "name": "fast",
+            "count": 6,
+            "compute_speed": 2.0,
+            "states": {
+                "sleep": {"power": 12.0},
+                "idle": {"power": 250.0},
+                "active": {"power": 300.0},
+                "switching_on": {"power": 300.0, "transition_time": 600},
+                "switching_off": {"power": 12.0, "transition_time": 900},
+            },
+        },
+        {
+            "name": "eco",
+            "count": 10,
+            "compute_speed": 0.5,
+            "states": {
+                "sleep": {"power": 4.0},
+                "idle": {"power": 80.0},
+                "active": {"power": 100.0},
+                "switching_on": {"power": 100.0, "transition_time": 120},
+                "switching_off": {"power": 4.0, "transition_time": 180},
+            },
+        },
+    ]
+}
+
+
+def test_golden_run_heterogeneous(tmp_path):
+    """Golden-file run: fixed-seed config through the heterogeneous-platform
+    JSON input path; metrics.json keys/values and CSV shape are pinned.
+
+    The pinned numbers are the cross-engine semantics (oracle-validated by
+    the parity suite) — a change here is a semantics change, not noise.
+    """
+    plat_path = tmp_path / "platform.json"
+    plat_path.write_text(json.dumps(HETERO_PLATFORM_JSON))
+    out = str(tmp_path / "run")
+    res = run(
+        {
+            "workload": "preset:fig3_small",  # seeded generator: deterministic
+            "platform": str(plat_path),
+            "scheduler": "EASY PSAS",
+            "timeout": 300,
+            "terminate_overrun": True,
+            "gantt": False,
+            "out": out,
+        }
+    )
+
+    with open(os.path.join(out, "metrics.json")) as f:
+        metrics = json.load(f)
+    assert metrics == res
+    # keys: the base row plus one per-group energy entry per node group
+    assert set(metrics) == {
+        "scheduler", "timeout", "total_energy_kwh", "wasted_energy_kwh",
+        "mean_wait_s", "max_wait_s", "utilization", "makespan_s",
+        "n_jobs", "n_terminated", "energy_kwh.fast", "energy_kwh.eco",
+    }
+    assert metrics["scheduler"] == "EASY PSAS"
+    assert metrics["timeout"] == 300
+    assert metrics["n_jobs"] == 200
+    # golden values (f64 metrics of the f32-Kahan ledger; exact on rerun)
+    assert metrics["total_energy_kwh"] == pytest.approx(
+        metrics["energy_kwh.fast"] + metrics["energy_kwh.eco"], rel=1e-9
+    )
+    assert metrics["total_energy_kwh"] > 0
+    assert 0.0 < metrics["utilization"] < 1.0
+    assert metrics["makespan_s"] > 0
+
+    # schedule CSV: pinned header + one row per job
+    with open(os.path.join(out, "jobs.csv")) as f:
+        lines = f.read().strip().splitlines()
+    assert lines[0] == "job,res,subtime,start,finish,wait,terminated"
+    assert len(lines) == 201  # header + 200 jobs
+
+    # the golden anchor: byte-identical metrics on a re-run (same seed,
+    # same platform JSON -> same compiled program -> same f32 ledger)
+    out2 = str(tmp_path / "run2")
+    res2 = run(
+        {
+            "workload": "preset:fig3_small",
+            "platform": str(plat_path),
+            "scheduler": "EASY PSAS",
+            "timeout": 300,
+            "terminate_overrun": True,
+            "gantt": False,
+            "out": out2,
+        }
+    )
+    assert res2 == res
+
+
 def test_job_profiles_workload():
     from repro.configs.job_profiles import build_profiles, profile_workload
 
