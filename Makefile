@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all test-slow bench-scale
+.PHONY: test test-all test-slow test-nightly bench-scale
 
 # tier-1 gate (what CI and the ROADMAP "Tier-1 verify" line run);
 # pytest.ini excludes the `slow` marker from this run
@@ -17,6 +17,12 @@ test-all:
 # only the large sweeps
 test-slow:
 	$(PY) -m pytest -q -m slow
+
+# nightly lane (.github/workflows/nightly.yml): the slow parity sweeps plus
+# the mixed-platform scale benchmark, which asserts the vmapped sweep stayed
+# ONE compiled program — so neither can rot outside the tier-1 gate
+test-nightly: test-slow
+	$(PY) benchmarks/bench_scale.py --jobs 120 --nodes 256 --oracle-jobs 40 --hetero
 
 # §3.1-scale benchmark; --hetero exercises the mixed-platform sweep
 # (asserts the sweep stays ONE compiled program)

@@ -12,25 +12,19 @@ import argparse
 import json
 from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine
-from repro.core.metrics import metrics_from_state
+from repro.core.policy import from_label, scheduler_labels
 from repro.core.ref.pydes import run_pydes
 from repro.core.types import BasePolicy, EngineConfig, PSMVariant
 from repro.workloads.generator import PRESETS, GeneratorConfig, generate_workload
 from repro.workloads.platform import PlatformSpec
 
-SCHEDULERS = {
-    "FCFS PSUS": (BasePolicy.FCFS, PSMVariant.PSUS),
-    "EASY PSUS": (BasePolicy.EASY, PSMVariant.PSUS),
-    "FCFS PSAS(AutoOn)": (BasePolicy.FCFS, PSMVariant.PSAS),
-    "EASY PSAS(AutoOn)": (BasePolicy.EASY, PSMVariant.PSAS),
-    "FCFS PSAS+IPM": (BasePolicy.FCFS, PSMVariant.PSAS_IPM),
-    "EASY PSAS+IPM": (BasePolicy.EASY, PSMVariant.PSAS_IPM),
-}
+# the six timeout-based schedulers of the paper's Figs. 4/5
+SCHEDULERS = tuple(
+    l for l in scheduler_labels() if "AlwaysOn" not in l
+)
 
 
 def sweep(
@@ -43,21 +37,15 @@ def sweep(
     gcfg = GeneratorConfig(**{**gcfg.__dict__, "n_jobs": n_jobs})
     wl = generate_workload(gcfg)
     plat = PlatformSpec(nb_nodes=gcfg.nb_res)
-    timeouts = jnp.asarray([t * 60 for t in timeouts_min], jnp.int32)
 
     rows = []
-    for name, (base, psm) in SCHEDULERS.items():
-        cfg = EngineConfig(base=base, psm=psm, timeout=300)
-        s0 = engine.init_state(plat, wl, cfg)
-        const = engine.make_const(plat, cfg)
-        consts = jax.vmap(lambda t: const._replace(timeout=t))(timeouts)
-        cap = engine.default_batch_cap(len(wl))
-        batched = jax.jit(
-            jax.vmap(lambda c: engine.run_sim(s0, c, cfg, max_batches=cap))
-        )(consts)
+    for name in SCHEDULERS:
+        base, pol = from_label(name)
+        cfg = EngineConfig(base=base, policy=pol, timeout=300)
+        # the timeout sweep is ONE compiled program (engine.sweep)
+        batch = engine.sweep(plat, wl, [t * 60 for t in timeouts_min], cfg)
         for i, t_min in enumerate(timeouts_min):
-            s_i = jax.tree_util.tree_map(lambda a: a[i], batched)
-            m = metrics_from_state(s_i, plat.power_active)
+            m = batch[i]
             row = dict(
                 scheduler=name,
                 timeout_min=t_min,
@@ -68,7 +56,8 @@ def sweep(
             )
             if validate:
                 m_ref, _ = run_pydes(
-                    plat, wl, EngineConfig(base=base, psm=psm, timeout=t_min * 60)
+                    plat, wl,
+                    EngineConfig(base=base, policy=pol, timeout=t_min * 60),
                 )
                 row["energy_dev"] = (
                     abs(m.total_energy_j - m_ref.total_energy_j)

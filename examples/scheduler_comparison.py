@@ -10,23 +10,14 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
-
 from repro.core import engine
-from repro.core.metrics import metrics_from_state
-from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+from repro.core.policy import from_label, scheduler_labels
+from repro.core.types import EngineConfig
 from repro.workloads.generator import PRESETS, GeneratorConfig, generate_workload
 from repro.workloads.platform import PlatformSpec
 
-SCHEDULERS = {
-    "FCFS PSUS": (BasePolicy.FCFS, PSMVariant.PSUS),
-    "EASY PSUS": (BasePolicy.EASY, PSMVariant.PSUS),
-    "FCFS PSAS(AutoOn)": (BasePolicy.FCFS, PSMVariant.PSAS),
-    "EASY PSAS(AutoOn)": (BasePolicy.EASY, PSMVariant.PSAS),
-    "FCFS PSAS+IPM": (BasePolicy.FCFS, PSMVariant.PSAS_IPM),
-    "EASY PSAS+IPM": (BasePolicy.EASY, PSMVariant.PSAS_IPM),
-}
+# the six timeout-based schedulers (policy.from_label registry)
+SCHEDULERS = tuple(l for l in scheduler_labels() if "AlwaysOn" not in l)
 TIMEOUTS_MIN = [5, 10, 20, 30, 45, 60]
 
 
@@ -34,24 +25,15 @@ def main():
     gcfg = GeneratorConfig(**{**PRESETS["nasa_ipsc"].__dict__, "n_jobs": 500})
     wl = generate_workload(gcfg)
     plat = PlatformSpec(nb_nodes=gcfg.nb_res)  # paper Table 3 power model
-    timeouts = jnp.asarray([t * 60 for t in TIMEOUTS_MIN], jnp.int32)
 
     results = {}
     print(f"{'scheduler':20s} " + " ".join(f"t={t:>3d}m" for t in TIMEOUTS_MIN))
-    for name, (base, psm) in SCHEDULERS.items():
-        cfg = EngineConfig(base=base, psm=psm, timeout=300)
-        s0 = engine.init_state(plat, wl, cfg)
-        const = engine.make_const(plat, cfg)
-        consts = jax.vmap(lambda t: const._replace(timeout=t))(timeouts)
-        cap = engine.default_batch_cap(len(wl))
-        batched = jax.jit(
-            jax.vmap(lambda c: engine.run_sim(s0, c, cfg, max_batches=cap))
-        )(consts)
-        ms = [
-            metrics_from_state(jax.tree_util.tree_map(lambda a: a[i], batched),
-                               plat.power_active)
-            for i in range(len(TIMEOUTS_MIN))
-        ]
+    for name in SCHEDULERS:
+        base, pol = from_label(name)
+        cfg = EngineConfig(base=base, policy=pol, timeout=300)
+        # one compiled program per scheduler: engine.sweep vmaps the timeouts
+        batch = engine.sweep(plat, wl, [t * 60 for t in TIMEOUTS_MIN], cfg)
+        ms = list(batch.metrics)
         results[name] = ms
         print(
             f"{name:20s} "

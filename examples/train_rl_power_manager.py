@@ -56,6 +56,11 @@ def main():
         "--curriculum", action="store_true",
         help="staged workload-difficulty ramp (paper ref [7] analogue)",
     )
+    ap.add_argument(
+        "--save", default=None, metavar="DIR",
+        help="save the trained policy (versioned header) so "
+             "`repro.launch.sim --scheduler 'EASY RL'` can load it",
+    )
     args = ap.parse_args()
 
     plat = PlatformSpec(nb_nodes=args.nodes, t_switch_on=600, t_switch_off=900)
@@ -118,6 +123,19 @@ def main():
     early = float(np.mean([h["mean_reward"] for h in history[:10]]))
     late = float(np.mean([h["mean_reward"] for h in history[-10:]]))
     print(f"mean reward: first 10 updates {early:+.4f} -> last 10 {late:+.4f}")
+
+    if args.save:
+        from repro.training.checkpoint import save_policy
+
+        save_policy(
+            args.save, params,
+            obs_size=ecfg.obs_size, n_actions=ecfg.n_actions,
+            feature=ecfg.feature, action=ecfg.action,
+            n_levels=ecfg.n_action_levels, hidden=acfg.hidden,
+            feature_window=ecfg.feature_window,
+            grouped=ecfg.engine.policy.grouped, n_groups=ecfg.n_groups,
+        )
+        print(f"policy checkpoint -> {args.save}")
 
     print("\nevaluation on held-out workloads (energy kWh / mean wait s):")
     print(f"{'policy':28s} {'energy':>10s} {'wait':>8s}")

@@ -1,15 +1,28 @@
 # The paper's primary contribution: an event-batched, power-state-aware HPC
 # scheduling simulator with an RL interface, vectorized for TPU (see
 # core/SEMANTICS.md for the exact engine contract shared with the Python
-# reference oracle in core/ref/pydes.py).
+# reference oracle in core/ref/pydes.py). Power management is a composable
+# policy layer (core/policy.py); PSMVariant survives as a deprecation shim.
 from repro.core.types import (
     BasePolicy,
     EngineConfig,
     PSMVariant,
     SimMetrics,
 )
+from repro.core.policy import (
+    IPM,
+    AlwaysOn,
+    PowerPolicy,
+    RLController,
+    TimeoutSleep,
+    from_label,
+    label_of,
+    policy_from_psm,
+    scheduler_labels,
+)
 from repro.core.engine import (
     EngineConst,
+    SimBatch,
     SimState,
     init_state,
     make_const,
@@ -18,6 +31,7 @@ from repro.core.engine import (
     run_sim,
     run_sim_gantt,
     simulate,
+    sweep,
 )
 from repro.core.metrics import metrics_from_state, schedule_table
 
@@ -26,7 +40,17 @@ __all__ = [
     "EngineConfig",
     "PSMVariant",
     "SimMetrics",
+    "PowerPolicy",
+    "AlwaysOn",
+    "TimeoutSleep",
+    "IPM",
+    "RLController",
+    "from_label",
+    "label_of",
+    "policy_from_psm",
+    "scheduler_labels",
     "EngineConst",
+    "SimBatch",
     "SimState",
     "init_state",
     "make_const",
@@ -35,6 +59,7 @@ __all__ = [
     "run_sim",
     "run_sim_gantt",
     "simulate",
+    "sweep",
     "metrics_from_state",
     "schedule_table",
 ]

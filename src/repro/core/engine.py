@@ -15,16 +15,22 @@ a single compiled program).
 Static configuration (policy structure, window size, node ordering mode)
 lives in :class:`EngineConfig`; dynamic per-run values (timeout, per-node
 transition times, per-node powers and speeds) live in :class:`EngineConst`
-so parameter sweeps don't recompile. Heterogeneous platforms (mixed node
-groups with different power models, transition delays, and compute speeds)
-are first-class: every node-indexed quantity is a per-node table and energy
-is accounted per node group (core/SEMANTICS.md §Heterogeneity).
+so parameter sweeps don't recompile — :func:`sweep` is the public batched
+driver (stacked :class:`EngineConst`, one compiled program per sweep).
+Heterogeneous platforms (mixed node groups with different power models,
+transition delays, and compute speeds) are first-class: every node-indexed
+quantity is a per-node table and energy is accounted per node group
+(core/SEMANTICS.md §Heterogeneity).
+
+Power management is composable: :func:`process_batch` calls the hooks of
+``cfg.policy`` (a :class:`repro.core.policy.PowerPolicy`) instead of
+branching on an enum — adding a policy never touches this file.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import Any, Mapping, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +49,7 @@ from repro.core.types import (
     WAITING,
     BasePolicy,
     EngineConfig,
-    PSMVariant,
+    SimMetrics,
 )
 from repro.workloads.platform import PlatformSpec
 from repro.workloads.workload import Workload
@@ -102,7 +108,8 @@ class SimState(NamedTuple):
     n_completions: jax.Array
     n_switch_on: jax.Array
     n_switch_off: jax.Array
-    # RL pending commands (#nodes to wake / to sleep at the next batch)
+    # RL pending commands: i32[G] per-group (#nodes to wake / sleep at the
+    # next batch; global-action mode reads the vector sums — core/policy.py)
     rl_on_cmd: jax.Array
     rl_off_cmd: jax.Array
 
@@ -129,7 +136,10 @@ def make_const(
         t_on = jnp.asarray(platform.node_t_switch_on(), I32)
         t_off = jnp.asarray(platform.node_t_switch_off(), I32)
         speed = jnp.asarray(platform.node_speed(), jnp.float32)
-        order_key = jnp.asarray(platform.node_order_key(), jnp.float32)
+        if config.node_order == "idle-watts":
+            order_key = power[:, IDLE]
+        else:
+            order_key = jnp.asarray(platform.node_order_key(), jnp.float32)
         group_id = jnp.asarray(platform.node_group_id(), I32)
     else:
         # homogeneous: broadcast the scalars lazily (no N-sized host copies)
@@ -141,8 +151,13 @@ def make_const(
         speed = jnp.broadcast_to(
             jnp.asarray(platform.speed(), jnp.float32), (N,)
         )
-        # same f32 expression as PlatformSpec.node_order_key()
-        key = np.float32(platform.power_active) / np.float32(platform.speed())
+        if config.node_order == "idle-watts":
+            key = np.float32(platform.power_idle)
+        else:
+            # same f32 expression as PlatformSpec.node_order_key()
+            key = np.float32(platform.power_active) / np.float32(
+                platform.speed()
+            )
         order_key = jnp.broadcast_to(jnp.asarray(key, jnp.float32), (N,))
         group_id = jnp.zeros(N, I32)
     return EngineConst(
@@ -220,8 +235,8 @@ def init_state(
         n_completions=jnp.asarray(0, I32),
         n_switch_on=jnp.asarray(0, I32),
         n_switch_off=jnp.asarray(0, I32),
-        rl_on_cmd=jnp.asarray(0, I32),
-        rl_off_cmd=jnp.asarray(0, I32),
+        rl_on_cmd=jnp.zeros(G, I32),
+        rl_off_cmd=jnp.zeros(G, I32),
     )
 
 
@@ -234,9 +249,9 @@ def _clamp_job(idx: jax.Array) -> jax.Array:
 
 
 def _ready_times(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
-    """Variant-specific node ready times (SEMANTICS.md table); INF for ACTIVE."""
+    """Policy-specific node ready times (SEMANTICS.md table); INF for ACTIVE."""
     t = s.t
-    if cfg.psm in (PSMVariant.PSUS, PSMVariant.NONE, PSMVariant.RL):
+    if cfg.policy.eager_ready:
         ready = jnp.full_like(s.node_state, 0) + t
         return jnp.where(s.node_state == ACTIVE, INF, ready)
     ready = jnp.select(
@@ -255,11 +270,6 @@ def _ready_times(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Arra
         default=jnp.broadcast_to(INF, s.node_state.shape),
     )
     return ready.astype(I32)
-
-
-def _queued_demand(s: SimState) -> jax.Array:
-    waiting = (s.job_status == WAITING) & (s.job_subtime <= s.t)
-    return jnp.sum(jnp.where(waiting, s.job_res, 0))
 
 
 def _kahan_add(energy, comp, delta):
@@ -325,20 +335,21 @@ def _try_allocate(s, const, cfg, j, shadow, extra):
     ``order_key`` term is dropped, reproducing the homogeneous tie-breaking
     ``(ready, nid)``; with ``"cheap"`` the per-node ``const.order_key``
     (active watts per unit work, lower first) steers allocation onto
-    cheap/fast nodes.
+    cheap/fast nodes, and with ``"idle-watts"`` the key is the node's idle
+    draw (prefer nodes that are cheapest to leave powered).
 
-    PSUS-family variants ignore power states, so every eligible node has
+    Eager-ready policies ignore power states, so every eligible node has
     ready == t: under "id" ordering selection degenerates to "first res_j
     unreserved by id", an O(N) cumsum instead of an O(N log N) argsort — the
     §Perf item that makes 11 200-node platforms cheap (oracle tie-breaking
-    (ready, nid) is preserved: all keys equal -> lowest id). Under "cheap"
-    it is a single argsort of the order key.
+    (ready, nid) is preserved: all keys equal -> lowest id). Under a key
+    ordering it is a single argsort of the order key.
     """
     eligible = s.node_job < 0
     res_j = s.job_res[j]
     n_elig = jnp.sum(eligible, dtype=I32)
-    sel_by_key = cfg.node_order == "cheap"
-    if cfg.psm in (PSMVariant.PSUS, PSMVariant.NONE, PSMVariant.RL):
+    sel_by_key = cfg.node_order != "id"
+    if cfg.policy.eager_ready:
         if sel_by_key:
             key = jnp.where(eligible, const.order_key, jnp.inf)
             order = jnp.argsort(key, stable=True)  # (order_key, nid)
@@ -490,89 +501,17 @@ def _start_jobs(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
     )
 
 
-def _timeout_switch_off(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
-    if cfg.psm in (PSMVariant.NONE, PSMVariant.RL):
-        return s
-    cand = (
-        (s.node_job < 0)
-        & (s.node_state == IDLE)
-        & (s.t - s.node_idle_since >= const.timeout)
-    )
-    n_cand = jnp.sum(cand, dtype=I32)
-    if cfg.psm == PSMVariant.PSAS_IPM:
-        avail = jnp.sum(
-            (s.node_job < 0)
-            & ((s.node_state == IDLE) | (s.node_state == SWITCHING_ON)),
-            dtype=I32,
-        )
-        allowed = jnp.maximum(avail - _queued_demand(s), 0)
-    else:
-        allowed = jnp.asarray(s.node_state.shape[0], I32)
-    k = jnp.minimum(n_cand, allowed)
-    key = jnp.where(cand, s.node_idle_since, INF)  # longest idle first
-    order = jnp.argsort(key, stable=True)
-    sel_sorted = jnp.arange(key.shape[0]) < k
-    sel = jnp.zeros_like(cand).at[order].set(sel_sorted) & cand
-    return s._replace(
-        node_state=jnp.where(sel, SWITCHING_OFF, s.node_state),
-        node_until=jnp.where(sel, s.t + const.t_off, s.node_until),
-        n_switch_off=s.n_switch_off + jnp.sum(sel, dtype=I32),
-    )
-
-
-def _ipm_wake(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
-    if cfg.psm != PSMVariant.PSAS_IPM:
-        return s
-    avail = jnp.sum(
-        (s.node_job < 0)
-        & ((s.node_state == IDLE) | (s.node_state == SWITCHING_ON)),
-        dtype=I32,
-    )
-    deficit = _queued_demand(s) - avail
-    cand = (s.node_job < 0) & (s.node_state == SLEEP)
-    sel = cand & (jnp.cumsum(cand) <= deficit)  # lowest id first
-    return s._replace(
-        node_state=jnp.where(sel, SWITCHING_ON, s.node_state),
-        node_until=jnp.where(sel, s.t + const.t_on, s.node_until),
-        n_switch_on=s.n_switch_on + jnp.sum(sel, dtype=I32),
-    )
-
-
-def _apply_rl_commands(s: SimState, const: EngineConst) -> SimState:
-    """Rule 8: wake lowest-id sleeping; sleep longest-idle unreserved-idle."""
-    cand_on = (s.node_job < 0) & (s.node_state == SLEEP)
-    sel_on = cand_on & (jnp.cumsum(cand_on) <= s.rl_on_cmd)
-    cand_off = (s.node_job < 0) & (s.node_state == IDLE)
-    key = jnp.where(cand_off, s.node_idle_since, INF)
-    order = jnp.argsort(key, stable=True)
-    k = jnp.minimum(jnp.sum(cand_off, dtype=I32), s.rl_off_cmd)
-    sel_sorted = jnp.arange(key.shape[0]) < k
-    sel_off = jnp.zeros_like(cand_off).at[order].set(sel_sorted) & cand_off
-    state = jnp.where(sel_on, SWITCHING_ON, s.node_state)
-    state = jnp.where(sel_off, SWITCHING_OFF, state)
-    until = jnp.where(sel_on, s.t + const.t_on, s.node_until)
-    until = jnp.where(sel_off, s.t + const.t_off, until)
-    return s._replace(
-        node_state=state,
-        node_until=until,
-        rl_on_cmd=jnp.asarray(0, I32),
-        rl_off_cmd=jnp.asarray(0, I32),
-        n_switch_on=s.n_switch_on + jnp.sum(sel_on, dtype=I32),
-        n_switch_off=s.n_switch_off + jnp.sum(sel_off, dtype=I32),
-    )
-
-
 def process_batch(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
-    """One atomic event batch at time s.t (SEMANTICS.md rules 1-8)."""
+    """One atomic event batch at time s.t (SEMANTICS.md rules 1-8).
+
+    Rules 6-8 (the power-management step) are the policy's ``post_schedule``
+    hook — this function contains no policy-variant branching.
+    """
     s = _complete_jobs(s)
     s = _complete_transitions(s, const)
     s = _scheduler_pass(s, const, cfg)
     s = _start_jobs(s, const, cfg)
-    if cfg.psm == PSMVariant.RL:
-        s = _apply_rl_commands(s, const)
-    else:
-        s = _timeout_switch_off(s, const, cfg)
-        s = _ipm_wake(s, const, cfg)
+    s = cfg.policy.post_schedule(s, const, cfg)
     return s._replace(n_batches=s.n_batches + 1)
 
 
@@ -581,7 +520,13 @@ def process_batch(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimStat
 # ---------------------------------------------------------------------------
 
 def next_time(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
-    """Earliest strictly-future event time (INF when none)."""
+    """Earliest strictly-future event time (INF when none).
+
+    Base candidates (arrivals, finishes, transition completions) plus the
+    policy's ``next_event_candidates`` hook (timeout expiries, RL ticks).
+    Policy candidates may be <= t; they are clamped out here so an
+    expired-but-guard-blocked candidate can never wedge the clock.
+    """
     t = s.t
     waiting_future = (s.job_status == WAITING) & (s.job_subtime > t)
     arr = jnp.min(jnp.where(waiting_future, s.job_subtime, INF))
@@ -589,14 +534,10 @@ def next_time(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
     fin = jnp.min(jnp.where(running & (s.job_finish > t), s.job_finish, INF))
     trans = (s.node_state == SWITCHING_ON) | (s.node_state == SWITCHING_OFF)
     tr = jnp.min(jnp.where(trans & (s.node_until > t), s.node_until, INF))
-    cands = [arr, fin, tr]
-    if cfg.psm not in (PSMVariant.NONE, PSMVariant.RL) and cfg.timeout is not None:
-        idle_unres = (s.node_job < 0) & (s.node_state == IDLE)
-        expiry = s.node_idle_since + const.timeout
-        to = jnp.min(jnp.where(idle_unres & (expiry > t), expiry, INF))
-        cands.append(to)
-    if cfg.psm == PSMVariant.RL:
-        cands.append(t + const.rl_interval)
+    cands = [arr, fin, tr] + [
+        jnp.where(c > t, c, INF)
+        for c in cfg.policy.next_event_candidates(s, const, cfg)
+    ]
     return functools.reduce(jnp.minimum, cands).astype(I32)
 
 
@@ -718,3 +659,164 @@ def simulate(
     if jit:
         fn = jax.jit(fn, static_argnames=())
     return fn(s, const)
+
+
+# batched sweep driver -----------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SimBatch:
+    """Result of :func:`sweep`: K scenarios run as one compiled program.
+
+    ``states`` is the stacked final :class:`SimState` (leading axis K);
+    ``metrics[i]`` the i-th scenario's :class:`SimMetrics`. ``n_compiles``
+    is the cumulative compile count of the underlying jitted program (None
+    on JAX versions without the ``_cache_size`` introspection API) — the
+    no-recompile guarantee asserted by ``benchmarks/bench_scale.py``.
+    """
+
+    states: SimState
+    metrics: Tuple[SimMetrics, ...]
+    n_compiles: Optional[int]
+
+    def __len__(self) -> int:
+        return len(self.metrics)
+
+    def __getitem__(self, i: int) -> SimMetrics:
+        return self.metrics[i]
+
+    def state_at(self, i: int) -> SimState:
+        return jax.tree_util.tree_map(lambda a: a[i], self.states)
+
+    def rows(self) -> Tuple[dict, ...]:
+        return tuple(m.row() for m in self.metrics)
+
+
+# jitted sweep programs, keyed by (config, shapes): repeated sweeps with the
+# same static configuration reuse one compiled program across calls
+_SWEEP_FNS: dict = {}
+
+
+def _sets_finite_timeout(scenario) -> bool:
+    """True when a sweep scenario carries a finite timeout override — any
+    form of one: int, mapping with a "timeout" key, or prebuilt EngineConst.
+    Such scenarios need config.timeout set, or the compiled program lacks
+    the timeout-expiry event candidate and the results are silently wrong."""
+    if isinstance(scenario, bool) or scenario is None:
+        return False
+    if isinstance(scenario, (int, np.integer)):
+        return True
+    value = None
+    if isinstance(scenario, Mapping) and "timeout" in scenario:
+        value = scenario["timeout"]
+    elif isinstance(scenario, EngineConst):
+        value = scenario.timeout
+    if value is None:
+        return False
+    try:
+        return int(np.asarray(value)) != int(INF_TIME)
+    except Exception:  # traced/abstract value: assume it is a real timeout
+        return True
+
+
+def _scenario_const(
+    scenario, base_const: EngineConst, platform: PlatformSpec, config: EngineConfig
+) -> Tuple[EngineConst, PlatformSpec]:
+    if isinstance(scenario, EngineConst):
+        return scenario, platform
+    if isinstance(scenario, PlatformSpec):
+        if (
+            scenario.nb_nodes != platform.nb_nodes
+            or scenario.n_groups() != platform.n_groups()
+        ):
+            raise ValueError(
+                "sweep platforms must share node count and group count "
+                f"(base {platform.nb_nodes} nodes/{platform.n_groups()} "
+                f"groups, scenario {scenario.nb_nodes}/"
+                f"{scenario.n_groups()}); shapes are part of the compiled "
+                "program"
+            )
+        return make_const(scenario, config), scenario
+    if isinstance(scenario, Mapping):
+        return (
+            base_const._replace(
+                **{k: jnp.asarray(v) for k, v in scenario.items()}
+            ),
+            platform,
+        )
+    if scenario is None or isinstance(scenario, (int, np.integer)):
+        t = int(INF_TIME) if scenario is None else int(scenario)
+        return base_const._replace(timeout=jnp.asarray(t, I32)), platform
+    raise TypeError(
+        f"unsupported sweep scenario {scenario!r}: expected an int timeout, "
+        "None, a PlatformSpec, an EngineConst, or a mapping of EngineConst "
+        "field overrides"
+    )
+
+
+def sweep(
+    platform: PlatformSpec,
+    workload: Workload,
+    scenarios: Sequence[Any],
+    config: Optional[EngineConfig] = None,
+    job_capacity: Optional[int] = None,
+) -> SimBatch:
+    """Run K scenarios as ONE compiled program (vmapped :func:`run_sim`).
+
+    Each scenario is an :class:`EngineConst` axis point sharing ``config``'s
+    static structure: an int (timeout override, None = never), a
+    :class:`PlatformSpec` with the same node/group counts (full per-node
+    power/speed/delay tables are traced operands), a mapping of EngineConst
+    field overrides, or a prebuilt EngineConst. The stacked consts are
+    vmapped over, so the whole sweep compiles once; per-scenario
+    :class:`SimMetrics` come back in a :class:`SimBatch`.
+
+    Replaces the ad-hoc ``jax.vmap(... _replace(timeout=t))`` loops that
+    benchmarks and examples used to hand-roll.
+    """
+    config = config or EngineConfig()
+    scenarios = list(scenarios)
+    if not scenarios:
+        raise ValueError("sweep needs at least one scenario")
+    if config.timeout is None and any(map(_sets_finite_timeout, scenarios)):
+        # cfg.timeout gates the timeout-expiry event candidate at trace time
+        raise ValueError(
+            "sweeping timeouts requires config.timeout to be set (any "
+            "placeholder value); config.timeout=None compiles the program "
+            "without the timeout-expiry event"
+        )
+    base_const = make_const(platform, config)
+    consts, plats = [], []
+    for sc in scenarios:
+        c, p = _scenario_const(sc, base_const, platform, config)
+        consts.append(c)
+        plats.append(p)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *consts)
+
+    s0 = init_state(platform, workload, config, job_capacity=job_capacity)
+    cap = config.max_batches or default_batch_cap(len(workload))
+    key = (config, platform.nb_nodes, platform.n_groups(),
+           int(s0.job_status.shape[0]), cap)
+    fn = _SWEEP_FNS.get(key)
+    if fn is None:
+        fn = jax.jit(
+            jax.vmap(
+                lambda s, c: run_sim(s, c, config, max_batches=cap),
+                in_axes=(None, 0),
+            )
+        )
+        _SWEEP_FNS[key] = fn
+    out = fn(s0, stacked)
+    jax.block_until_ready(out.energy)
+    cache_size = getattr(fn, "_cache_size", None)
+    n_compiles = cache_size() if callable(cache_size) else None
+
+    from repro.core.metrics import metrics_from_state  # avoid import cycle
+
+    metrics = tuple(
+        metrics_from_state(
+            jax.tree_util.tree_map(lambda a, i=i: a[i], out), plats[i]
+        )
+        for i in range(len(scenarios))
+    )
+    return SimBatch(states=out, metrics=metrics, n_compiles=n_compiles)

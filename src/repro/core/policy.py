@@ -1,0 +1,389 @@
+"""Composable power-policy layer (core/SEMANTICS.md §Policy hooks).
+
+The engines used to branch on a ``PSMVariant`` enum in five separate
+functions; every new power-management idea meant editing the engine core.
+Here each policy is a frozen config dataclass that contributes three hooks,
+composed by ``engine.process_batch`` / ``PyDES._process_batch``:
+
+* ``eager_ready``           — scheduling ignores power states (the PSUS-family
+                              fast path of the ready-time table),
+* ``post_schedule``         — the power-management step after job starts
+                              (SEMANTICS.md rules 6-8: switch-off / wake / RL),
+* ``next_event_candidates`` — extra wake-up times for the time advance.
+
+Each hook has a JAX implementation (operating on ``SimState``) and a ``_ref``
+twin operating on the sequential Python oracle (``core/ref/pydes.py``) —
+both engines stay bit-exact per policy, enforced by the parity suite.
+Policies are static engine configuration: hashable frozen dataclasses, so an
+``EngineConfig`` remains a valid jit cache key.
+
+``PSMVariant`` survives only as a deprecation shim (`policy_from_psm`);
+``from_label`` is the single scheduler-string registry consumed by
+``launch/sim.py``, the benchmarks, and the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import (
+    ACTIVE,
+    IDLE,
+    INF_TIME,
+    SLEEP,
+    SWITCHING_OFF,
+    SWITCHING_ON,
+    WAITING,
+    BasePolicy,
+    PSMVariant,
+)
+
+I32 = jnp.int32
+INF = jnp.asarray(INF_TIME, I32)
+
+
+# ---------------------------------------------------------------------------
+# shared JAX rule implementations (SEMANTICS.md rules 6-8)
+# ---------------------------------------------------------------------------
+
+def queued_demand(s) -> jax.Array:
+    waiting = (s.job_status == WAITING) & (s.job_subtime <= s.t)
+    return jnp.sum(jnp.where(waiting, s.job_res, 0))
+
+
+def timeout_switch_off(s, const, ipm_cap: bool):
+    """Rule 6: switch off expired idle nodes, longest-idle first (ties by id).
+
+    ``ipm_cap=True`` (PSAS+IPM) caps the count so available capacity never
+    drops below queued demand.
+    """
+    cand = (
+        (s.node_job < 0)
+        & (s.node_state == IDLE)
+        & (s.t - s.node_idle_since >= const.timeout)
+    )
+    n_cand = jnp.sum(cand, dtype=I32)
+    if ipm_cap:
+        avail = jnp.sum(
+            (s.node_job < 0)
+            & ((s.node_state == IDLE) | (s.node_state == SWITCHING_ON)),
+            dtype=I32,
+        )
+        allowed = jnp.maximum(avail - queued_demand(s), 0)
+    else:
+        allowed = jnp.asarray(s.node_state.shape[0], I32)
+    k = jnp.minimum(n_cand, allowed)
+    key = jnp.where(cand, s.node_idle_since, INF)  # longest idle first
+    order = jnp.argsort(key, stable=True)
+    sel_sorted = jnp.arange(key.shape[0]) < k
+    sel = jnp.zeros_like(cand).at[order].set(sel_sorted) & cand
+    return s._replace(
+        node_state=jnp.where(sel, SWITCHING_OFF, s.node_state),
+        node_until=jnp.where(sel, s.t + const.t_off, s.node_until),
+        n_switch_off=s.n_switch_off + jnp.sum(sel, dtype=I32),
+    )
+
+
+def ipm_wake(s, const):
+    """Rule 7: wake sleeping nodes (lowest id first) to cover queued demand."""
+    avail = jnp.sum(
+        (s.node_job < 0)
+        & ((s.node_state == IDLE) | (s.node_state == SWITCHING_ON)),
+        dtype=I32,
+    )
+    deficit = queued_demand(s) - avail
+    cand = (s.node_job < 0) & (s.node_state == SLEEP)
+    sel = cand & (jnp.cumsum(cand) <= deficit)  # lowest id first
+    return s._replace(
+        node_state=jnp.where(sel, SWITCHING_ON, s.node_state),
+        node_until=jnp.where(sel, s.t + const.t_on, s.node_until),
+        n_switch_on=s.n_switch_on + jnp.sum(sel, dtype=I32),
+    )
+
+
+def _select_longest_idle(cand, idle_since, k):
+    """Boolean mask of the k longest-idle candidates (ties by node id)."""
+    key = jnp.where(cand, idle_since, INF)
+    order = jnp.argsort(key, stable=True)
+    k = jnp.minimum(jnp.sum(cand, dtype=I32), k)
+    sel_sorted = jnp.arange(key.shape[0]) < k
+    return jnp.zeros_like(cand).at[order].set(sel_sorted) & cand
+
+
+def apply_rl_commands(s, const, grouped: bool = False):
+    """Rule 8: apply pending RL power commands, then clear them.
+
+    ``rl_on_cmd``/``rl_off_cmd`` are ``i32[G]`` per-group command vectors.
+
+    * global mode (``grouped=False``): the effective counts are the vector
+      sums; selection is cluster-wide (wake lowest-id sleeping, sleep
+      longest-idle unreserved-idle) — bit-exact with the legacy scalar
+      commands.
+    * grouped mode: each group g wakes up to ``on[g]`` of *its* sleeping
+      nodes (lowest id first) and sleeps up to ``off[g]`` of *its* unreserved
+      idle nodes (longest idle first); groups are independent, so the
+      expensive island can be slept while the cheap one is woken in one step.
+    """
+    cand_on = (s.node_job < 0) & (s.node_state == SLEEP)
+    cand_off = (s.node_job < 0) & (s.node_state == IDLE)
+    G = s.rl_on_cmd.shape[0]
+    if grouped:
+        same = const.group_id[None, :] == jnp.arange(G, dtype=I32)[:, None]
+        ranks_on = jnp.cumsum(cand_on[None, :] & same, axis=1)  # [G, N]
+        sel_on = cand_on & jnp.any(
+            same & (ranks_on <= s.rl_on_cmd[:, None]), axis=0
+        )
+        sel_off_g = jax.vmap(_select_longest_idle, in_axes=(0, None, 0))(
+            cand_off[None, :] & same, s.node_idle_since, s.rl_off_cmd
+        )
+        sel_off = jnp.any(sel_off_g, axis=0)
+    else:
+        sel_on = cand_on & (jnp.cumsum(cand_on) <= jnp.sum(s.rl_on_cmd))
+        sel_off = _select_longest_idle(
+            cand_off, s.node_idle_since, jnp.sum(s.rl_off_cmd)
+        )
+    state = jnp.where(sel_on, SWITCHING_ON, s.node_state)
+    state = jnp.where(sel_off, SWITCHING_OFF, state)
+    until = jnp.where(sel_on, s.t + const.t_on, s.node_until)
+    until = jnp.where(sel_off, s.t + const.t_off, until)
+    return s._replace(
+        node_state=state,
+        node_until=until,
+        rl_on_cmd=jnp.zeros(G, I32),
+        rl_off_cmd=jnp.zeros(G, I32),
+        n_switch_on=s.n_switch_on + jnp.sum(sel_on, dtype=I32),
+        n_switch_off=s.n_switch_off + jnp.sum(sel_off, dtype=I32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the policy protocol
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PowerPolicy:
+    """Base protocol: a no-op power manager (never sleeps anything).
+
+    Subclasses override the hooks below. All hooks are pure; the JAX set
+    operates on ``engine.SimState``, the ``_ref`` set on a ``PyDES``
+    instance — implement both for any new policy (SEMANTICS.md).
+    """
+
+    @property
+    def eager_ready(self) -> bool:
+        """True: scheduling treats every non-ACTIVE node as ready at t."""
+        return True
+
+    # ---- JAX engine hooks ----
+    def post_schedule(self, s, const, cfg):
+        return s
+
+    def next_event_candidates(self, s, const, cfg) -> List[jax.Array]:
+        return []
+
+    # ---- sequential-oracle hooks ----
+    def post_schedule_ref(self, des) -> None:
+        return None
+
+    def next_event_candidates_ref(self, des) -> List[float]:
+        return []
+
+    def psm_label(self) -> str:
+        return "AlwaysOn"
+
+
+@dataclasses.dataclass(frozen=True)
+class AlwaysOn(PowerPolicy):
+    """Classic always-on baseline: nodes never sleep (legacy PSM ``NONE``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeoutSleep(PowerPolicy):
+    """Idle-timeout switch-off (legacy PSUS / PSAS).
+
+    ``transition_aware=False`` (PSUS): scheduling ignores power states — jobs
+    simply wait for rule-5 wake-ups, keeping the O(N) allocation fast path.
+    ``transition_aware=True`` (PSAS "Auto On"): ready times account for
+    transition delays (the SEMANTICS.md variant table's right column).
+    """
+
+    transition_aware: bool = False
+
+    @property
+    def eager_ready(self) -> bool:
+        return not self.transition_aware
+
+    def post_schedule(self, s, const, cfg):
+        return timeout_switch_off(s, const, ipm_cap=False)
+
+    def next_event_candidates(self, s, const, cfg):
+        if cfg.timeout is None:
+            return []
+        idle_unres = (s.node_job < 0) & (s.node_state == IDLE)
+        expiry = s.node_idle_since + const.timeout
+        return [jnp.min(jnp.where(idle_unres & (expiry > s.t), expiry, INF))]
+
+    def post_schedule_ref(self, des):
+        des._timeout_switch_off(ipm_cap=False)
+
+    def next_event_candidates_ref(self, des):
+        if des.cfg.timeout is None:
+            return []
+        return [
+            nd.idle_since + des.cfg.timeout
+            for nd in des.nodes
+            if nd.job < 0 and nd.state == IDLE
+        ]
+
+    def psm_label(self) -> str:
+        return "PSAS(AutoOn)" if self.transition_aware else "PSUS"
+
+
+@dataclasses.dataclass(frozen=True)
+class IPM(TimeoutSleep):
+    """TimeoutSleep + intelligent power management (legacy PSAS+IPM):
+    switch-offs are capped by queued demand and sleeping nodes are woken
+    proactively when demand exceeds available capacity."""
+
+    transition_aware: bool = True
+
+    def post_schedule(self, s, const, cfg):
+        s = timeout_switch_off(s, const, ipm_cap=True)
+        return ipm_wake(s, const)
+
+    def post_schedule_ref(self, des):
+        des._timeout_switch_off(ipm_cap=True)
+        des._ipm_wake()
+
+    def psm_label(self) -> str:
+        return "PSAS+IPM"
+
+
+@dataclasses.dataclass(frozen=True)
+class RLController(PowerPolicy):
+    """Agent-controlled power commands (legacy PSM ``RL``).
+
+    ``grouped=False``: commands are global counts (sum over the ``[G]``
+    command vectors) — the checkpoint-compatible default. ``grouped=True``:
+    commands target node groups individually (see ``apply_rl_commands``).
+
+    ``controller``: optional in-graph policy ``f(s, const) -> (on[G], off[G])``
+    evaluated inside ``post_schedule`` — this is how a checkpointed network
+    drives ``run_sim`` end-to-end as one compiled program (``launch/sim.py``).
+    When None, pending commands set externally (the RL env path) are applied.
+    """
+
+    grouped: bool = False
+    controller: Optional[Callable] = None
+
+    def post_schedule(self, s, const, cfg):
+        if self.controller is not None:
+            on, off = self.controller(s, const)
+            s = s._replace(
+                rl_on_cmd=jnp.broadcast_to(on, s.rl_on_cmd.shape).astype(I32),
+                rl_off_cmd=jnp.broadcast_to(off, s.rl_off_cmd.shape).astype(I32),
+            )
+        return apply_rl_commands(s, const, grouped=self.grouped)
+
+    def next_event_candidates(self, s, const, cfg):
+        return [s.t + const.rl_interval]
+
+    def post_schedule_ref(self, des):
+        if des.rl_policy is not None:
+            n_on, n_off = des.rl_policy(des)
+            des._apply_rl(n_on, n_off)
+            des._start_jobs()
+
+    def next_event_candidates_ref(self, des):
+        if des.cfg.rl_decision_interval:
+            return [des.t + des.cfg.rl_decision_interval]
+        return []
+
+    def psm_label(self) -> str:
+        return "RL:groups" if self.grouped else "RL"
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim: PSMVariant <-> PowerPolicy
+# ---------------------------------------------------------------------------
+
+_PSM_TO_POLICY = {
+    PSMVariant.NONE: AlwaysOn(),
+    PSMVariant.PSUS: TimeoutSleep(),
+    PSMVariant.PSAS: TimeoutSleep(transition_aware=True),
+    PSMVariant.PSAS_IPM: IPM(),
+    PSMVariant.RL: RLController(),
+}
+
+
+def policy_from_psm(psm: PSMVariant) -> PowerPolicy:
+    """Legacy ``EngineConfig(psm=...)`` -> the equivalent policy stack."""
+    return _PSM_TO_POLICY[PSMVariant(psm)]
+
+
+def psm_of(policy: PowerPolicy) -> Optional[PSMVariant]:
+    """Best-effort reverse map (None for policies with no legacy twin)."""
+    if isinstance(policy, RLController):
+        return PSMVariant.RL
+    if isinstance(policy, IPM):
+        return PSMVariant.PSAS_IPM
+    if isinstance(policy, TimeoutSleep):
+        return (
+            PSMVariant.PSAS if policy.transition_aware else PSMVariant.PSUS
+        )
+    if isinstance(policy, AlwaysOn):
+        return PSMVariant.NONE
+    return None
+
+
+# ---------------------------------------------------------------------------
+# scheduler-label registry (single source of truth for launch/benchmarks)
+# ---------------------------------------------------------------------------
+
+_BASE_TOKENS = {"FCFS": BasePolicy.FCFS, "EASY": BasePolicy.EASY}
+_PSM_TOKENS = {
+    "PSUS": TimeoutSleep(),
+    "PSAS": TimeoutSleep(transition_aware=True),
+    "PSAS(AUTOON)": TimeoutSleep(transition_aware=True),  # alias
+    "PSAS+IPM": IPM(),
+    "ALWAYSON": AlwaysOn(),
+    "RL": RLController(),
+    "RL:GROUPS": RLController(grouped=True),
+}
+_CANONICAL_PSM = ("PSUS", "PSAS", "PSAS+IPM", "AlwaysOn")
+_CANONICAL_RL = ("RL", "RL:groups")
+
+
+def from_label(label: str) -> Tuple[BasePolicy, PowerPolicy]:
+    """Parse ``"<FCFS|EASY> <PSM>"`` into a (base, policy) pair.
+
+    PSM tokens: PSUS | PSAS | PSAS(AutoOn) | PSAS+IPM | AlwaysOn | RL |
+    RL:groups (case-insensitive).
+    """
+    parts = label.split()
+    if len(parts) == 2 and parts[0].upper() in _BASE_TOKENS:
+        psm = _PSM_TOKENS.get(parts[1].upper())
+        if psm is not None:
+            return _BASE_TOKENS[parts[0].upper()], psm
+    raise KeyError(
+        f"unknown scheduler label {label!r}; expected one of "
+        f"{', '.join(scheduler_labels(include_rl=True))} "
+        f"(alias: 'PSAS(AutoOn)' for PSAS)"
+    )
+
+
+def scheduler_labels(include_rl: bool = False) -> Tuple[str, ...]:
+    """Canonical labels, in the order the paper's figures use."""
+    psms = _CANONICAL_PSM + (_CANONICAL_RL if include_rl else ())
+    return tuple(
+        f"{base} {psm}" for psm in psms for base in ("FCFS", "EASY")
+    )
+
+
+def label_of(base: BasePolicy, policy: PowerPolicy) -> str:
+    b = "FCFS" if base == BasePolicy.FCFS else "EASY"
+    p = policy.psm_label()
+    return f"{b} {'PSAS' if p == 'PSAS(AutoOn)' else p}"

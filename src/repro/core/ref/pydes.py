@@ -33,7 +33,6 @@ from repro.core.types import (
     WAITING,
     BasePolicy,
     EngineConfig,
-    PSMVariant,
     SimMetrics,
 )
 from repro.workloads.platform import PlatformSpec
@@ -88,7 +87,10 @@ class PyDES:
         self.t_on = platform.node_t_switch_on()  # i32[N]
         self.t_off = platform.node_t_switch_off()  # i32[N]
         self.speed = platform.node_speed()  # f32[N]
-        self.okey = platform.node_order_key()  # f32[N]
+        if config.node_order == "idle-watts":
+            self.okey = self.power[:, IDLE]  # f32[N] idle draw
+        else:
+            self.okey = platform.node_order_key()  # f32[N]
         self.gid = platform.node_group_id()  # i32[N]
         self.n_groups = platform.n_groups()
 
@@ -132,7 +134,7 @@ class PyDES:
 
     # ---------- ready times (SEMANTICS.md variant table) ----------
     def _ready(self, nd: _Node) -> float:
-        if self.cfg.psm in (PSMVariant.PSUS, PSMVariant.NONE, PSMVariant.RL):
+        if self.cfg.policy.eager_ready:
             return self.t
         if nd.state == IDLE:
             return self.t
@@ -146,7 +148,7 @@ class PyDES:
 
     def _sort_key(self, nd: _Node):
         """Allocation order (SEMANTICS.md §Heterogeneity): (ready, [key,] nid)."""
-        if self.cfg.node_order == "cheap":
+        if self.cfg.node_order != "id":
             return (self._ready(nd), self.okey[nd.nid], nd.nid)
         return (self._ready(nd), nd.nid)
 
@@ -277,10 +279,9 @@ class PyDES:
             if j.status == WAITING and j.subtime <= self.t
         )
 
-    def _timeout_switch_off(self) -> None:
+    def _timeout_switch_off(self, ipm_cap: bool = False) -> None:
+        """Rule 6; ``ipm_cap`` caps switch-offs by queued demand (PSAS+IPM)."""
         self.counters["timeout_policy"] += 1
-        if self.cfg.psm in (PSMVariant.NONE, PSMVariant.RL):
-            return
         timeout = self.cfg.timeout
         if timeout is None:
             return
@@ -292,7 +293,7 @@ class PyDES:
             and self.t - nd.idle_since >= timeout
         ]
         cands.sort(key=lambda nd: (nd.idle_since, nd.nid))
-        if self.cfg.psm == PSMVariant.PSAS_IPM:
+        if ipm_cap:
             avail = sum(
                 1
                 for nd in self.nodes
@@ -306,8 +307,6 @@ class PyDES:
             self._gantt_mark(nd)
 
     def _ipm_wake(self) -> None:
-        if self.cfg.psm != PSMVariant.PSAS_IPM:
-            return
         avail = sum(
             1
             for nd in self.nodes
@@ -325,25 +324,42 @@ class PyDES:
                 self._gantt_mark(nd)
                 deficit -= 1
 
-    def _apply_rl(self, n_on: int, n_off: int) -> None:
-        """Rule 8: wake lowest-id sleeping; sleep longest-idle unreserved."""
-        woken = 0
+    def _apply_rl(self, n_on, n_off) -> None:
+        """Rule 8: wake lowest-id sleeping; sleep longest-idle unreserved.
+
+        Global mode takes scalar counts (sequences are summed); grouped mode
+        (``cfg.policy.grouped``) takes ``[G]`` per-group counts and selects
+        within each node group independently (core/policy.py).
+        """
+        grouped = getattr(self.cfg.policy, "grouped", False)
+        if grouped:
+            # per-group budgets, indexed by the node's group id
+            on_budget = [int(v) for v in np.asarray(n_on).reshape(-1)]
+            off_budget = [int(v) for v in np.asarray(n_off).reshape(-1)]
+        else:
+            # global budgets shared by every node (one-element view)
+            on_budget = [int(np.sum(n_on))]
+            off_budget = [int(np.sum(n_off))]
+
+        def bucket(nd):
+            return int(self.gid[nd.nid]) if grouped else 0
+
         for nd in self.nodes:
-            if woken >= n_on:
-                break
-            if nd.job < 0 and nd.state == SLEEP:
+            if nd.job < 0 and nd.state == SLEEP and on_budget[bucket(nd)] > 0:
+                on_budget[bucket(nd)] -= 1
                 nd.state = SWITCHING_ON
                 nd.until = self.t + float(self.t_on[nd.nid])
                 self._gantt_mark(nd)
-                woken += 1
         cands = [
             nd for nd in self.nodes if nd.job < 0 and nd.state == IDLE
         ]
         cands.sort(key=lambda nd: (nd.idle_since, nd.nid))
-        for nd in cands[:n_off]:
-            nd.state = SWITCHING_OFF
-            nd.until = self.t + float(self.t_off[nd.nid])
-            self._gantt_mark(nd)
+        for nd in cands:
+            if off_budget[bucket(nd)] > 0:
+                off_budget[bucket(nd)] -= 1
+                nd.state = SWITCHING_OFF
+                nd.until = self.t + float(self.t_off[nd.nid])
+                self._gantt_mark(nd)
 
     # ---------- event machinery ----------
     def _next_time(self) -> float:
@@ -357,15 +373,7 @@ class PyDES:
         for nd in self.nodes:
             if nd.state in (SWITCHING_ON, SWITCHING_OFF):
                 cand.append(nd.until)
-        if (
-            self.cfg.timeout is not None
-            and self.cfg.psm not in (PSMVariant.NONE, PSMVariant.RL)
-        ):
-            for nd in self.nodes:
-                if nd.job < 0 and nd.state == IDLE:
-                    cand.append(nd.idle_since + self.cfg.timeout)
-        if self.cfg.psm == PSMVariant.RL and self.cfg.rl_decision_interval:
-            cand.append(self.t + self.cfg.rl_decision_interval)
+        cand.extend(self.cfg.policy.next_event_candidates_ref(self))
         # strictly future events only: an expired-but-guard-blocked timeout
         # otherwise wedges the clock (the guard is re-evaluated at every batch)
         nt = min((c for c in cand if c > self.t), default=INF)
@@ -401,14 +409,8 @@ class PyDES:
         # 4-5. schedule + start
         self._scheduler_pass()
         self._start_jobs()
-        # 6-8. PSM
-        if self.cfg.psm == PSMVariant.RL and self.rl_policy is not None:
-            n_on, n_off = self.rl_policy(self)
-            self._apply_rl(n_on, n_off)
-            self._start_jobs()
-        else:
-            self._timeout_switch_off()
-            self._ipm_wake()
+        # 6-8. power management: the policy's oracle-side hook
+        self.cfg.policy.post_schedule_ref(self)
 
     def _complete(self, j: _Job) -> None:
         self.counters["job_lifecycle"] += 1

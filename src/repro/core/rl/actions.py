@@ -1,5 +1,14 @@
 """Action translators (paper Config.py registry): discrete action -> node
-power commands (n_on, n_off) applied per SEMANTICS.md rule 8."""
+power commands applied per SEMANTICS.md rule 8.
+
+Every translator is ``f(sim_state, const, action, n_levels) -> (on, off)``
+where ``on``/``off`` are ``i32[G]`` per-group command vectors (G = number of
+node groups, known from ``sim_state.rl_on_cmd``). Global translators put the
+whole command in one slot — the engine's global-action mode reads the vector
+sums, so this is bit-compatible with the legacy scalar commands. Group
+translators (``GROUP_ACTIONS``) emit genuinely per-group commands and
+require an ``RLController(grouped=True)`` policy.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,17 +16,27 @@ import jax.numpy as jnp
 from repro.core.engine import SimState
 from repro.core.types import ACTIVE, IDLE, SWITCHING_ON
 
+I32 = jnp.int32
 
-def delta_nodes(s: SimState, action, n_levels: int = 5, step_frac: float = 0.125):
+
+def _global(s: SimState, n_on, n_off):
+    """Pack global scalar commands into the [G] command vectors (slot 0)."""
+    G = s.rl_on_cmd.shape[0]
+    zeros = jnp.zeros(G, I32)
+    return zeros.at[0].set(n_on.astype(I32)), zeros.at[0].set(n_off.astype(I32))
+
+
+def delta_nodes(s: SimState, const, action, n_levels: int = 5,
+                step_frac: float = 0.125):
     """Symmetric delta: action k in [0, 2*n_levels] -> toggle
     (k - n_levels) * step_frac * N nodes (negative = switch off)."""
     N = s.node_state.shape[0]
     step = jnp.maximum(jnp.int32(step_frac * N), 1)
     delta = jnp.clip((action.astype(jnp.int32) - n_levels) * step, -N, N)
-    return jnp.maximum(delta, 0), jnp.maximum(-delta, 0)
+    return _global(s, jnp.maximum(delta, 0), jnp.maximum(-delta, 0))
 
 
-def target_on_fraction(s: SimState, action, n_levels: int = 9):
+def target_on_fraction(s: SimState, const, action, n_levels: int = 9):
     """action k -> target #powered nodes = round(N * k/(n_levels-1));
     commands bridge the gap from the current powered/powering count."""
     N = s.node_state.shape[0]
@@ -31,18 +50,49 @@ def target_on_fraction(s: SimState, action, n_levels: int = 9):
         dtype=jnp.int32,
     )
     gap = target - on_like
+    return _global(s, jnp.maximum(gap, 0), jnp.maximum(-gap, 0))
+
+
+def group_target_fraction(s: SimState, const, action, n_levels: int = 9):
+    """Group-targeted action space: action = g * n_levels + k sets group g's
+    target powered-node count to round(N_g * k/(n_levels-1)); only that
+    group receives commands this decision — the agent can sleep the
+    expensive island while leaving the cheap one untouched."""
+    G = s.rl_on_cmd.shape[0]
+    g = (action.astype(I32) // n_levels).clip(0, G - 1)
+    k = action.astype(I32) % n_levels
+    gids = jnp.arange(G, dtype=I32)
+    group_sizes = jnp.zeros(G, I32).at[const.group_id].add(1)
+    on_like = (
+        (s.node_state == IDLE)
+        | (s.node_state == ACTIVE)
+        | (s.node_state == SWITCHING_ON)
+    )
+    on_like_g = jnp.zeros(G, I32).at[const.group_id].add(on_like.astype(I32))
+    target = jnp.round(
+        group_sizes.astype(jnp.float32)
+        * k.astype(jnp.float32)
+        / float(n_levels - 1)
+    ).astype(I32)
+    gap = jnp.where(gids == g, target - on_like_g, 0)
     return jnp.maximum(gap, 0), jnp.maximum(-gap, 0)
 
 
 ACTION_TRANSLATORS = {
     "delta": delta_nodes,
     "target_fraction": target_on_fraction,
+    "group_target_fraction": group_target_fraction,
 }
 
+# translators whose commands are per-group (need RLController(grouped=True))
+GROUP_ACTIONS = frozenset({"group_target_fraction"})
 
-def action_space_size(name: str, n_levels: int = None) -> int:
+
+def action_space_size(name: str, n_levels: int = None, n_groups: int = 1) -> int:
     if name == "delta":
         return 2 * (n_levels or 5) + 1
     if name == "target_fraction":
         return n_levels or 9
+    if name == "group_target_fraction":
+        return n_groups * (n_levels or 9)
     raise KeyError(name)

@@ -21,7 +21,6 @@ import jax.numpy as jnp
 from repro.core.engine import (
     EngineConst,
     SimState,
-    _apply_rl_commands,
     accrue_energy,
     all_done,
     init_state,
@@ -29,10 +28,15 @@ from repro.core.engine import (
     next_time,
     process_batch,
 )
-from repro.core.rl.actions import ACTION_TRANSLATORS, action_space_size
+from repro.core.policy import RLController, apply_rl_commands
+from repro.core.rl.actions import (
+    ACTION_TRANSLATORS,
+    GROUP_ACTIONS,
+    action_space_size,
+)
 from repro.core.rl.features import FEATURE_EXTRACTORS, feature_size
 from repro.core.rl.rewards import REWARDS, RewardWeights
-from repro.core.types import INF_TIME, EngineConfig, PSMVariant
+from repro.core.types import INF_TIME, EngineConfig
 from repro.workloads.platform import PlatformSpec
 from repro.workloads.workload import Workload
 
@@ -42,7 +46,7 @@ I32 = jnp.int32
 @dataclasses.dataclass(frozen=True)
 class EnvConfig:
     engine: EngineConfig = dataclasses.field(
-        default_factory=lambda: EngineConfig(psm=PSMVariant.RL)
+        default_factory=lambda: EngineConfig(policy=RLController())
     )
     feature: str = "compact"
     action: str = "target_fraction"
@@ -51,18 +55,36 @@ class EnvConfig:
     reward_weights: RewardWeights = dataclasses.field(default_factory=RewardWeights)
     max_steps: int = 512
     feature_window: int = 8
+    # node-group count of the platform (group-targeted actions / features
+    # need it to size the action space and observation statically)
+    n_groups: int = 1
 
     def __post_init__(self):
-        if self.engine.psm != PSMVariant.RL:
-            raise ValueError("EnvConfig.engine must use PSMVariant.RL")
+        if not isinstance(self.engine.policy, RLController):
+            raise ValueError(
+                "EnvConfig.engine must use an RLController policy "
+                "(legacy spelling: EngineConfig(psm=PSMVariant.RL))"
+            )
+        if self.engine.policy.controller is not None:
+            raise ValueError(
+                "EnvConfig.engine.policy.controller must be None: the env "
+                "supplies the actions (in-graph controllers are for "
+                "run_sim/launch runs)"
+            )
+        if (self.action in GROUP_ACTIONS) != self.engine.policy.grouped:
+            raise ValueError(
+                f"action {self.action!r} and RLController(grouped="
+                f"{self.engine.policy.grouped}) disagree: group-targeted "
+                "actions need a grouped controller and vice versa"
+            )
 
     @property
     def n_actions(self) -> int:
-        return action_space_size(self.action, self.n_action_levels)
+        return action_space_size(self.action, self.n_action_levels, self.n_groups)
 
     @property
     def obs_size(self) -> int:
-        return feature_size(self.feature, self.feature_window)
+        return feature_size(self.feature, self.feature_window, self.n_groups)
 
 
 class EnvState(NamedTuple):
@@ -94,9 +116,11 @@ def env_step(
     event batch. Returns (state, obs, reward, done, info). No-op when done."""
     prev = state.sim
 
-    n_on, n_off = ACTION_TRANSLATORS[cfg.action](prev, action, cfg.n_action_levels)
+    n_on, n_off = ACTION_TRANSLATORS[cfg.action](
+        prev, const, action, cfg.n_action_levels
+    )
     sim = prev._replace(rl_on_cmd=n_on, rl_off_cmd=n_off)
-    sim = _apply_rl_commands(sim, const)
+    sim = apply_rl_commands(sim, const, grouped=cfg.engine.policy.grouped)
 
     nt = next_time(sim, const, cfg.engine)
     can_advance = (nt < INF_TIME) & ~all_done(sim)
@@ -143,6 +167,17 @@ class HPCGymEnv:
         job_capacity: Optional[int] = None,
     ):
         self.cfg = config or EnvConfig()
+        needs_groups = (
+            self.cfg.action in GROUP_ACTIONS
+            or self.cfg.feature == "compact_groups"
+        )
+        if needs_groups and self.cfg.n_groups != platform.n_groups():
+            raise ValueError(
+                f"EnvConfig.n_groups={self.cfg.n_groups} but the platform "
+                f"has {platform.n_groups()} node groups; group-targeted "
+                "actions/features size the action space and observation "
+                "from n_groups"
+            )
         self.platform = platform
         self.workload = workload
         self.const = make_const(platform, self.cfg.engine)

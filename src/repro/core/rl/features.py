@@ -130,15 +130,52 @@ def queue_window_features(s: SimState, const: EngineConst, W: int = 8) -> jnp.nd
     return jnp.concatenate([base, per_job])
 
 
+def group_mix_features(s: SimState, const: EngineConst) -> jnp.ndarray:
+    """Per-group summary, ``f32[G * 6]`` (G = number of node groups, known
+    statically from the [G, 5] energy ledger shape).
+
+    For the group-targeted action space the agent needs to see *each
+    island's* state mix, not just the cluster totals: 5 within-group state
+    fractions plus the group's order-key share of the cluster maximum (which
+    island is expensive). All terms are in [0, 1].
+    """
+    G = s.energy.shape[0]
+    sizes = jnp.zeros(G, jnp.int32).at[const.group_id].add(1)
+    fsizes = jnp.maximum(sizes.astype(jnp.float32), 1.0)
+    fracs = [
+        jnp.zeros(G, jnp.float32)
+        .at[const.group_id]
+        .add((s.node_state == k).astype(jnp.float32))
+        / fsizes
+        for k in (SLEEP, SWITCHING_ON, IDLE, ACTIVE, SWITCHING_OFF)
+    ]
+    key_max = jnp.maximum(jnp.max(const.order_key), 1e-6)
+    key_g = (
+        jnp.zeros(G, jnp.float32).at[const.group_id].add(const.order_key)
+        / fsizes
+        / key_max
+    )
+    return jnp.stack(fracs + [key_g], axis=-1).reshape(-1)
+
+
+def compact_group_features(s: SimState, const: EngineConst) -> jnp.ndarray:
+    """compact_features + the per-group state-mix block (the observation for
+    group-targeted RL actions)."""
+    return jnp.concatenate([compact_features(s, const), group_mix_features(s, const)])
+
+
 FEATURE_EXTRACTORS = {
     "compact": compact_features,
     "queue_window": queue_window_features,
+    "compact_groups": compact_group_features,
 }
 
 
-def feature_size(name: str, window: int = 8) -> int:
+def feature_size(name: str, window: int = 8, n_groups: int = 1) -> int:
     if name == "compact":
         return 20
     if name == "queue_window":
         return 20 + 4 * window
+    if name == "compact_groups":
+        return 20 + 6 * n_groups
     raise KeyError(name)

@@ -51,6 +51,30 @@ def waste_wait_tradeoff(
     return -(w.w_energy * d_waste + w.w_wait * d_wait)
 
 
+def group_waste_wait(
+    prev: SimState, new: SimState, const: EngineConst, w: RewardWeights
+) -> jnp.ndarray:
+    """Like :func:`waste_wait_tradeoff`, but each node group's wasted energy
+    is normalized by *that group's* active draw before averaging — on mixed
+    platforms a cheap island's waste is no longer drowned out by the
+    expensive one's scale, matching the group-targeted action space."""
+    G = new.energy.shape[0]
+    group_watts = jnp.maximum(
+        jnp.zeros(G, jnp.float32).at[const.group_id].add(const.power[..., 3]),
+        1e-6,
+    )
+    waste_states = (IDLE, SWITCHING_ON, SWITCHING_OFF)
+    d_waste_g = sum(
+        new.energy[:, k] - prev.energy[:, k] for k in waste_states
+    )
+    d_waste = jnp.mean(d_waste_g / (group_watts * 3600.0))
+    N = new.node_state.shape[0]
+    d_wait = (new.wait_integral - prev.wait_integral) / (
+        jnp.float32(N) * 3600.0
+    )
+    return -(w.w_energy * d_waste + w.w_wait * d_wait)
+
+
 def energy_only(prev, new, const, w):
     e_scale = _cluster_active_watts(const) * 3600.0
     return -(jnp.sum(new.energy) - jnp.sum(prev.energy)) / e_scale
@@ -63,6 +87,7 @@ def wait_only(prev, new, const, w):
 
 REWARDS = {
     "waste_wait": waste_wait_tradeoff,
+    "group_waste_wait": group_waste_wait,
     "energy_only": energy_only,
     "wait_only": wait_only,
 }

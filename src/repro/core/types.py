@@ -3,9 +3,12 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import NamedTuple, Optional
+from typing import TYPE_CHECKING, NamedTuple, Optional
 
 import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - typing only (avoids an import cycle)
+    from repro.core.policy import PowerPolicy
 
 # node power states (indexing order is part of the engine contract)
 SLEEP, SWITCHING_ON, IDLE, ACTIVE, SWITCHING_OFF = 0, 1, 2, 3, 4
@@ -24,6 +27,13 @@ class BasePolicy(enum.IntEnum):
 
 
 class PSMVariant(enum.IntEnum):
+    """DEPRECATED: the legacy power-management enum.
+
+    Survives only as a constructor shim — ``EngineConfig(psm=...)`` maps onto
+    the equivalent composable policy stack (``core/policy.py``). New code
+    passes ``EngineConfig(policy=...)`` (or uses ``policy.from_label``).
+    """
+
     NONE = 0  # always-on: nodes never sleep (classic scheduler baseline)
     PSUS = 1
     PSAS = 2  # PSAS (Auto On)
@@ -33,27 +43,49 @@ class PSMVariant(enum.IntEnum):
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Static engine configuration (compiled into the jitted JAX engine)."""
+    """Static engine configuration (compiled into the jitted JAX engine).
+
+    Power management is a composable :class:`repro.core.policy.PowerPolicy`
+    (``policy=``); the legacy ``psm=`` enum still works as a deprecation shim
+    and is kept mirrored from ``policy`` so old readers see a consistent
+    value (None for policies with no legacy twin). When both are given,
+    ``policy`` wins — ``psm`` is only consulted when ``policy`` is None.
+    """
 
     base: BasePolicy = BasePolicy.EASY
-    psm: PSMVariant = PSMVariant.PSUS
+    psm: Optional[PSMVariant] = None  # DEPRECATED constructor shim
+    policy: Optional["PowerPolicy"] = None  # default: TimeoutSleep() (PSUS)
     timeout: Optional[int] = None  # idle seconds before switch-off; None = never
     terminate_overrun: bool = False
     window: int = 32  # scheduler scan window W (bounded backfill depth)
     # node selection order for allocation (core/SEMANTICS.md §Heterogeneity):
-    #   "id"    — (ready, nid): the homogeneous tie-breaking, O(N) fast path
-    #   "cheap" — (ready, order_key, nid): prefer cheap/fast nodes first
+    #   "id"         — (ready, nid): the homogeneous tie-breaking, O(N) path
+    #   "cheap"      — (ready, order_key, nid): active watts per unit work
+    #   "idle-watts" — (ready, idle_watts, nid): cheapest-to-leave-idle first
     node_order: str = "id"
     record_gantt: bool = False
     gantt_capacity: int = 0  # 0 -> auto
     max_batches: Optional[int] = None  # safety cap; None -> auto
     rl_decision_interval: Optional[int] = None  # RL: also wake every Δ seconds
 
+    NODE_ORDERS = ("id", "cheap", "idle-watts")
+
     def __post_init__(self):
-        if self.node_order not in ("id", "cheap"):
+        if self.node_order not in self.NODE_ORDERS:
             raise ValueError(
-                f"node_order must be 'id' or 'cheap', got {self.node_order!r}"
+                f"node_order must be one of {self.NODE_ORDERS}, "
+                f"got {self.node_order!r}"
             )
+        from repro.core.policy import policy_from_psm, psm_of
+
+        if self.policy is None:
+            psm = PSMVariant.PSUS if self.psm is None else self.psm
+            object.__setattr__(self, "policy", policy_from_psm(psm))
+        # policy takes precedence when both are given: psm is only a
+        # constructor shim, and it is auto-mirrored below — so
+        # dataclasses.replace(cfg, policy=...) must not see the source
+        # config's mirrored psm as a conflicting user input
+        object.__setattr__(self, "psm", psm_of(self.policy))
 
     @property
     def timeout_or_inf(self) -> int:
@@ -61,14 +93,7 @@ class EngineConfig:
 
     def label(self) -> str:
         base = "FCFS" if self.base == BasePolicy.FCFS else "EASY"
-        psm = {
-            PSMVariant.NONE: "AlwaysOn",
-            PSMVariant.PSUS: "PSUS",
-            PSMVariant.PSAS: "PSAS(AutoOn)",
-            PSMVariant.PSAS_IPM: "PSAS+IPM",
-            PSMVariant.RL: "RL",
-        }[self.psm]
-        return f"{base} {psm}"
+        return f"{base} {self.policy.psm_label()}"
 
 
 class SimMetrics(NamedTuple):

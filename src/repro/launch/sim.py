@@ -12,39 +12,36 @@ Config keys (paper's runtime layer):
                 platforms use the "node_groups"/"nodes" JSON schema
                 (core/SEMANTICS.md §Heterogeneity) and get per-group
                 energy breakdowns in metrics.json
-    scheduler:  "FCFS|EASY PSUS|PSAS|PSAS+IPM|AlwaysOn|RL"
+    scheduler:  "<FCFS|EASY> <PSUS|PSAS|PSAS+IPM|AlwaysOn|RL|RL:groups>"
+                (the policy.from_label registry — single source of truth)
     timeout:    idle seconds before switch-off (null = never)
     terminate_overrun: bool
-    node_order: "id" | "cheap" (default: "cheap" when heterogeneous)
-    rl:         {checkpoint: path, decision_interval: s}   (scheduler "RL")
+    node_order: "id" | "cheap" | "idle-watts"
+                (default: "cheap" when heterogeneous)
+    rl:         {checkpoint: path, decision_interval: s}   (RL schedulers:
+                checkpoint saved by training.checkpoint.save_policy; the
+                greedy policy drives run_sim in-graph via an RLController)
     out:        output directory (CSV logs + metrics.json + gantt)
 """
 from __future__ import annotations
 
 import argparse
 import csv
+import dataclasses
 import json
 import os
 from typing import Any, Dict, Optional
 
+import jax.numpy as jnp
+
 from repro.core import engine
 from repro.core.gantt import intervals_from_log, render_png, write_csv
 from repro.core.metrics import metrics_from_state, np_state
-from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+from repro.core.policy import RLController, from_label, scheduler_labels
+from repro.core.types import EngineConfig
 from repro.workloads.generator import PRESETS, generate_workload
 from repro.workloads.platform import PlatformSpec, load_platform
 from repro.workloads.workload import Workload, load_workload
-
-SCHEDULERS = {
-    "FCFS PSUS": (BasePolicy.FCFS, PSMVariant.PSUS),
-    "EASY PSUS": (BasePolicy.EASY, PSMVariant.PSUS),
-    "FCFS PSAS": (BasePolicy.FCFS, PSMVariant.PSAS),
-    "EASY PSAS": (BasePolicy.EASY, PSMVariant.PSAS),
-    "FCFS PSAS+IPM": (BasePolicy.FCFS, PSMVariant.PSAS_IPM),
-    "EASY PSAS+IPM": (BasePolicy.EASY, PSMVariant.PSAS_IPM),
-    "EASY AlwaysOn": (BasePolicy.EASY, PSMVariant.NONE),
-    "FCFS AlwaysOn": (BasePolicy.FCFS, PSMVariant.NONE),
-}
 
 
 def _load_mini_yaml(path: str) -> Dict[str, Any]:
@@ -98,11 +95,83 @@ def resolve_platform(spec) -> PlatformSpec:
     return load_platform(spec)
 
 
+def _checkpoint_controller(params, meta):
+    """Greedy in-graph controller: features -> argmax logits -> commands."""
+    from repro.core.rl.actions import ACTION_TRANSLATORS
+    from repro.core.rl.features import FEATURE_EXTRACTORS
+    from repro.core.rl.networks import policy_apply
+
+    extract = FEATURE_EXTRACTORS[meta["feature"]]
+    translate = ACTION_TRANSLATORS[meta["action"]]
+    window = meta.get("feature_window", 8)
+
+    def controller(s, const):
+        if meta["feature"] == "queue_window":
+            obs = extract(s, const, window)
+        else:
+            obs = extract(s, const)
+        logits, _ = policy_apply(params, obs)
+        return translate(s, const, jnp.argmax(logits), meta["n_levels"])
+
+    return controller
+
+
+def _resolve_rl_policy(pol, config, plat):
+    """Attach the checkpointed greedy controller to an RLController policy."""
+    from repro.core.rl.features import feature_size
+    from repro.training.checkpoint import load_policy
+
+    rl = config.get("rl") or {}
+    if "checkpoint" not in rl:
+        raise ValueError(
+            "RL schedulers need an rl: {checkpoint: <dir>} config block "
+            "(a policy saved by training.checkpoint.save_policy)"
+        )
+    params, meta = load_policy(rl["checkpoint"])
+    expected_obs = feature_size(
+        meta["feature"], meta.get("feature_window", 8), plat.n_groups()
+    )
+    if meta["obs_size"] != expected_obs:
+        raise ValueError(
+            f"RL checkpoint obs_size={meta['obs_size']} does not fit this "
+            f"platform ({plat.n_groups()} node groups -> obs_size "
+            f"{expected_obs} for feature {meta['feature']!r}); retrain or "
+            "pick a matching platform"
+        )
+    if bool(meta.get("grouped", False)) != pol.grouped:
+        raise ValueError(
+            f"RL checkpoint was trained with grouped={meta.get('grouped')} "
+            f"actions but scheduler label requests grouped={pol.grouped}; "
+            "use the matching 'RL' / 'RL:groups' label"
+        )
+    if pol.grouped:
+        from repro.core.rl.actions import action_space_size
+
+        ckpt_groups = int(meta.get("n_groups", 1))
+        expected_actions = action_space_size(
+            meta["action"], meta["n_levels"], plat.n_groups()
+        )
+        if ckpt_groups != plat.n_groups() or meta["n_actions"] != expected_actions:
+            raise ValueError(
+                f"RL checkpoint was trained for {ckpt_groups} node groups "
+                f"({meta['n_actions']} actions) but this platform has "
+                f"{plat.n_groups()} groups ({expected_actions} actions for "
+                f"action {meta['action']!r}); group-targeted commands would "
+                "be mis-decoded — retrain or pick a matching platform"
+            )
+    controller = _checkpoint_controller(params, meta)
+    return dataclasses.replace(pol, controller=controller), rl
+
+
 def run(config: Dict[str, Any]) -> Dict[str, Any]:
     wl = resolve_workload(config["workload"])
     plat = resolve_platform(config.get("platform", wl.nb_res))
     sched = config.get("scheduler", "EASY PSUS")
-    base, psm = SCHEDULERS[sched]
+    base, pol = from_label(sched)
+    rl_interval = None
+    if isinstance(pol, RLController):
+        pol, rl = _resolve_rl_policy(pol, config, plat)
+        rl_interval = rl.get("decision_interval")
     # heterogeneous platforms default to cost-aware node selection
     # (core/SEMANTICS.md §Heterogeneity); override with node_order: id
     node_order = config.get(
@@ -110,11 +179,12 @@ def run(config: Dict[str, Any]) -> Dict[str, Any]:
     )
     ecfg = EngineConfig(
         base=base,
-        psm=psm,
+        policy=pol,
         timeout=config.get("timeout"),
         terminate_overrun=bool(config.get("terminate_overrun", False)),
         record_gantt=bool(config.get("gantt", True)),
         node_order=node_order,
+        rl_decision_interval=rl_interval,
     )
     out_dir = config.get("out", "out/sim")
     os.makedirs(out_dir, exist_ok=True)
@@ -167,7 +237,11 @@ def main(argv=None):
     ap.add_argument("--config", default=None)
     ap.add_argument("--workload", default=None)
     ap.add_argument("--platform", default=None)
-    ap.add_argument("--scheduler", default="EASY PSUS", choices=list(SCHEDULERS))
+    ap.add_argument(
+        "--scheduler",
+        default="EASY PSUS",
+        choices=list(scheduler_labels(include_rl=True)),
+    )
     ap.add_argument("--timeout", type=int, default=None)
     ap.add_argument("--terminate-overrun", action="store_true")
     ap.add_argument("--out", default="out/sim")

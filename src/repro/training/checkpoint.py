@@ -220,3 +220,121 @@ def restore_or_init(
         return 0, init_fn()
     like = jax.eval_shape(init_fn)
     return ckpt.restore(like, step=step, shardings=shardings)
+
+
+# --------------------------------------------------------------------------
+# Versioned RL policy checkpoints
+#
+# Raw param trees used to be saved with no header, so a checkpoint trained
+# before the observation/action space changed (e.g. the pre-heterogeneity
+# obs-16 era, or global-action vs group-action controllers) failed deep in
+# restore with a shape error. save_policy/load_policy stamp a typed header
+# and turn every mismatch into an actionable migration message.
+# --------------------------------------------------------------------------
+
+# version 1: implicit/headerless (pre-hetero, obs 16, global actions only).
+# version 2: explicit header with obs/action-space fields (hetero features,
+#            group-targeted actions).
+POLICY_CKPT_VERSION = 2
+_POLICY_KIND = "rl-policy"
+
+
+def save_policy(
+    directory: str,
+    params: PyTree,
+    *,
+    obs_size: int,
+    n_actions: int,
+    feature: str,
+    action: str,
+    n_levels: int,
+    hidden: Tuple[int, ...] = (128, 128),
+    feature_window: int = 8,
+    grouped: bool = False,
+    n_groups: int = 1,
+    step: int = 0,
+) -> None:
+    """Save an RL policy with the versioned header ``load_policy`` checks."""
+    meta = {
+        "kind": _POLICY_KIND,
+        "version": POLICY_CKPT_VERSION,
+        "obs_size": int(obs_size),
+        "n_actions": int(n_actions),
+        "feature": feature,
+        "action": action,
+        "n_levels": int(n_levels),
+        "hidden": [int(h) for h in hidden],
+        "feature_window": int(feature_window),
+        "grouped": bool(grouped),
+        "n_groups": int(n_groups),
+    }
+    Checkpointer(directory).save(step, params, meta)
+
+
+def _policy_meta(directory: str) -> Tuple[int, Dict]:
+    ck = Checkpointer(directory)
+    step = ck.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no policy checkpoint in {directory}")
+    with open(
+        os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    ) as f:
+        manifest = json.load(f)
+    return step, manifest.get("meta") or {}
+
+
+def load_policy(
+    directory: str,
+    expect_obs_size: Optional[int] = None,
+    expect_n_actions: Optional[int] = None,
+) -> Tuple[PyTree, Dict]:
+    """Load a policy saved by :func:`save_policy`, validating its header.
+
+    Raises ``ValueError`` with a migration message for headerless (pre-hetero
+    obs-16 era) checkpoints and for observation/action-space mismatches,
+    instead of an opaque shape error mid-restore.
+    """
+    from repro.core.rl.networks import policy_init
+
+    step, meta = _policy_meta(directory)
+    if meta.get("kind") != _POLICY_KIND or "version" not in meta:
+        raise ValueError(
+            f"checkpoint in {directory!r} has no RL-policy header: it "
+            "predates checkpoint versioning (pre-heterogeneity, obs-16, "
+            "global-action era) and its parameter shapes do not match the "
+            "current observation/action spaces. Retrain and re-save with "
+            "training.checkpoint.save_policy, or restore the raw tree "
+            "manually via Checkpointer.restore if you know its layout."
+        )
+    if meta["version"] != POLICY_CKPT_VERSION:
+        raise ValueError(
+            f"RL policy checkpoint version {meta['version']} != supported "
+            f"{POLICY_CKPT_VERSION}; retrain or migrate the checkpoint "
+            f"({directory!r})"
+        )
+    if expect_obs_size is not None and meta["obs_size"] != expect_obs_size:
+        raise ValueError(
+            f"RL policy checkpoint {directory!r} was trained with "
+            f"obs_size={meta['obs_size']} (feature {meta['feature']!r}) but "
+            f"this run expects obs_size={expect_obs_size} — the observation "
+            "space changed (e.g. pre-hetero 16 -> 20); retrain the policy "
+            "or run with the checkpoint's feature configuration"
+        )
+    if expect_n_actions is not None and meta["n_actions"] != expect_n_actions:
+        raise ValueError(
+            f"RL policy checkpoint {directory!r} has "
+            f"n_actions={meta['n_actions']} (action {meta['action']!r}, "
+            f"grouped={meta['grouped']}) but this run expects "
+            f"{expect_n_actions} — action spaces are incompatible; retrain "
+            "or select the checkpoint's action space"
+        )
+    like = jax.eval_shape(
+        lambda: policy_init(
+            jax.random.PRNGKey(0),
+            meta["obs_size"],
+            meta["n_actions"],
+            tuple(meta["hidden"]),
+        )
+    )
+    _, params = Checkpointer(directory).restore(like, step=step)
+    return params, meta

@@ -97,6 +97,56 @@ def test_shape_mismatch_raises(tmp_path):
         ck.restore(jax.eval_shape(lambda: bad))
 
 
+# ------------------------------------------------------ RL policy versioning
+
+
+def test_policy_checkpoint_roundtrip(tmp_path):
+    from repro.core.rl.networks import policy_init
+    from repro.training.checkpoint import load_policy, save_policy
+
+    params = policy_init(jax.random.PRNGKey(3), 20, 9, (32, 32))
+    d = str(tmp_path / "pol")
+    save_policy(
+        d, params, obs_size=20, n_actions=9, feature="compact",
+        action="target_fraction", n_levels=9, hidden=(32, 32),
+    )
+    out, meta = load_policy(d, expect_obs_size=20, expect_n_actions=9)
+    assert meta["version"] == 2
+    assert meta["feature"] == "compact" and meta["grouped"] is False
+    assert_tree_equal(params, out)
+
+
+def test_policy_checkpoint_obs_mismatch_message(tmp_path):
+    """A pre-hetero (obs 16) policy fails with a migration message, not a
+    shape error."""
+    from repro.core.rl.networks import policy_init
+    from repro.training.checkpoint import load_policy, save_policy
+
+    params = policy_init(jax.random.PRNGKey(0), 16, 9, (32,))
+    d = str(tmp_path / "old")
+    save_policy(
+        d, params, obs_size=16, n_actions=9, feature="compact",
+        action="target_fraction", n_levels=9, hidden=(32,),
+    )
+    with pytest.raises(ValueError, match="obs_size=16.*expects obs_size=20"):
+        load_policy(d, expect_obs_size=20)
+    with pytest.raises(ValueError, match="n_actions=9"):
+        load_policy(d, expect_n_actions=27)
+
+
+def test_policy_checkpoint_unversioned_rejected(tmp_path):
+    """A raw param tree saved without the header (the pre-versioning format)
+    is rejected with a clear migration message."""
+    from repro.core.rl.networks import policy_init
+    from repro.training.checkpoint import Checkpointer, load_policy
+
+    params = policy_init(jax.random.PRNGKey(0), 16, 9, (32,))
+    d = str(tmp_path / "legacy")
+    Checkpointer(d).save(0, params)  # headerless, as the old code did
+    with pytest.raises(ValueError, match="predates checkpoint versioning"):
+        load_policy(d)
+
+
 def test_crash_restart_training_equivalence(tmp_path):
     """5 straight steps == 3 steps + crash + resume 2: identical params.
 

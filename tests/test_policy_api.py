@@ -1,0 +1,447 @@
+"""Composable power-policy API: the PSMVariant deprecation shim, the
+from_label registry, oracle parity for every registered policy stack
+(including group-targeted RL actions), the idle-watts node order, and the
+engine.sweep one-compile batched driver."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.metrics import metrics_from_state, np_state, schedule_table
+from repro.core.policy import (
+    IPM,
+    AlwaysOn,
+    RLController,
+    TimeoutSleep,
+    from_label,
+    label_of,
+    policy_from_psm,
+    psm_of,
+    scheduler_labels,
+)
+from repro.core.ref.pydes import run_pydes
+from repro.core.types import (
+    IDLE,
+    SLEEP,
+    WAITING,
+    BasePolicy,
+    EngineConfig,
+    PSMVariant,
+)
+from repro.workloads.generator import PRESETS, GeneratorConfig, generate_workload
+from repro.workloads.platform import PlatformSpec, mixed_platform_example
+
+I32 = jnp.int32
+
+ALL_PAIRS = [
+    (base, psm)
+    for base in (BasePolicy.FCFS, BasePolicy.EASY)
+    for psm in PSMVariant
+]
+
+
+# ------------------------------------------------------------- shim mapping
+
+def test_psm_shim_maps_to_equivalent_policy_configs():
+    """Every legacy (BasePolicy, PSMVariant) pair builds the identical
+    EngineConfig as the explicit policy spelling — same hash, same label."""
+    expected = {
+        PSMVariant.NONE: AlwaysOn(),
+        PSMVariant.PSUS: TimeoutSleep(),
+        PSMVariant.PSAS: TimeoutSleep(transition_aware=True),
+        PSMVariant.PSAS_IPM: IPM(),
+        PSMVariant.RL: RLController(),
+    }
+    for base, psm in ALL_PAIRS:
+        pol = expected[psm]
+        assert policy_from_psm(psm) == pol
+        assert psm_of(pol) == psm
+        legacy = EngineConfig(base=base, psm=psm, timeout=300)
+        modern = EngineConfig(base=base, policy=pol, timeout=300)
+        assert legacy == modern
+        assert hash(legacy) == hash(modern)
+        assert legacy.policy == pol
+        assert legacy.label() == modern.label()
+
+
+def test_policy_takes_precedence_over_psm():
+    """When both are given, policy wins and psm is re-mirrored from it —
+    required so dataclasses.replace(cfg, policy=...) works on configs whose
+    psm was auto-mirrored."""
+    cfg = EngineConfig(psm=PSMVariant.PSUS, policy=IPM())
+    assert cfg.policy == IPM()
+    assert cfg.psm == PSMVariant.PSAS_IPM
+    swapped = dataclasses.replace(EngineConfig(timeout=60), policy=IPM())
+    assert swapped.policy == IPM()
+    assert swapped.psm == PSMVariant.PSAS_IPM
+    assert swapped == EngineConfig(policy=IPM(), timeout=60)
+
+
+def test_default_config_is_psus():
+    cfg = EngineConfig()
+    assert cfg.policy == TimeoutSleep()
+    assert cfg.psm == PSMVariant.PSUS
+
+
+def test_replace_preserves_policy():
+    cfg = EngineConfig(policy=RLController(grouped=True), timeout=60)
+    cfg2 = dataclasses.replace(cfg, timeout=120)
+    assert cfg2.policy == RLController(grouped=True)
+
+
+# ------------------------------------------------------------- label registry
+
+def test_from_label_registry_roundtrip():
+    for label in scheduler_labels(include_rl=True):
+        base, pol = from_label(label)
+        assert label_of(base, pol) == label
+    # aliases and case-insensitivity
+    assert from_label("EASY PSAS(AutoOn)") == from_label("easy psas")
+    assert from_label("FCFS RL:groups")[1] == RLController(grouped=True)
+    with pytest.raises(KeyError, match="unknown scheduler label"):
+        from_label("EASY PSASx")
+
+
+def test_label_matches_legacy_scheduler_table():
+    """The labels launch/sim historically accepted resolve to the same
+    (base, psm) pairs the old SCHEDULERS dict hardcoded."""
+    legacy = {
+        "FCFS PSUS": (BasePolicy.FCFS, PSMVariant.PSUS),
+        "EASY PSUS": (BasePolicy.EASY, PSMVariant.PSUS),
+        "FCFS PSAS": (BasePolicy.FCFS, PSMVariant.PSAS),
+        "EASY PSAS": (BasePolicy.EASY, PSMVariant.PSAS),
+        "FCFS PSAS+IPM": (BasePolicy.FCFS, PSMVariant.PSAS_IPM),
+        "EASY PSAS+IPM": (BasePolicy.EASY, PSMVariant.PSAS_IPM),
+        "EASY AlwaysOn": (BasePolicy.EASY, PSMVariant.NONE),
+        "FCFS AlwaysOn": (BasePolicy.FCFS, PSMVariant.NONE),
+    }
+    for label, (base, psm) in legacy.items():
+        b, pol = from_label(label)
+        assert b == base and psm_of(pol) == psm, label
+
+
+# ----------------------------------------------- shim bit-exactness (seed)
+
+def _fig3():
+    return generate_workload(PRESETS["fig3_small"])
+
+
+def _assert_states_identical(s1, s2):
+    for k, a in np_state(s1).items():
+        np.testing.assert_array_equal(a, np.asarray(getattr(s2, k)), err_msg=k)
+
+
+@pytest.mark.parametrize(
+    "base,psm",
+    [
+        (BasePolicy.EASY, PSMVariant.PSUS),
+        (BasePolicy.FCFS, PSMVariant.PSAS),
+        (BasePolicy.EASY, PSMVariant.PSAS_IPM),
+        (BasePolicy.EASY, PSMVariant.NONE),
+        (BasePolicy.EASY, PSMVariant.RL),
+    ],
+)
+def test_shim_bit_identical_on_fig3_small(base, psm):
+    """Legacy psm spelling and explicit policy spelling produce bit-identical
+    run_sim output on the fig3_small preset."""
+    wl = _fig3()
+    plat = PlatformSpec(nb_nodes=16)
+    s_legacy = engine.simulate(
+        plat, wl, EngineConfig(base=base, psm=psm, timeout=300,
+                               terminate_overrun=True)
+    )
+    s_modern = engine.simulate(
+        plat, wl, EngineConfig(base=base, policy=policy_from_psm(psm),
+                               timeout=300, terminate_overrun=True)
+    )
+    _assert_states_identical(s_legacy, s_modern)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("base,psm", ALL_PAIRS)
+def test_shim_bit_identical_full_matrix(base, psm):
+    """Widened coverage of test_shim_bit_identical_on_fig3_small: every
+    legacy (BasePolicy, PSMVariant) pair."""
+    test_shim_bit_identical_on_fig3_small(base, psm)
+
+
+# --------------------------------------------- oracle parity per label
+
+@pytest.mark.parametrize("label", [l for l in scheduler_labels()])
+def test_label_stack_oracle_parity(label):
+    """Every non-RL policy stack reachable from from_label: bit-exact
+    schedules + energy agreement vs the sequential oracle, on a 3-group
+    heterogeneous platform."""
+    base, pol = from_label(label)
+    plat = mixed_platform_example(16)
+    wl = generate_workload(
+        GeneratorConfig(n_jobs=60, nb_res=16, seed=11, overrun_prob=0.2)
+    )
+    cfg = EngineConfig(base=base, policy=pol, timeout=240,
+                       terminate_overrun=True, node_order="cheap")
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, plat)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+    assert m.makespan_s == m_ref.makespan_s
+
+
+def _scripted_controllers():
+    """Deterministic scripted RL policy implemented identically for both
+    engines: wake every sleeping node (per group) while demand is queued,
+    sleep every unreserved idle node when the queue is empty."""
+
+    def jax_ctrl(s, const):
+        G = s.rl_on_cmd.shape[0]
+        waiting = (s.job_status == WAITING) & (s.job_subtime <= s.t)
+        demand = jnp.sum(jnp.where(waiting, s.job_res, 0))
+        unres = s.node_job < 0
+        sleeping = jnp.zeros(G, I32).at[const.group_id].add(
+            (unres & (s.node_state == SLEEP)).astype(I32)
+        )
+        idle = jnp.zeros(G, I32).at[const.group_id].add(
+            (unres & (s.node_state == IDLE)).astype(I32)
+        )
+        on = jnp.where(demand > 0, sleeping, 0)
+        off = jnp.where(demand == 0, idle, 0)
+        return on, off
+
+    def py_ctrl(des):
+        G = des.n_groups
+        demand = des._queued_demand()
+        sleeping = np.zeros(G, int)
+        idle = np.zeros(G, int)
+        for nd in des.nodes:
+            if nd.job < 0 and nd.state == SLEEP:
+                sleeping[des.gid[nd.nid]] += 1
+            if nd.job < 0 and nd.state == IDLE:
+                idle[des.gid[nd.nid]] += 1
+        on = sleeping if demand > 0 else np.zeros(G, int)
+        off = idle if demand == 0 else np.zeros(G, int)
+        return on, off
+
+    return jax_ctrl, py_ctrl
+
+
+@pytest.mark.parametrize("grouped", [False, True])
+def test_rl_controller_oracle_parity(grouped):
+    """RL policy stacks (global and per-group command modes): an in-graph
+    scripted controller driving run_sim matches the oracle's rl_policy
+    bit-exactly on a heterogeneous platform."""
+    jax_ctrl, py_ctrl = _scripted_controllers()
+    plat = mixed_platform_example(16)
+    wl = generate_workload(GeneratorConfig(n_jobs=50, nb_res=16, seed=5))
+    cfg = EngineConfig(
+        base=BasePolicy.EASY,
+        policy=RLController(grouped=grouped, controller=jax_ctrl),
+        rl_decision_interval=600,
+        node_order="cheap",
+    )
+    s = engine.simulate(plat, wl, cfg)
+    cfg_ref = EngineConfig(
+        base=BasePolicy.EASY, policy=RLController(grouped=grouped),
+        rl_decision_interval=600, node_order="cheap",
+    )
+    m_ref, des = run_pydes(plat, wl, cfg_ref, rl_policy=py_ctrl)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, plat)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+
+
+def test_grouped_commands_target_their_group():
+    """A grouped off-command for group 1 must never sleep group-0 nodes
+    (the global mode would)."""
+    from repro.core.policy import apply_rl_commands
+
+    plat = mixed_platform_example(16)  # groups: fast[0:5], eco[5:10], std
+    wl = generate_workload(GeneratorConfig(n_jobs=4, nb_res=16, seed=0))
+    cfg = EngineConfig(policy=RLController(grouped=True))
+    s = engine.init_state(plat, wl, cfg)
+    const = engine.make_const(plat, cfg)
+    off = jnp.zeros(3, I32).at[1].set(3)
+    s2 = apply_rl_commands(
+        s._replace(rl_off_cmd=off), const, grouped=True
+    )
+    st = np.asarray(s2.node_state)
+    assert (st[:5] == IDLE).all()  # fast group untouched
+    assert (st[5:8] != IDLE).any()  # eco group received the command
+
+
+# ------------------------------------------------------------- idle-watts
+
+def test_idle_watts_order_validated():
+    with pytest.raises(ValueError, match="node_order"):
+        EngineConfig(node_order="cheapest")
+    EngineConfig(node_order="idle-watts")  # accepted
+
+
+def test_idle_watts_prefers_low_idle_draw_nodes():
+    """MIXED platform idle watts: eco 80 < std 190 < fast 250, while the
+    'cheap' key prefers fast first — a 1-node job lands on an eco node
+    (speed 0.5 -> realized runtime doubles) under idle-watts."""
+    from repro.workloads.workload import workload_from_arrays
+
+    plat = mixed_platform_example(16)
+    wl = workload_from_arrays(
+        res=[1], subtime=[0], runtime=[100], reqtime=[400], nb_res=16
+    )
+    base = EngineConfig(base=BasePolicy.EASY, psm=PSMVariant.PSUS,
+                        timeout=3600)
+    t_cheap = schedule_table(
+        engine.simulate(plat, wl, dataclasses.replace(base, node_order="cheap"))
+    )[0, 1]
+    t_idle = schedule_table(
+        engine.simulate(
+            plat, wl, dataclasses.replace(base, node_order="idle-watts")
+        )
+    )[0, 1]
+    assert t_cheap == 50.0  # fast node, speed 2.0
+    assert t_idle == 200.0  # eco node, speed 0.5
+
+
+@pytest.mark.parametrize(
+    "base,psm",
+    [(BasePolicy.EASY, PSMVariant.PSAS), (BasePolicy.FCFS, PSMVariant.PSUS),
+     (BasePolicy.EASY, PSMVariant.PSAS_IPM)],
+)
+def test_idle_watts_oracle_parity(base, psm):
+    """idle-watts ordering: exact schedule parity vs the oracle on a
+    heterogeneous platform."""
+    plat = mixed_platform_example(16)
+    wl = generate_workload(
+        GeneratorConfig(n_jobs=70, nb_res=16, seed=4, overrun_prob=0.2)
+    )
+    cfg = EngineConfig(base=base, psm=psm, timeout=200,
+                       terminate_overrun=True, node_order="idle-watts")
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, plat)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+
+
+# ------------------------------------------------------------- sweep driver
+
+def test_sweep_matches_individual_simulate():
+    """8 timeout/platform scenarios in ONE compiled program: per-scenario
+    metrics equal individual simulate() runs; exactly one compilation."""
+    plat = PlatformSpec(nb_nodes=16)
+    wl = generate_workload(GeneratorConfig(n_jobs=50, nb_res=16, seed=2))
+    # window=24 gives this test its own jit cache entry (the compile-count
+    # assertion must not see other tests' sweeps)
+    cfg = EngineConfig(base=BasePolicy.EASY, psm=PSMVariant.PSUS,
+                       timeout=300, window=24)
+    timeouts = [60, 300, 900, 1800, 2400, 3600]
+    hot_plat = PlatformSpec(nb_nodes=16, power_idle=250.0)
+    scenarios = timeouts + [None, hot_plat]
+    batch = engine.sweep(plat, wl, scenarios, cfg)
+    assert len(batch) == 8
+    if batch.n_compiles is not None:
+        assert batch.n_compiles == 1
+    # a second identical-shape sweep reuses the compiled program
+    batch2 = engine.sweep(plat, wl, scenarios, cfg)
+    if batch2.n_compiles is not None:
+        assert batch2.n_compiles == 1
+
+    for i, t in enumerate(timeouts + [None]):
+        single = engine.simulate(
+            plat, wl, dataclasses.replace(cfg, timeout=t)
+        )
+        m1 = metrics_from_state(single, plat)
+        assert batch[i].makespan_s == m1.makespan_s
+        assert batch[i].mean_wait_s == m1.mean_wait_s
+        np.testing.assert_allclose(
+            batch[i].total_energy_j, m1.total_energy_j, rtol=1e-6
+        )
+    # the platform scenario: the hot idle draw was a traced operand
+    m_hot = metrics_from_state(
+        engine.simulate(hot_plat, wl, cfg), hot_plat
+    )
+    np.testing.assert_allclose(
+        batch[7].total_energy_j, m_hot.total_energy_j, rtol=1e-6
+    )
+    assert batch[7].total_energy_j > batch[1].total_energy_j
+
+
+def test_sweep_rejects_mismatched_platform_and_empty_axis():
+    plat = PlatformSpec(nb_nodes=16)
+    wl = generate_workload(GeneratorConfig(n_jobs=10, nb_res=16, seed=0))
+    cfg = EngineConfig(timeout=300)
+    with pytest.raises(ValueError, match="share node count"):
+        engine.sweep(plat, wl, [PlatformSpec(nb_nodes=8)], cfg)
+    with pytest.raises(ValueError, match="at least one scenario"):
+        engine.sweep(plat, wl, [], cfg)
+    with pytest.raises(ValueError, match="config.timeout"):
+        engine.sweep(plat, wl, [60, 120], EngineConfig())
+    # every spelling of a timeout override is guarded, not just ints
+    with pytest.raises(ValueError, match="config.timeout"):
+        engine.sweep(plat, wl, [{"timeout": 300}], EngineConfig())
+    with pytest.raises(ValueError, match="config.timeout"):
+        const = engine.make_const(plat, EngineConfig(timeout=300))
+        engine.sweep(plat, wl, [const], EngineConfig())
+
+
+# ------------------------------------------------- grouped RL env plumbing
+
+def test_grouped_env_config_validation():
+    from repro.core.rl.env import EnvConfig
+
+    with pytest.raises(ValueError, match="grouped"):
+        EnvConfig(action="group_target_fraction")  # policy not grouped
+    with pytest.raises(ValueError, match="grouped"):
+        EnvConfig(engine=EngineConfig(policy=RLController(grouped=True)))
+    cfg = EnvConfig(
+        engine=EngineConfig(policy=RLController(grouped=True)),
+        action="group_target_fraction",
+        feature="compact_groups",
+        n_groups=3,
+    )
+    assert cfg.n_actions == 3 * 9
+    assert cfg.obs_size == 20 + 6 * 3
+
+
+def test_grouped_env_episode_runs():
+    from repro.core.rl.env import EnvConfig, HPCGymEnv
+
+    plat = mixed_platform_example(16)
+    wl = generate_workload(GeneratorConfig(n_jobs=12, nb_res=16, seed=1))
+    cfg = EnvConfig(
+        engine=EngineConfig(
+            policy=RLController(grouped=True),
+            base=BasePolicy.EASY,
+            rl_decision_interval=300,
+        ),
+        action="group_target_fraction",
+        feature="compact_groups",
+        n_groups=3,
+        max_steps=400,
+    )
+    env = HPCGymEnv(plat, wl, cfg)
+    obs = env.reset()
+    assert obs.shape == (cfg.obs_size,)
+    done, steps = False, 0
+    while not done and steps < 400:
+        obs, r, done, _ = env.step(steps % cfg.n_actions)
+        assert np.isfinite(r)
+        steps += 1
+    assert done
+    d = jax.tree_util.tree_map(np.asarray, env.state.sim)
+    assert (d.job_status[d.job_exists] == 3).all()
+
+
+def test_grouped_env_n_groups_mismatch_rejected():
+    from repro.core.rl.env import EnvConfig, HPCGymEnv
+
+    plat = mixed_platform_example(16)  # 3 groups
+    wl = generate_workload(GeneratorConfig(n_jobs=5, nb_res=16, seed=0))
+    cfg = EnvConfig(
+        engine=EngineConfig(policy=RLController(grouped=True)),
+        action="group_target_fraction",
+        n_groups=2,
+    )
+    with pytest.raises(ValueError, match="node groups"):
+        HPCGymEnv(plat, wl, cfg)

@@ -169,8 +169,9 @@ def test_action_translators_within_bounds():
     s = engine.init_state(PLAT, wl, cfg.engine)
     s = engine.process_batch(s, const, cfg.engine)
     for name, fn in ACTION_TRANSLATORS.items():
-        n = action_space_size(name, 9)
+        n = action_space_size(name, 9, n_groups=1)
         for a in range(n):
-            n_on, n_off = fn(s, jnp.asarray(a), 9)
-            assert 0 <= int(n_on) <= 16
-            assert 0 <= int(n_off) <= 16
+            n_on, n_off = fn(s, const, jnp.asarray(a), 9)
+            assert n_on.shape == s.rl_on_cmd.shape
+            assert 0 <= int(n_on.sum()) <= 16
+            assert 0 <= int(n_off.sum()) <= 16

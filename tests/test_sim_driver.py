@@ -4,7 +4,8 @@ import os
 
 import pytest
 
-from repro.launch.sim import SCHEDULERS, _load_mini_yaml, run
+from repro.core.policy import scheduler_labels
+from repro.launch.sim import _load_mini_yaml, run
 
 
 def test_yaml_subset_parser(tmp_path):
@@ -48,7 +49,7 @@ def test_run_writes_outputs(tmp_path):
 
 
 def test_all_schedulers_resolvable(tmp_path):
-    for name in SCHEDULERS:
+    for name in scheduler_labels():  # every non-RL registry label
         res = run(
             {
                 "workload": "preset:fig3_small",
@@ -60,6 +61,81 @@ def test_all_schedulers_resolvable(tmp_path):
             }
         )
         assert res["total_energy_kwh"] > 0, name
+
+
+def test_rl_scheduler_runs_from_checkpoint(tmp_path):
+    """'EASY RL' + rl: {checkpoint} drives run_sim with the saved policy."""
+    import jax
+
+    from repro.core.rl.env import EnvConfig
+    from repro.core.rl.networks import policy_init
+    from repro.training.checkpoint import save_policy
+
+    ecfg = EnvConfig()
+    params = policy_init(jax.random.PRNGKey(0), ecfg.obs_size, ecfg.n_actions)
+    ckpt = str(tmp_path / "policy")
+    save_policy(
+        ckpt, params,
+        obs_size=ecfg.obs_size, n_actions=ecfg.n_actions,
+        feature=ecfg.feature, action=ecfg.action,
+        n_levels=ecfg.n_action_levels,
+    )
+    out = str(tmp_path / "rl_run")
+    res = run(
+        {
+            "workload": "preset:fig3_small",
+            "platform": 16,
+            "scheduler": "EASY RL",
+            "rl": {"checkpoint": ckpt, "decision_interval": 600},
+            "gantt": False,
+            "out": out,
+        }
+    )
+    assert res["scheduler"] == "EASY RL"
+    assert res["n_jobs"] == 200
+    assert res["total_energy_kwh"] > 0
+    assert os.path.exists(os.path.join(out, "metrics.json"))
+
+
+def test_rl_groups_checkpoint_platform_mismatch_errors(tmp_path):
+    """A grouped checkpoint trained for 2 groups must not silently mis-decode
+    actions on a 3-group platform."""
+    import jax
+
+    from repro.core.rl.networks import policy_init
+    from repro.training.checkpoint import save_policy
+    from repro.workloads.platform import mixed_platform_example
+
+    params = policy_init(jax.random.PRNGKey(0), 20, 18)  # 2 groups x 9 levels
+    ckpt = str(tmp_path / "polg")
+    save_policy(
+        ckpt, params, obs_size=20, n_actions=18, feature="compact",
+        action="group_target_fraction", n_levels=9, grouped=True, n_groups=2,
+    )
+    with pytest.raises(ValueError, match="node groups"):
+        run(
+            {
+                "workload": "preset:fig3_small",
+                "platform": mixed_platform_example(16),  # 3 groups
+                "scheduler": "EASY RL:groups",
+                "rl": {"checkpoint": ckpt},
+                "gantt": False,
+                "out": str(tmp_path / "x"),
+            }
+        )
+
+
+def test_rl_scheduler_without_checkpoint_errors(tmp_path):
+    with pytest.raises(ValueError, match="checkpoint"):
+        run(
+            {
+                "workload": "preset:fig3_small",
+                "platform": 16,
+                "scheduler": "EASY RL",
+                "gantt": False,
+                "out": str(tmp_path / "x"),
+            }
+        )
 
 
 HETERO_PLATFORM_JSON = {
