@@ -18,9 +18,11 @@ test-all:
 test-slow:
 	$(PY) -m pytest -q -m slow
 
-# nightly lane (.github/workflows/nightly.yml): the slow parity sweeps plus
-# the mixed-platform scale benchmark, which asserts the vmapped sweep stayed
-# ONE compiled program — so neither can rot outside the tier-1 gate
+# nightly lane (.github/workflows/nightly.yml): the slow parity sweeps —
+# including the full 6-scheduler x 4-timeout experiment grid asserting
+# n_compiles == 1 (tests/test_experiments.py) — plus the mixed-platform
+# scale benchmark's own one-compile assertion, so neither can rot outside
+# the tier-1 gate
 test-nightly: test-slow
 	$(PY) benchmarks/bench_scale.py --jobs 120 --nodes 256 --oracle-jobs 40 --hetero
 

@@ -3,23 +3,22 @@ across a shutdown-timeout sweep, plus the Batsim-style validation run
 (JAX engine vs sequential oracle — the paper's 1%-deviation check) and the
 Fig. 1 same-time-batching scenario (--fig1).
 
-The timeout sweep over the JAX engine is ONE compiled program (vmap over
-EngineConst.timeout) — the sweep the paper runs as 12 separate processes.
+The ENTIRE scheduler x timeout grid is ONE compiled program — the traced
+policy axis (`repro.experiments` over `engine.sweep`): the sweep the paper
+runs as 12 separate processes, and that this repo ran as one-program-per-
+scheduler before the policy axis became a traced operand.
 """
 from __future__ import annotations
 
 import argparse
 import json
-from typing import Dict, List
 
 import numpy as np
 
-from repro.core import engine
+from repro import experiments
 from repro.core.policy import from_label, scheduler_labels
 from repro.core.ref.pydes import run_pydes
 from repro.core.types import BasePolicy, EngineConfig, PSMVariant
-from repro.workloads.generator import PRESETS, GeneratorConfig, generate_workload
-from repro.workloads.platform import PlatformSpec
 
 # the six timeout-based schedulers of the paper's Figs. 4/5
 SCHEDULERS = tuple(
@@ -33,42 +32,51 @@ def sweep(
     timeouts_min=(5, 15, 30, 60),
     validate: bool = False,
 ):
-    gcfg = PRESETS[preset_name]
-    gcfg = GeneratorConfig(**{**gcfg.__dict__, "n_jobs": n_jobs})
-    wl = generate_workload(gcfg)
-    plat = PlatformSpec(nb_nodes=gcfg.nb_res)
+    from repro.workloads.generator import PRESETS
 
+    exp = experiments.Experiment(
+        name=f"fig45_{preset_name}",
+        workload={"preset": preset_name, "n_jobs": n_jobs},
+        platform=PRESETS[preset_name].nb_res,
+        schedulers=SCHEDULERS,
+        timeouts=tuple(t * 60 for t in timeouts_min),
+    )
+    experiments.run(exp)  # warm-up: compile the grid program once
+    result = experiments.run(exp)  # timed run -> steady-state jobs_per_s
+    assert result.n_compiles in (None, 1), (
+        f"the grid recompiled: {result.n_compiles} programs"
+    )
+
+    if validate:  # the oracle reruns need the resolved objects
+        plat = experiments.resolve_platform(exp.platform)
+        wl = experiments.resolve_workload(exp.workload)
     rows = []
-    for name in SCHEDULERS:
-        base, pol = from_label(name)
-        cfg = EngineConfig(base=base, policy=pol, timeout=300)
-        # the timeout sweep is ONE compiled program (engine.sweep)
-        batch = engine.sweep(plat, wl, [t * 60 for t in timeouts_min], cfg)
-        for i, t_min in enumerate(timeouts_min):
-            m = batch[i]
-            row = dict(
-                scheduler=name,
-                timeout_min=t_min,
-                total_energy_kwh=round(m.total_energy_j / 3.6e6, 3),
-                wasted_energy_kwh=round(m.wasted_energy_j / 3.6e6, 3),
-                mean_wait_s=round(m.mean_wait_s, 1),
-                utilization=round(m.utilization, 4),
+    for grid_row in result.rows:
+        name, t_s = grid_row["scheduler"], grid_row["timeout"]
+        row = dict(
+            scheduler=name,
+            timeout_min=t_s // 60,
+            total_energy_kwh=round(grid_row["total_energy_kwh"], 3),
+            wasted_energy_kwh=round(grid_row["wasted_energy_kwh"], 3),
+            mean_wait_s=round(grid_row["mean_wait_s"], 1),
+            utilization=round(grid_row["utilization"], 4),
+        )
+        if validate:
+            base, pol = from_label(name)
+            m_ref, _ = run_pydes(
+                plat, wl, EngineConfig(base=base, policy=pol, timeout=t_s)
             )
-            if validate:
-                m_ref, _ = run_pydes(
-                    plat, wl,
-                    EngineConfig(base=base, policy=pol, timeout=t_min * 60),
-                )
-                row["energy_dev"] = (
-                    abs(m.total_energy_j - m_ref.total_energy_j)
-                    / m_ref.total_energy_j
-                )
-            rows.append(row)
-    return rows
+            row["energy_dev"] = (
+                abs(grid_row["total_energy_kwh"] * 3.6e6 - m_ref.total_energy_j)
+                / m_ref.total_energy_j
+            )
+        rows.append(row)
+    return rows, result
 
 
 def fig1():
     """The same-time-batching scenario (paper Fig. 1) as a benchmark row."""
+    from repro.workloads.platform import PlatformSpec
     from repro.workloads.workload import workload_from_arrays
 
     wl = workload_from_arrays(
@@ -100,7 +108,7 @@ def main(argv=None):
         print(json.dumps(fig1(), indent=2))
         return
 
-    rows = sweep(
+    rows, result = sweep(
         args.preset,
         args.jobs,
         [int(t) for t in args.timeouts.split(",")],
@@ -110,13 +118,18 @@ def main(argv=None):
     print(",".join(cols))
     for r in rows:
         print(",".join(str(r[c]) for c in cols))
+    print(
+        f"# {len(SCHEDULERS)}x{len(rows)//len(SCHEDULERS)} grid = "
+        f"{result.n_compiles if result.n_compiles is not None else '?'} "
+        f"compiled program(s), {result.wall_s:.2f}s"
+    )
     if args.validate:
         worst = max(r["energy_dev"] for r in rows)
         print(f"# max energy deviation vs oracle: {worst:.2e} (paper: <= 1e-2)")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=2)
-    return rows
+    return rows, result
 
 
 if __name__ == "__main__":

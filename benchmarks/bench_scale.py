@@ -17,6 +17,7 @@ import time
 
 import jax
 
+from repro import experiments
 from repro.core import engine
 from repro.core.metrics import metrics_from_state
 from repro.core.ref.pydes import run_pydes
@@ -73,19 +74,40 @@ def main(argv=None):
     m = metrics_from_state(out, plat)
     batches = int(out.n_batches)
 
-    # --- vectorized engine, K-point sweep in ONE program (engine.sweep) ---
+    # --- vectorized engine, K-point grid in ONE program ---
+    # a scheduler x timeout grid through the declarative experiment layer:
+    # the policy axis is a traced operand, so mixing FCFS and EASY stacks
+    # with the timeout sweep still compiles exactly once
+    # exactly K grid points: two schedulers when K divides evenly, else one
+    # scheduler x K timeouts (the per-simulation throughput stays comparable
+    # across PRs for any --sweep value)
     K = args.sweep
-    timeouts = [300 + 300 * i for i in range(K)]
-    engine.sweep(plat, wl, timeouts, cfg)  # warm-up: compile once
+    n_sched = 2 if K >= 2 and K % 2 == 0 else 1
+    exp = experiments.Experiment(
+        name="bench_scale_grid",
+        # mirror the clamps applied to the injected workload above, so the
+        # spec stays an accurate reproduction recipe for this grid
+        workload={
+            "preset": "cea_curie", "n_jobs": args.jobs,
+            "nb_res": gcfg.nb_res, "max_res": gcfg.max_res,
+        },
+        platform=args.nodes,
+        schedulers=("EASY PSUS", "FCFS PSAS+IPM")[:n_sched],
+        timeouts=tuple(300 + 300 * i for i in range(K // n_sched)),
+        node_order=cfg.node_order,
+    )
+    assert len(exp.schedulers) * len(exp.timeouts) == K
+    experiments.run(exp, platform=plat, workload=wl)  # warm-up: compile once
     t0 = time.perf_counter()
-    batch = engine.sweep(plat, wl, timeouts, cfg)
+    result = experiments.run(exp, platform=plat, workload=wl)
     t_sweep = time.perf_counter() - t0
-    # the no-recompile guarantee: the K timeouts (and, under --hetero, the
-    # full per-node power/speed tables) were traced operands of ONE program.
-    # n_compiles is None on JAX versions without the _cache_size API
-    n_compiles = batch.n_compiles
+    # the no-recompile guarantee: the grid's schedulers and timeouts (and,
+    # under --hetero, the full per-node power/speed tables) were traced
+    # operands of ONE program. n_compiles is None on JAX versions without
+    # the _cache_size API
+    n_compiles = result.n_compiles
     if n_compiles is not None:
-        assert n_compiles == 1, f"sweep recompiled: {n_compiles} programs"
+        assert n_compiles == 1, f"grid recompiled: {n_compiles} programs"
 
     # --- sequential Python oracle (the paper's SPARS engine class) ---
     oracle_jobs = args.oracle_jobs or args.jobs
@@ -110,7 +132,8 @@ def main(argv=None):
           + ("" if oracle_jobs == args.jobs else " (extrapolated)"))
     print(f"jax_single_run_s={t_jax:.2f} (first incl. compile: {t_first:.2f})")
     print(
-        f"jax_{K}way_sweep_s={t_sweep:.2f} "
+        f"jax_{K}way_grid_s={t_sweep:.2f} "
+        f"({len(exp.schedulers)} schedulers x {len(exp.timeouts)} timeouts) "
         f"= {t_sweep/K:.2f}s per simulation "
         f"({t_oracle*K/t_sweep:.1f}x vs {K} sequential oracle runs)"
     )
@@ -120,7 +143,10 @@ def main(argv=None):
         f"total_energy_kwh={m.total_energy_j/3.6e6:.1f} "
         f"mean_wait_s={m.mean_wait_s:.0f} utilization={m.utilization:.4f}"
     )
-    return dict(t_jax=t_jax, t_oracle=t_oracle, t_sweep=t_sweep, batches=batches)
+    return dict(
+        t_jax=t_jax, t_oracle=t_oracle, t_sweep=t_sweep, batches=batches,
+        n_compiles=n_compiles, grid_k=K, jobs=args.jobs, nodes=args.nodes,
+    )
 
 
 if __name__ == "__main__":

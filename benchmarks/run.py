@@ -2,10 +2,15 @@
 
     PYTHONPATH=src python -m benchmarks.run            # quick defaults
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
+
+Besides the console report, writes machine-readable ``BENCH_grid.json``
+(per-section wall time, compile count, simulated jobs/s where applicable)
+so the performance trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -16,6 +21,8 @@ def section(title):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--out", default="BENCH_grid.json",
+                    help="machine-readable per-section results")
     args = ap.parse_args()
     t0 = time.time()
 
@@ -28,40 +35,88 @@ def main() -> None:
         bench_speedup,
     )
 
-    section("Table 4: engine speedup vs sequential oracle (CIEMAT)")
-    bench_speedup.main(["--jobs", "1000" if args.full else "300"])
+    report = {"full": bool(args.full), "sections": {}}
 
-    section("Figs. 4/5: six schedulers x timeout sweep (NASA) + validation")
-    bench_energy.main(
-        [
-            "--jobs", "2000" if args.full else "300",
-            "--timeouts", "5,15,30,60",
-            "--validate",
-        ]
+    def timed(name, fn, **extra):
+        s0 = time.perf_counter()
+        ret = fn()
+        entry = {"wall_s": round(time.perf_counter() - s0, 3), **extra}
+        report["sections"][name] = entry
+        return ret, entry
+
+    section("Table 4: engine speedup vs sequential oracle (CIEMAT)")
+    speedup_jobs = 1000 if args.full else 300
+    timed(
+        "speedup",
+        lambda: bench_speedup.main(["--jobs", str(speedup_jobs)]),
+        jobs=speedup_jobs,
+    )
+
+    section("Figs. 4/5: six schedulers x timeout grid (NASA) + validation")
+    energy_jobs = 2000 if args.full else 300
+
+    def run_energy():
+        return bench_energy.main(
+            ["--jobs", str(energy_jobs), "--timeouts", "5,15,30,60",
+             "--validate"]
+        )
+
+    (rows, grid_result), entry = timed("energy_grid", run_energy)
+    entry.update(
+        n_compiles=grid_result.n_compiles,
+        grid_rows=len(rows),
+        jobs_per_s=round(grid_result.jobs_per_s, 1),
+        max_energy_dev=max(r["energy_dev"] for r in rows),
     )
 
     section("Fig. 1: same-time batching divergence")
-    bench_energy.main(["--fig1"])
+    timed("fig1", lambda: bench_energy.main(["--fig1"]))
 
     section("CEA-Curie scale (11200 nodes)")
-    bench_scale.main(
-        ["--jobs", "1000" if args.full else "200",
-         "--sweep", "8" if args.full else "4"]
+
+    def run_scale():
+        return bench_scale.main(
+            ["--jobs", "1000" if args.full else "200",
+             "--sweep", "8" if args.full else "4"]
+        )
+
+    scale, entry = timed("scale", run_scale)
+    entry.update(
+        n_compiles=scale.get("n_compiles"),
+        grid_k=scale.get("grid_k"),
+        jobs_per_s=round(
+            scale["grid_k"] * scale["jobs"] / scale["t_sweep"], 1
+        ) if scale.get("t_sweep") else None,
+        single_run_s=round(scale["t_jax"], 3),
+        oracle_run_s=round(scale["t_oracle"], 3),
     )
 
     section("RL workflow throughput")
-    bench_rl.main(
-        ["--envs", "256" if args.full else "64",
-         "--steps", "64" if args.full else "16"]
+    rl, entry = timed(
+        "rl",
+        lambda: bench_rl.main(
+            ["--envs", "256" if args.full else "64",
+             "--steps", "64" if args.full else "16"]
+        ),
     )
+    if isinstance(rl, dict):
+        entry.update({f"steps_per_s_{k}": round(v, 1) for k, v in rl.items()})
 
     section("Kernel micro-benchmarks")
-    bench_kernels.main(["--seq", "2048" if args.full else "1024"])
+    timed(
+        "kernels",
+        lambda: bench_kernels.main(["--seq", "2048" if args.full else "1024"]),
+    )
 
     section("Roofline table (from out/dryrun)")
-    bench_roofline.main(["--mesh", "16x16"])
+    timed("roofline", lambda: bench_roofline.main(["--mesh", "16x16"]))
 
-    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+    report["total_wall_s"] = round(time.time() - t0, 1)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"\nall benchmarks done in {report['total_wall_s']:.0f}s "
+          f"(machine-readable report -> {args.out})")
 
 
 if __name__ == "__main__":

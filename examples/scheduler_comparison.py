@@ -1,6 +1,7 @@
 """Paper Figs. 4/5 in miniature: the six schedulers (FCFS/EASY x PSUS /
 PSAS(Auto On) / PSAS+IPM) swept over shutdown timeouts on a NASA-like
-workload — one vmapped XLA program per scheduler — printing the
+workload — the WHOLE 6 x 6 grid is ONE vmapped XLA program (the traced
+policy axis, via the declarative `repro.experiments` layer) — printing the
 energy-vs-wait trade-off table and writing a plot when matplotlib exists.
 
     PYTHONPATH=src python examples/scheduler_comparison.py
@@ -10,11 +11,9 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import engine
-from repro.core.policy import from_label, scheduler_labels
-from repro.core.types import EngineConfig
-from repro.workloads.generator import PRESETS, GeneratorConfig, generate_workload
-from repro.workloads.platform import PlatformSpec
+from repro import experiments
+from repro.core.policy import scheduler_labels
+from repro.workloads.generator import PRESETS
 
 # the six timeout-based schedulers (policy.from_label registry)
 SCHEDULERS = tuple(l for l in scheduler_labels() if "AlwaysOn" not in l)
@@ -22,29 +21,37 @@ TIMEOUTS_MIN = [5, 10, 20, 30, 45, 60]
 
 
 def main():
-    gcfg = GeneratorConfig(**{**PRESETS["nasa_ipsc"].__dict__, "n_jobs": 500})
-    wl = generate_workload(gcfg)
-    plat = PlatformSpec(nb_nodes=gcfg.nb_res)  # paper Table 3 power model
+    exp = experiments.Experiment(
+        name="scheduler_comparison",
+        workload={"preset": "nasa_ipsc", "n_jobs": 500},
+        platform=PRESETS["nasa_ipsc"].nb_res,  # paper Table 3 power model
+        schedulers=SCHEDULERS,
+        timeouts=tuple(t * 60 for t in TIMEOUTS_MIN),
+    )
+    result = experiments.run(exp)
+    assert result.n_compiles in (None, 1), result.n_compiles
 
-    results = {}
+    by_sched = {name: [] for name in SCHEDULERS}
+    for row in result.rows:
+        by_sched[row["scheduler"]].append(row)
+
     print(f"{'scheduler':20s} " + " ".join(f"t={t:>3d}m" for t in TIMEOUTS_MIN))
-    for name in SCHEDULERS:
-        base, pol = from_label(name)
-        cfg = EngineConfig(base=base, policy=pol, timeout=300)
-        # one compiled program per scheduler: engine.sweep vmaps the timeouts
-        batch = engine.sweep(plat, wl, [t * 60 for t in TIMEOUTS_MIN], cfg)
-        ms = list(batch.metrics)
-        results[name] = ms
+    for name, rows in by_sched.items():
         print(
             f"{name:20s} "
-            + " ".join(f"{m.total_energy_j/3.6e6:6.0f}" for m in ms)
+            + " ".join(f"{r['total_energy_kwh']:6.0f}" for r in rows)
             + "   kWh"
         )
         print(
             f"{'':20s} "
-            + " ".join(f"{m.mean_wait_s:6.0f}" for m in ms)
+            + " ".join(f"{r['mean_wait_s']:6.0f}" for r in rows)
             + "   mean wait (s)"
         )
+    print(
+        f"# 6 schedulers x {len(TIMEOUTS_MIN)} timeouts = "
+        f"{result.n_compiles if result.n_compiles is not None else '?'} "
+        f"compiled program(s), {result.wall_s:.1f}s"
+    )
 
     try:
         import matplotlib
@@ -53,10 +60,10 @@ def main():
         import matplotlib.pyplot as plt
 
         fig, (ax1, ax2) = plt.subplots(1, 2, figsize=(12, 4.5))
-        for name, ms in results.items():
-            ax1.plot(TIMEOUTS_MIN, [m.total_energy_j / 3.6e6 for m in ms],
+        for name, rows in by_sched.items():
+            ax1.plot(TIMEOUTS_MIN, [r["total_energy_kwh"] for r in rows],
                      marker="o", label=name)
-            ax2.plot(TIMEOUTS_MIN, [m.mean_wait_s for m in ms], marker="o")
+            ax2.plot(TIMEOUTS_MIN, [r["mean_wait_s"] for r in rows], marker="o")
         ax1.set_xlabel("shutdown timeout (min)")
         ax1.set_ylabel("total energy (kWh)")
         ax2.set_xlabel("shutdown timeout (min)")

@@ -12,6 +12,7 @@ from repro.core.types import (
 from repro.core.policy import (
     IPM,
     AlwaysOn,
+    PolicyParams,
     PowerPolicy,
     RLController,
     TimeoutSleep,

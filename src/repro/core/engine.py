@@ -12,30 +12,41 @@ vmaps over thousands of environments (the RL use-case: envs sharded over the
 mesh ``data`` axis), and vmaps over platform values (e.g. a timeout sweep is
 a single compiled program).
 
-Static configuration (policy structure, window size, node ordering mode)
-lives in :class:`EngineConfig`; dynamic per-run values (timeout, per-node
-transition times, per-node powers and speeds) live in :class:`EngineConst`
-so parameter sweeps don't recompile — :func:`sweep` is the public batched
-driver (stacked :class:`EngineConst`, one compiled program per sweep).
+Static configuration (window size, node ordering mode, overrun handling)
+lives in :class:`EngineConfig`; *everything else* — timeout, per-node
+transition times, powers, speeds, **and the policy axis itself** — lives in
+:class:`EngineConst` as traced operands, so parameter sweeps never
+recompile. The scheduler/policy structure is lowered to
+:class:`repro.core.policy.PolicyParams` (traced flags in
+``EngineConst.policy``): :func:`process_batch`, :func:`_ready_times`, and
+:func:`next_time` evaluate one flag-gated *superset* program that is
+bit-exact with the per-config compiles it replaced, and :func:`sweep` vmaps
+a whole scheduler x policy x timeout x platform grid through ONE compiled
+program (core/SEMANTICS.md §Traced policy axis).
 Heterogeneous platforms (mixed node groups with different power models,
 transition delays, and compute speeds) are first-class: every node-indexed
 quantity is a per-node table and energy is accounted per node group
 (core/SEMANTICS.md §Heterogeneity).
-
-Power management is composable: :func:`process_batch` calls the hooks of
-``cfg.policy`` (a :class:`repro.core.policy.PowerPolicy`) instead of
-branching on an enum — adding a policy never touches this file.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+from collections import OrderedDict
 from typing import Any, Mapping, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.policy import (
+    PolicyParams,
+    PowerPolicy,
+    apply_rl_commands,
+    from_label,
+    ipm_wake,
+    timeout_switch_off,
+)
 from repro.core.types import (
     ACTIVE,
     ALLOCATED,
@@ -47,7 +58,6 @@ from repro.core.types import (
     SWITCHING_OFF,
     SWITCHING_ON,
     WAITING,
-    BasePolicy,
     EngineConfig,
     SimMetrics,
 )
@@ -75,6 +85,7 @@ class EngineConst(NamedTuple):
     group_id: jax.Array  # i32[N] node-group index (per-group energy accounting)
     timeout: jax.Array  # i32 idle-timeout (s); INF_TIME = never
     rl_interval: jax.Array  # i32 RL decision tick; INF_TIME = event-driven only
+    policy: PolicyParams  # traced policy axis (bool flags; SEMANTICS.md)
 
 
 class SimState(NamedTuple):
@@ -171,6 +182,7 @@ def make_const(
         rl_interval=jnp.asarray(
             config.rl_decision_interval or int(INF_TIME), I32
         ),
+        policy=config.policy.params(config.base).traced(),
     )
 
 
@@ -248,13 +260,19 @@ def _clamp_job(idx: jax.Array) -> jax.Array:
     return jnp.maximum(idx, 0)
 
 
-def _ready_times(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
-    """Policy-specific node ready times (SEMANTICS.md table); INF for ACTIVE."""
+def _ready_times(s: SimState, const: EngineConst) -> jax.Array:
+    """Policy-dependent node ready times (SEMANTICS.md table); INF for ACTIVE.
+
+    ``const.policy.eager_ready`` is a *traced* flag: both columns of the
+    ready-time table are evaluated and selected per scenario, so a vmapped
+    sweep can mix eager (AlwaysOn/PSUS/RL) and transition-aware (PSAS/IPM)
+    policies in one compiled program.
+    """
     t = s.t
-    if cfg.policy.eager_ready:
-        ready = jnp.full_like(s.node_state, 0) + t
-        return jnp.where(s.node_state == ACTIVE, INF, ready)
-    ready = jnp.select(
+    eager = jnp.where(
+        s.node_state == ACTIVE, INF, jnp.full_like(s.node_state, 0) + t
+    )
+    aware = jnp.select(
         [
             s.node_state == IDLE,
             s.node_state == SWITCHING_ON,
@@ -269,7 +287,7 @@ def _ready_times(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Arra
         ],
         default=jnp.broadcast_to(INF, s.node_state.shape),
     )
-    return ready.astype(I32)
+    return jnp.where(const.policy.eager_ready, eager, aware).astype(I32)
 
 
 def _kahan_add(energy, comp, delta):
@@ -338,42 +356,33 @@ def _try_allocate(s, const, cfg, j, shadow, extra):
     cheap/fast nodes, and with ``"idle-watts"`` the key is the node's idle
     draw (prefer nodes that are cheapest to leave powered).
 
-    Eager-ready policies ignore power states, so every eligible node has
-    ready == t: under "id" ordering selection degenerates to "first res_j
-    unreserved by id", an O(N) cumsum instead of an O(N log N) argsort — the
-    §Perf item that makes 11 200-node platforms cheap (oracle tie-breaking
-    (ready, nid) is preserved: all keys equal -> lowest id). Under a key
-    ordering it is a single argsort of the order key.
+    The ready times come from the traced ``const.policy.eager_ready`` flag
+    (see :func:`_ready_times`): under an eager policy every eligible node has
+    ready == t, so the stable argsort's tie-breaking degenerates to the
+    legacy "first res_j unreserved by id" selection bit-exactly, and under a
+    key ordering to a pure order-key sort — one program covers both columns
+    of the ready-time table. (The pre-traced-axis engine special-cased the
+    eager path to an O(N) cumsum; that specialization is the price of the
+    one-compile policy grid, see SEMANTICS.md §Traced vs static.)
     """
     eligible = s.node_job < 0
     res_j = s.job_res[j]
     n_elig = jnp.sum(eligible, dtype=I32)
-    sel_by_key = cfg.node_order != "id"
-    if cfg.policy.eager_ready:
-        if sel_by_key:
-            key = jnp.where(eligible, const.order_key, jnp.inf)
-            order = jnp.argsort(key, stable=True)  # (order_key, nid)
-            sorted_sel = jnp.arange(key.shape[0]) < res_j
-            chosen = jnp.zeros_like(eligible).at[order].set(sorted_sel) & eligible
-        else:
-            chosen = eligible & (jnp.cumsum(eligible) <= res_j)
-        ready_max = s.t
+    ready = _ready_times(s, const)
+    key = jnp.where(eligible, ready, INF)
+    if cfg.node_order != "id":
+        # lexicographic (ready, order_key, nid): stable argsort by the
+        # secondary key first, then by ready over that permutation
+        perm1 = jnp.argsort(
+            jnp.where(eligible, const.order_key, jnp.inf), stable=True
+        )
+        order = perm1[jnp.argsort(key[perm1], stable=True)]
     else:
-        ready = _ready_times(s, const, cfg)
-        key = jnp.where(eligible, ready, INF)
-        if sel_by_key:
-            # lexicographic (ready, order_key, nid): stable argsort by the
-            # secondary key first, then by ready over that permutation
-            perm1 = jnp.argsort(
-                jnp.where(eligible, const.order_key, jnp.inf), stable=True
-            )
-            order = perm1[jnp.argsort(key[perm1], stable=True)]
-        else:
-            order = jnp.argsort(key, stable=True)  # ties -> lowest node id
-        sorted_sel = jnp.arange(key.shape[0]) < res_j
-        ready_sorted = key[order]
-        ready_max = jnp.max(jnp.where(sorted_sel, ready_sorted, -1)).astype(I32)
-        chosen = jnp.zeros_like(eligible).at[order].set(sorted_sel) & eligible
+        order = jnp.argsort(key, stable=True)  # ties -> lowest node id
+    sorted_sel = jnp.arange(key.shape[0]) < res_j
+    ready_sorted = key[order]
+    ready_max = jnp.max(jnp.where(sorted_sel, ready_sorted, -1)).astype(I32)
+    chosen = jnp.zeros_like(eligible).at[order].set(sorted_sel) & eligible
     pred_completion = ready_max + s.job_reqtime[j]
     bf_ok = (shadow < 0) | (pred_completion <= shadow) | (res_j <= extra)
     ok = (n_elig >= res_j) & bf_ok
@@ -396,9 +405,9 @@ def _try_allocate(s, const, cfg, j, shadow, extra):
     return ok, new, ready_max
 
 
-def _shadow(s: SimState, const: EngineConst, cfg: EngineConfig, head: jax.Array):
+def _shadow(s: SimState, const: EngineConst, head: jax.Array):
     """EASY shadow time S and extra count E for blocked head job."""
-    ready = _ready_times(s, const, cfg)
+    ready = _ready_times(s, const)
     nj = s.node_job
     cj = _clamp_job(nj)
     job_running = s.job_status[cj] == RUNNING
@@ -417,44 +426,47 @@ def _shadow(s: SimState, const: EngineConst, cfg: EngineConfig, head: jax.Array)
 
 
 def _scheduler_pass(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
+    """Rule 4 under the traced ``const.policy.backfill`` flag.
+
+    backfill=True (EASY): every window slot is attempted; the first blocked
+    head fixes the shadow time S and extra pool E, and later jobs must pass
+    the backfill test. backfill=False (FCFS): attempts stop at the first
+    failure (``blocked`` latches) and the shadow machinery never engages
+    (shadow stays -1 == head-phase for every attempt). Both behaviours are
+    one program, bit-exact with the former per-base compiles.
+    """
     window = _queue_window(s, cfg.window)
-    is_easy = cfg.base == BasePolicy.EASY
+    backfill = const.policy.backfill
 
     def body(k, carry):
         s, shadow, extra, blocked = carry
         j = window[k]
         valid = j >= 0
 
-        def attempt(s):
-            ok, s2, _ = _try_allocate(s, const, cfg, _clamp_job(j), shadow, extra)
-            return ok, s2
-
-        # FCFS: stop at first failure. EASY: after first blocked head, backfill.
-        can_try = valid & (~blocked if not is_easy else jnp.bool_(True))
-        ok, s_new = attempt(s)
+        can_try = valid & (backfill | ~blocked)
+        ok, s_new, _ = _try_allocate(s, const, cfg, _clamp_job(j), shadow, extra)
         take = can_try & ok
         s = jax.tree_util.tree_map(
             lambda a, b: jnp.where(take, b, a), s, s_new
         )
         newly_blocked = can_try & ~ok
 
-        if is_easy:
-            # compute (S, E) at the first blocked head; cond skips the
-            # O(N log N) sort on the (common) unblocked iterations
-            need_shadow = newly_blocked & (shadow < 0)
-            S, E = jax.lax.cond(
-                need_shadow,
-                lambda s_: _shadow(s_, const, cfg, _clamp_job(j)),
-                lambda s_: (jnp.asarray(-1, I32), jnp.asarray(0, I32)),
-                s,
-            )
-            shadow = jnp.where(need_shadow, S, shadow)
-            extra = jnp.where(need_shadow, E, extra)
-            # backfill consumed part of the extra pool
-            extra = jnp.where(take & (shadow >= 0), extra - s.job_res[_clamp_job(j)], extra)
-            return s, shadow, extra, blocked
-        else:
-            return s, shadow, extra, blocked | newly_blocked
+        # compute (S, E) at the first blocked EASY head; cond skips the
+        # O(N log N) sort on the (common) unblocked iterations
+        need_shadow = newly_blocked & (shadow < 0) & backfill
+        S, E = jax.lax.cond(
+            need_shadow,
+            lambda s_: _shadow(s_, const, _clamp_job(j)),
+            lambda s_: (jnp.asarray(-1, I32), jnp.asarray(0, I32)),
+            s,
+        )
+        shadow = jnp.where(need_shadow, S, shadow)
+        extra = jnp.where(need_shadow, E, extra)
+        # backfill consumed part of the extra pool
+        extra = jnp.where(
+            take & (shadow >= 0), extra - s.job_res[_clamp_job(j)], extra
+        )
+        return s, shadow, extra, blocked | newly_blocked
 
     shadow0 = jnp.asarray(-1, I32)
     extra0 = jnp.asarray(0, I32)
@@ -501,17 +513,43 @@ def _start_jobs(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
     )
 
 
+def _power_step(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
+    """Rules 6-8, flag-gated by the traced policy axis (``const.policy``).
+
+    Every rule is evaluated in every program; a scenario whose flag is off
+    selects zero nodes, leaving state and counters bit-identical to a
+    program that never contained the rule. The optional in-graph RL
+    ``controller`` (a network driving run_sim end-to-end) is the one static
+    remnant of policy structure — a callable cannot be a traced operand.
+    """
+    pp = const.policy
+    s = timeout_switch_off(s, const, ipm_cap=pp.ipm_enabled,
+                           enabled=pp.sleep_enabled)
+    s = ipm_wake(s, const, enabled=pp.ipm_enabled)
+    controller = getattr(cfg.policy, "controller", None)
+    if controller is not None:
+        on, off = controller(s, const)
+        s = s._replace(
+            rl_on_cmd=jnp.broadcast_to(on, s.rl_on_cmd.shape).astype(I32),
+            rl_off_cmd=jnp.broadcast_to(off, s.rl_off_cmd.shape).astype(I32),
+        )
+    s = apply_rl_commands(s, const, grouped=pp.rl_grouped,
+                          enabled=pp.rl_enabled)
+    return s
+
+
 def process_batch(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
     """One atomic event batch at time s.t (SEMANTICS.md rules 1-8).
 
-    Rules 6-8 (the power-management step) are the policy's ``post_schedule``
-    hook — this function contains no policy-variant branching.
+    Rules 6-8 (the power-management step) are gated by the traced
+    ``const.policy`` flags — this function contains no policy-variant
+    branching, static or otherwise.
     """
     s = _complete_jobs(s)
     s = _complete_transitions(s, const)
     s = _scheduler_pass(s, const, cfg)
     s = _start_jobs(s, const, cfg)
-    s = cfg.policy.post_schedule(s, const, cfg)
+    s = _power_step(s, const, cfg)
     return s._replace(n_batches=s.n_batches + 1)
 
 
@@ -523,9 +561,12 @@ def next_time(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
     """Earliest strictly-future event time (INF when none).
 
     Base candidates (arrivals, finishes, transition completions) plus the
-    policy's ``next_event_candidates`` hook (timeout expiries, RL ticks).
+    policy-axis candidates, gated by the traced flags: idle-timeout expiries
+    (``sleep_enabled``) and the periodic RL decision tick (``rl_enabled``).
     Policy candidates may be <= t; they are clamped out here so an
-    expired-but-guard-blocked candidate can never wedge the clock.
+    expired-but-guard-blocked candidate can never wedge the clock. With a
+    flag off (or its interval at INF) a candidate evaluates to >= INF and
+    never fires — the superset program needs no static gating.
     """
     t = s.t
     waiting_future = (s.job_status == WAITING) & (s.job_subtime > t)
@@ -534,10 +575,14 @@ def next_time(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
     fin = jnp.min(jnp.where(running & (s.job_finish > t), s.job_finish, INF))
     trans = (s.node_state == SWITCHING_ON) | (s.node_state == SWITCHING_OFF)
     tr = jnp.min(jnp.where(trans & (s.node_until > t), s.node_until, INF))
-    cands = [arr, fin, tr] + [
-        jnp.where(c > t, c, INF)
-        for c in cfg.policy.next_event_candidates(s, const, cfg)
-    ]
+    pp = const.policy
+    idle_unres = (s.node_job < 0) & (s.node_state == IDLE)
+    expiry = s.node_idle_since + const.timeout
+    to = jnp.min(
+        jnp.where(idle_unres & (expiry > t) & pp.sleep_enabled, expiry, INF)
+    )
+    tick = jnp.where(pp.rl_enabled, t + const.rl_interval, INF)
+    cands = [arr, fin, tr] + [jnp.where(c > t, c, INF) for c in (to, tick)]
     return functools.reduce(jnp.minimum, cands).astype(I32)
 
 
@@ -692,31 +737,29 @@ class SimBatch:
         return tuple(m.row() for m in self.metrics)
 
 
-# jitted sweep programs, keyed by (config, shapes): repeated sweeps with the
-# same static configuration reuse one compiled program across calls
-_SWEEP_FNS: dict = {}
+# jitted sweep programs, keyed by the *static* trace inputs only (window,
+# node_order, terminate_overrun, in-graph controller, shapes, batch cap,
+# grid width). The policy axis and every platform value are traced operands,
+# so sweeps over different scheduler/policy/timeout grids share one entry.
+# Bounded LRU: long-lived grid-search processes must not accumulate
+# compiled programs without limit.
+_SWEEP_FNS: "OrderedDict" = OrderedDict()
+_SWEEP_CACHE_SIZE = 8
 
 
-def _sets_finite_timeout(scenario) -> bool:
-    """True when a sweep scenario carries a finite timeout override — any
-    form of one: int, mapping with a "timeout" key, or prebuilt EngineConst.
-    Such scenarios need config.timeout set, or the compiled program lacks
-    the timeout-expiry event candidate and the results are silently wrong."""
-    if isinstance(scenario, bool) or scenario is None:
-        return False
-    if isinstance(scenario, (int, np.integer)):
-        return True
-    value = None
-    if isinstance(scenario, Mapping) and "timeout" in scenario:
-        value = scenario["timeout"]
-    elif isinstance(scenario, EngineConst):
-        value = scenario.timeout
-    if value is None:
-        return False
-    try:
-        return int(np.asarray(value)) != int(INF_TIME)
-    except Exception:  # traced/abstract value: assume it is a real timeout
-        return True
+def _policy_scenario_const(
+    base, policy: PowerPolicy, const: EngineConst, config: EngineConfig
+) -> EngineConst:
+    """Lower a (base, policy) scenario point onto the traced policy axis."""
+    if getattr(policy, "controller", None) is not None and (
+        policy.controller is not getattr(config.policy, "controller", None)
+    ):
+        raise ValueError(
+            "sweep scenarios cannot carry their own in-graph RL controller "
+            "(a callable is static trace structure, not a traced operand); "
+            "set the controller on the sweep's config instead"
+        )
+    return const._replace(policy=policy.params(base).traced())
 
 
 def _scenario_const(
@@ -737,20 +780,63 @@ def _scenario_const(
                 "program"
             )
         return make_const(scenario, config), scenario
-    if isinstance(scenario, Mapping):
+    if isinstance(scenario, str):  # scheduler label, e.g. "EASY PSAS+IPM"
+        b, pol = from_label(scenario)
+        return _policy_scenario_const(b, pol, base_const, config), platform
+    if isinstance(scenario, PowerPolicy):
         return (
-            base_const._replace(
-                **{k: jnp.asarray(v) for k, v in scenario.items()}
-            ),
+            _policy_scenario_const(config.base, scenario, base_const, config),
             platform,
         )
+    if isinstance(scenario, Mapping):
+        sc = dict(scenario)
+        plat, const = platform, base_const
+        if "platform" in sc:
+            p = sc.pop("platform")
+            if not isinstance(p, PlatformSpec):
+                raise TypeError(
+                    f"scenario 'platform' must be a PlatformSpec, got {p!r}"
+                )
+            const, plat = _scenario_const(p, base_const, platform, config)
+        base, pol = config.base, config.policy
+        if "scheduler" in sc:
+            base, pol = from_label(sc.pop("scheduler"))
+        base = sc.pop("base", base)
+        pol = sc.pop("policy", pol)
+        const = _policy_scenario_const(base, pol, const, config)
+        if "timeout" in sc:
+            t = sc.pop("timeout")
+            t = int(INF_TIME) if t is None else int(t)
+            const = const._replace(timeout=jnp.asarray(t, I32))
+        unknown = sorted(k for k in sc if k not in EngineConst._fields)
+        if unknown:
+            raise TypeError(
+                f"unknown sweep scenario key(s) {unknown}: expected "
+                "scheduler/base/policy/timeout/platform or EngineConst "
+                f"fields {EngineConst._fields}"
+            )
+        over = {}
+        for k, v in sc.items():
+            ref = getattr(const, k)
+            try:
+                # normalize to the field's dtype and per-node shape now, so
+                # a bad value fails here (naming the key) instead of deep
+                # inside jnp.stack/vmap
+                over[k] = jnp.broadcast_to(jnp.asarray(v, ref.dtype), ref.shape)
+            except (TypeError, ValueError) as e:
+                raise TypeError(
+                    f"invalid value for sweep scenario key {k!r} "
+                    f"(EngineConst field of shape {ref.shape}, dtype "
+                    f"{ref.dtype}): {e}"
+                ) from e
+        return const._replace(**over), plat
     if scenario is None or isinstance(scenario, (int, np.integer)):
         t = int(INF_TIME) if scenario is None else int(scenario)
         return base_const._replace(timeout=jnp.asarray(t, I32)), platform
     raise TypeError(
         f"unsupported sweep scenario {scenario!r}: expected an int timeout, "
-        "None, a PlatformSpec, an EngineConst, or a mapping of EngineConst "
-        "field overrides"
+        "None, a scheduler label, a PowerPolicy, a PlatformSpec, an "
+        "EngineConst, or a mapping of scenario overrides"
     )
 
 
@@ -763,28 +849,31 @@ def sweep(
 ) -> SimBatch:
     """Run K scenarios as ONE compiled program (vmapped :func:`run_sim`).
 
-    Each scenario is an :class:`EngineConst` axis point sharing ``config``'s
-    static structure: an int (timeout override, None = never), a
-    :class:`PlatformSpec` with the same node/group counts (full per-node
-    power/speed/delay tables are traced operands), a mapping of EngineConst
-    field overrides, or a prebuilt EngineConst. The stacked consts are
-    vmapped over, so the whole sweep compiles once; per-scenario
-    :class:`SimMetrics` come back in a :class:`SimBatch`.
+    A scenario is a point on the traced axes of :class:`EngineConst` —
+    including the policy axis — sharing only ``config``'s static structure
+    (window, node_order, terminate_overrun, in-graph RL controller):
 
-    Replaces the ad-hoc ``jax.vmap(... _replace(timeout=t))`` loops that
-    benchmarks and examples used to hand-roll.
+    * an int (timeout override; ``None`` = never),
+    * a scheduler label string (``"FCFS PSAS+IPM"`` — the ``from_label``
+      registry), replacing base *and* power policy,
+    * a :class:`~repro.core.policy.PowerPolicy` (keeps ``config.base``),
+    * a :class:`PlatformSpec` with the same node/group counts (full
+      per-node power/speed/delay tables are traced operands),
+    * a mapping combining any of the above under the keys ``scheduler`` /
+      ``base`` / ``policy`` / ``timeout`` / ``platform``, plus raw
+      :class:`EngineConst` field overrides — the form
+      ``repro.experiments`` builds its grids from,
+    * or a prebuilt :class:`EngineConst`.
+
+    The stacked consts are vmapped over, so the whole
+    scheduler x policy x timeout x platform grid compiles ONCE (the paper's
+    Figs. 4/5 six-scheduler comparison is one program, not six);
+    per-scenario :class:`SimMetrics` come back in a :class:`SimBatch`.
     """
     config = config or EngineConfig()
     scenarios = list(scenarios)
     if not scenarios:
         raise ValueError("sweep needs at least one scenario")
-    if config.timeout is None and any(map(_sets_finite_timeout, scenarios)):
-        # cfg.timeout gates the timeout-expiry event candidate at trace time
-        raise ValueError(
-            "sweeping timeouts requires config.timeout to be set (any "
-            "placeholder value); config.timeout=None compiles the program "
-            "without the timeout-expiry event"
-        )
     base_const = make_const(platform, config)
     consts, plats = [], []
     for sc in scenarios:
@@ -795,17 +884,23 @@ def sweep(
 
     s0 = init_state(platform, workload, config, job_capacity=job_capacity)
     cap = config.max_batches or default_batch_cap(len(workload))
-    key = (config, platform.nb_nodes, platform.n_groups(),
-           int(s0.job_status.shape[0]), cap)
-    fn = _SWEEP_FNS.get(key)
+    key = (
+        config.window, config.node_order, config.terminate_overrun,
+        getattr(config.policy, "controller", None),
+        platform.nb_nodes, platform.n_groups(),
+        int(s0.job_status.shape[0]), cap, len(scenarios),
+    )
+    fn = _SWEEP_FNS.pop(key, None)
     if fn is None:
+        if len(_SWEEP_FNS) >= _SWEEP_CACHE_SIZE:
+            _SWEEP_FNS.popitem(last=False)  # evict least-recently-used
         fn = jax.jit(
             jax.vmap(
                 lambda s, c: run_sim(s, c, config, max_batches=cap),
                 in_axes=(None, 0),
             )
         )
-        _SWEEP_FNS[key] = fn
+    _SWEEP_FNS[key] = fn
     out = fn(s0, stacked)
     jax.block_until_ready(out.energy)
     cache_size = getattr(fn, "_cache_size", None)

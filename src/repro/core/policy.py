@@ -1,30 +1,41 @@
-"""Composable power-policy layer (core/SEMANTICS.md §Policy hooks).
+"""Declarative power-policy layer with a *traced* policy axis
+(core/SEMANTICS.md §Traced policy axis).
 
-The engines used to branch on a ``PSMVariant`` enum in five separate
-functions; every new power-management idea meant editing the engine core.
-Here each policy is a frozen config dataclass that contributes three hooks,
-composed by ``engine.process_batch`` / ``PyDES._process_batch``:
+PR 2 made power management composable: each policy contributed JAX hooks
+(``post_schedule``/``next_event_candidates``/...) that were compiled *into*
+the engine, so a scheduler x policy grid still compiled one XLA program per
+policy stack. Here the static structure of every stack is lowered into
+:class:`PolicyParams` — a NamedTuple of **traced flags** carried in
+``EngineConst`` — and both engines evaluate one flag-gated *superset*
+program:
 
-* ``eager_ready``           — scheduling ignores power states (the PSUS-family
-                              fast path of the ready-time table),
-* ``post_schedule``         — the power-management step after job starts
-                              (SEMANTICS.md rules 6-8: switch-off / wake / RL),
-* ``next_event_candidates`` — extra wake-up times for the time advance.
+* ``backfill``      — EASY backfilling (False = FCFS stop-at-head), rule 4,
+* ``eager_ready``   — scheduling ignores power states (ready-time table),
+* ``sleep_enabled`` — rule 6 (idle-timeout switch-off) is active,
+* ``ipm_enabled``   — rule 6's demand cap + rule 7 (proactive wake),
+* ``rl_enabled``    — rule 8 (agent power commands) is active,
+* ``rl_grouped``    — rule 8 selects within node groups.
 
-Each hook has a JAX implementation (operating on ``SimState``) and a ``_ref``
-twin operating on the sequential Python oracle (``core/ref/pydes.py``) —
-both engines stay bit-exact per policy, enforced by the parity suite.
-Policies are static engine configuration: hashable frozen dataclasses, so an
-``EngineConfig`` remains a valid jit cache key.
+Because the flags are traced operands (not static config), a whole
+scheduler x policy x timeout grid vmaps through ONE compiled program
+(``engine.sweep`` / ``repro.experiments``), bit-exact with the per-config
+compiles it replaces. A :class:`PowerPolicy` is now purely declarative: it
+*names* a point on the traced axis via :meth:`PowerPolicy.params`. Adding a
+genuinely new power-management *rule* (not a new combination) means
+extending the superset: a new flag here, its gate in both engines, and a
+SEMANTICS.md entry — that is the deliberate price of the one-compile grid.
 
-``PSMVariant`` survives only as a deprecation shim (`policy_from_psm`);
+The only remaining static policy structure is ``RLController.controller``:
+an in-graph policy network cannot be a traced operand.
+
+``PSMVariant`` survives only as a deprecation shim (``policy_from_psm``);
 ``from_label`` is the single scheduler-string registry consumed by
-``launch/sim.py``, the benchmarks, and the examples.
+``launch/sim.py``, ``repro.experiments``, the benchmarks, and the examples.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,36 +56,64 @@ I32 = jnp.int32
 INF = jnp.asarray(INF_TIME, I32)
 
 
+class PolicyParams(NamedTuple):
+    """The traced policy axis: per-scenario behaviour flags (all bool).
+
+    Members are JAX-traced operands inside the engine (``EngineConst.policy``)
+    and plain Python bools on the oracle side (``PyDES.pp``); identical
+    semantics either way (core/SEMANTICS.md §Traced policy axis). Sweeping
+    any of these — i.e. sweeping schedulers/policies — never recompiles.
+    """
+
+    backfill: Any  # EASY backfilling; False = FCFS stop-at-head (rule 4)
+    eager_ready: Any  # scheduling ignores power states (ready-time table)
+    sleep_enabled: Any  # rule 6 active (idle-timeout switch-off)
+    ipm_enabled: Any  # rule 6 demand cap + rule 7 proactive wake
+    rl_enabled: Any  # rule 8 active (agent power commands)
+    rl_grouped: Any  # rule 8 selects per node group
+
+    def traced(self) -> "PolicyParams":
+        """The jnp.bool_ spelling carried in EngineConst (vmap-stackable)."""
+        return PolicyParams(*[jnp.asarray(bool(v)) for v in self])
+
+
 # ---------------------------------------------------------------------------
-# shared JAX rule implementations (SEMANTICS.md rules 6-8)
+# shared rule implementations (SEMANTICS.md rules 6-8), flag-gated
 # ---------------------------------------------------------------------------
+#
+# ``enabled`` / ``ipm_cap`` / ``grouped`` accept Python bools (specialized
+# call sites: the RL env applies commands unconditionally) *or* traced
+# scalars (the engine's superset power step). A disabled rule selects no
+# nodes and leaves every state array and counter bit-identical.
 
 def queued_demand(s) -> jax.Array:
     waiting = (s.job_status == WAITING) & (s.job_subtime <= s.t)
     return jnp.sum(jnp.where(waiting, s.job_res, 0))
 
 
-def timeout_switch_off(s, const, ipm_cap: bool):
+def timeout_switch_off(s, const, ipm_cap, enabled=True):
     """Rule 6: switch off expired idle nodes, longest-idle first (ties by id).
 
-    ``ipm_cap=True`` (PSAS+IPM) caps the count so available capacity never
-    drops below queued demand.
+    ``ipm_cap`` (PSAS+IPM) caps the count so available capacity never drops
+    below queued demand. Both gates may be traced.
     """
     cand = (
         (s.node_job < 0)
         & (s.node_state == IDLE)
         & (s.t - s.node_idle_since >= const.timeout)
+        & enabled
     )
     n_cand = jnp.sum(cand, dtype=I32)
-    if ipm_cap:
-        avail = jnp.sum(
-            (s.node_job < 0)
-            & ((s.node_state == IDLE) | (s.node_state == SWITCHING_ON)),
-            dtype=I32,
-        )
-        allowed = jnp.maximum(avail - queued_demand(s), 0)
-    else:
-        allowed = jnp.asarray(s.node_state.shape[0], I32)
+    avail = jnp.sum(
+        (s.node_job < 0)
+        & ((s.node_state == IDLE) | (s.node_state == SWITCHING_ON)),
+        dtype=I32,
+    )
+    allowed = jnp.where(
+        ipm_cap,
+        jnp.maximum(avail - queued_demand(s), 0),
+        jnp.asarray(s.node_state.shape[0], I32),
+    )
     k = jnp.minimum(n_cand, allowed)
     key = jnp.where(cand, s.node_idle_since, INF)  # longest idle first
     order = jnp.argsort(key, stable=True)
@@ -87,7 +126,7 @@ def timeout_switch_off(s, const, ipm_cap: bool):
     )
 
 
-def ipm_wake(s, const):
+def ipm_wake(s, const, enabled=True):
     """Rule 7: wake sleeping nodes (lowest id first) to cover queued demand."""
     avail = jnp.sum(
         (s.node_job < 0)
@@ -96,7 +135,7 @@ def ipm_wake(s, const):
     )
     deficit = queued_demand(s) - avail
     cand = (s.node_job < 0) & (s.node_state == SLEEP)
-    sel = cand & (jnp.cumsum(cand) <= deficit)  # lowest id first
+    sel = cand & (jnp.cumsum(cand) <= deficit) & enabled  # lowest id first
     return s._replace(
         node_state=jnp.where(sel, SWITCHING_ON, s.node_state),
         node_until=jnp.where(sel, s.t + const.t_on, s.node_until),
@@ -113,7 +152,7 @@ def _select_longest_idle(cand, idle_since, k):
     return jnp.zeros_like(cand).at[order].set(sel_sorted) & cand
 
 
-def apply_rl_commands(s, const, grouped: bool = False):
+def apply_rl_commands(s, const, grouped=False, enabled=True):
     """Rule 8: apply pending RL power commands, then clear them.
 
     ``rl_on_cmd``/``rl_off_cmd`` are ``i32[G]`` per-group command vectors.
@@ -126,25 +165,40 @@ def apply_rl_commands(s, const, grouped: bool = False):
       nodes (lowest id first) and sleeps up to ``off[g]`` of *its* unreserved
       idle nodes (longest idle first); groups are independent, so the
       expensive island can be slept while the cheap one is woken in one step.
+
+    ``grouped`` may be a Python bool (specialized: the RL env's command
+    application) or a traced scalar (the engine's superset power step, which
+    then evaluates both selection modes and selects per scenario).
     """
     cand_on = (s.node_job < 0) & (s.node_state == SLEEP)
     cand_off = (s.node_job < 0) & (s.node_state == IDLE)
     G = s.rl_on_cmd.shape[0]
-    if grouped:
+
+    def _grouped():
         same = const.group_id[None, :] == jnp.arange(G, dtype=I32)[:, None]
         ranks_on = jnp.cumsum(cand_on[None, :] & same, axis=1)  # [G, N]
-        sel_on = cand_on & jnp.any(
-            same & (ranks_on <= s.rl_on_cmd[:, None]), axis=0
-        )
-        sel_off_g = jax.vmap(_select_longest_idle, in_axes=(0, None, 0))(
+        on = cand_on & jnp.any(same & (ranks_on <= s.rl_on_cmd[:, None]), axis=0)
+        off_g = jax.vmap(_select_longest_idle, in_axes=(0, None, 0))(
             cand_off[None, :] & same, s.node_idle_since, s.rl_off_cmd
         )
-        sel_off = jnp.any(sel_off_g, axis=0)
-    else:
-        sel_on = cand_on & (jnp.cumsum(cand_on) <= jnp.sum(s.rl_on_cmd))
-        sel_off = _select_longest_idle(
+        return on, jnp.any(off_g, axis=0)
+
+    def _global():
+        on = cand_on & (jnp.cumsum(cand_on) <= jnp.sum(s.rl_on_cmd))
+        off = _select_longest_idle(
             cand_off, s.node_idle_since, jnp.sum(s.rl_off_cmd)
         )
+        return on, off
+
+    if isinstance(grouped, bool):  # specialized call site: one mode only
+        sel_on, sel_off = _grouped() if grouped else _global()
+    else:  # traced flag: evaluate both modes, select per scenario
+        on_g, off_g = _grouped()
+        on_gl, off_gl = _global()
+        sel_on = jnp.where(grouped, on_g, on_gl)
+        sel_off = jnp.where(grouped, off_g, off_gl)
+    sel_on = sel_on & enabled
+    sel_off = sel_off & enabled
     state = jnp.where(sel_on, SWITCHING_ON, s.node_state)
     state = jnp.where(sel_off, SWITCHING_OFF, state)
     until = jnp.where(sel_on, s.t + const.t_on, s.node_until)
@@ -152,24 +206,26 @@ def apply_rl_commands(s, const, grouped: bool = False):
     return s._replace(
         node_state=state,
         node_until=until,
-        rl_on_cmd=jnp.zeros(G, I32),
-        rl_off_cmd=jnp.zeros(G, I32),
+        rl_on_cmd=jnp.where(enabled, jnp.zeros(G, I32), s.rl_on_cmd),
+        rl_off_cmd=jnp.where(enabled, jnp.zeros(G, I32), s.rl_off_cmd),
         n_switch_on=s.n_switch_on + jnp.sum(sel_on, dtype=I32),
         n_switch_off=s.n_switch_off + jnp.sum(sel_off, dtype=I32),
     )
 
 
 # ---------------------------------------------------------------------------
-# the policy protocol
+# the declarative policy stacks
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class PowerPolicy:
-    """Base protocol: a no-op power manager (never sleeps anything).
+    """Base declarative policy: a no-op power manager (never sleeps anything).
 
-    Subclasses override the hooks below. All hooks are pure; the JAX set
-    operates on ``engine.SimState``, the ``_ref`` set on a ``PyDES``
-    instance — implement both for any new policy (SEMANTICS.md).
+    A policy names a point on the traced policy axis via :meth:`params`;
+    the engines contain the (flag-gated) rule implementations. Policies are
+    hashable frozen dataclasses, so an ``EngineConfig`` remains a valid jit
+    cache key; they carry no trace structure except an optional in-graph
+    ``controller`` (RL).
     """
 
     @property
@@ -177,19 +233,22 @@ class PowerPolicy:
         """True: scheduling treats every non-ACTIVE node as ready at t."""
         return True
 
-    # ---- JAX engine hooks ----
-    def post_schedule(self, s, const, cfg):
-        return s
+    def flags(self) -> dict:
+        """Rule-enable flags this stack contributes (see PolicyParams)."""
+        return dict(
+            sleep_enabled=False,
+            ipm_enabled=False,
+            rl_enabled=False,
+            rl_grouped=False,
+        )
 
-    def next_event_candidates(self, s, const, cfg) -> List[jax.Array]:
-        return []
-
-    # ---- sequential-oracle hooks ----
-    def post_schedule_ref(self, des) -> None:
-        return None
-
-    def next_event_candidates_ref(self, des) -> List[float]:
-        return []
+    def params(self, base: BasePolicy = BasePolicy.EASY) -> PolicyParams:
+        """Lower (base, self) onto the traced policy axis."""
+        return PolicyParams(
+            backfill=(BasePolicy(base) == BasePolicy.EASY),
+            eager_ready=self.eager_ready,
+            **self.flags(),
+        )
 
     def psm_label(self) -> str:
         return "AlwaysOn"
@@ -205,9 +264,9 @@ class TimeoutSleep(PowerPolicy):
     """Idle-timeout switch-off (legacy PSUS / PSAS).
 
     ``transition_aware=False`` (PSUS): scheduling ignores power states — jobs
-    simply wait for rule-5 wake-ups, keeping the O(N) allocation fast path.
-    ``transition_aware=True`` (PSAS "Auto On"): ready times account for
-    transition delays (the SEMANTICS.md variant table's right column).
+    simply wait for rule-5 wake-ups. ``transition_aware=True`` (PSAS
+    "Auto On"): ready times account for transition delays (the SEMANTICS.md
+    variant table's right column).
     """
 
     transition_aware: bool = False
@@ -216,27 +275,8 @@ class TimeoutSleep(PowerPolicy):
     def eager_ready(self) -> bool:
         return not self.transition_aware
 
-    def post_schedule(self, s, const, cfg):
-        return timeout_switch_off(s, const, ipm_cap=False)
-
-    def next_event_candidates(self, s, const, cfg):
-        if cfg.timeout is None:
-            return []
-        idle_unres = (s.node_job < 0) & (s.node_state == IDLE)
-        expiry = s.node_idle_since + const.timeout
-        return [jnp.min(jnp.where(idle_unres & (expiry > s.t), expiry, INF))]
-
-    def post_schedule_ref(self, des):
-        des._timeout_switch_off(ipm_cap=False)
-
-    def next_event_candidates_ref(self, des):
-        if des.cfg.timeout is None:
-            return []
-        return [
-            nd.idle_since + des.cfg.timeout
-            for nd in des.nodes
-            if nd.job < 0 and nd.state == IDLE
-        ]
+    def flags(self) -> dict:
+        return {**super().flags(), "sleep_enabled": True}
 
     def psm_label(self) -> str:
         return "PSAS(AutoOn)" if self.transition_aware else "PSUS"
@@ -250,13 +290,8 @@ class IPM(TimeoutSleep):
 
     transition_aware: bool = True
 
-    def post_schedule(self, s, const, cfg):
-        s = timeout_switch_off(s, const, ipm_cap=True)
-        return ipm_wake(s, const)
-
-    def post_schedule_ref(self, des):
-        des._timeout_switch_off(ipm_cap=True)
-        des._ipm_wake()
+    def flags(self) -> dict:
+        return {**super().flags(), "ipm_enabled": True}
 
     def psm_label(self) -> str:
         return "PSAS+IPM"
@@ -271,36 +306,22 @@ class RLController(PowerPolicy):
     commands target node groups individually (see ``apply_rl_commands``).
 
     ``controller``: optional in-graph policy ``f(s, const) -> (on[G], off[G])``
-    evaluated inside ``post_schedule`` — this is how a checkpointed network
-    drives ``run_sim`` end-to-end as one compiled program (``launch/sim.py``).
-    When None, pending commands set externally (the RL env path) are applied.
+    evaluated inside the engine's power step — this is how a checkpointed
+    network drives ``run_sim`` end-to-end as one compiled program
+    (``launch/sim.py``). When None, pending commands set externally (the RL
+    env path) are applied. The controller is the one piece of policy
+    structure that stays *static*: a network cannot be a traced flag.
     """
 
     grouped: bool = False
     controller: Optional[Callable] = None
 
-    def post_schedule(self, s, const, cfg):
-        if self.controller is not None:
-            on, off = self.controller(s, const)
-            s = s._replace(
-                rl_on_cmd=jnp.broadcast_to(on, s.rl_on_cmd.shape).astype(I32),
-                rl_off_cmd=jnp.broadcast_to(off, s.rl_off_cmd.shape).astype(I32),
-            )
-        return apply_rl_commands(s, const, grouped=self.grouped)
-
-    def next_event_candidates(self, s, const, cfg):
-        return [s.t + const.rl_interval]
-
-    def post_schedule_ref(self, des):
-        if des.rl_policy is not None:
-            n_on, n_off = des.rl_policy(des)
-            des._apply_rl(n_on, n_off)
-            des._start_jobs()
-
-    def next_event_candidates_ref(self, des):
-        if des.cfg.rl_decision_interval:
-            return [des.t + des.cfg.rl_decision_interval]
-        return []
+    def flags(self) -> dict:
+        return {
+            **super().flags(),
+            "rl_enabled": True,
+            "rl_grouped": self.grouped,
+        }
 
     def psm_label(self) -> str:
         return "RL:groups" if self.grouped else "RL"

@@ -31,7 +31,6 @@ from repro.core.types import (
     SWITCHING_OFF,
     SWITCHING_ON,
     WAITING,
-    BasePolicy,
     EngineConfig,
     SimMetrics,
 )
@@ -79,6 +78,12 @@ class PyDES:
     ):
         self.p = platform
         self.cfg = config
+        # the traced policy axis, as concrete host values: the oracle
+        # mirrors the engine's flag-gated superset program — a concrete
+        # `if flag:` is the sequential spelling of the engine's
+        # `jnp.where(flag, ...)` gates (core/SEMANTICS.md §Traced policy
+        # axis), so both engines stay bit-exact per scenario
+        self.pp = config.policy.params(config.base)
         self.split = split_simultaneous_events
         self.rl_policy = rl_policy
         # per-node platform tables (core/SEMANTICS.md §Heterogeneity);
@@ -134,7 +139,7 @@ class PyDES:
 
     # ---------- ready times (SEMANTICS.md variant table) ----------
     def _ready(self, nd: _Node) -> float:
-        if self.cfg.policy.eager_ready:
+        if self.pp.eager_ready:
             return self.t
         if nd.state == IDLE:
             return self.t
@@ -224,7 +229,7 @@ class PyDES:
             if shadow is None:
                 ok = self._try_allocate(j, None, None)
                 if not ok:
-                    if self.cfg.base == BasePolicy.FCFS:
+                    if not self.pp.backfill:  # FCFS: stop at first failure
                         break
                     shadow, extra = self._shadow(j)
             else:
@@ -328,10 +333,10 @@ class PyDES:
         """Rule 8: wake lowest-id sleeping; sleep longest-idle unreserved.
 
         Global mode takes scalar counts (sequences are summed); grouped mode
-        (``cfg.policy.grouped``) takes ``[G]`` per-group counts and selects
+        (``pp.rl_grouped``) takes ``[G]`` per-group counts and selects
         within each node group independently (core/policy.py).
         """
-        grouped = getattr(self.cfg.policy, "grouped", False)
+        grouped = self.pp.rl_grouped
         if grouped:
             # per-group budgets, indexed by the node's group id
             on_budget = [int(v) for v in np.asarray(n_on).reshape(-1)]
@@ -373,7 +378,16 @@ class PyDES:
         for nd in self.nodes:
             if nd.state in (SWITCHING_ON, SWITCHING_OFF):
                 cand.append(nd.until)
-        cand.extend(self.cfg.policy.next_event_candidates_ref(self))
+        # policy-axis candidates, mirroring the engine's flag gates:
+        # idle-timeout expiries (sleep_enabled) and the RL decision tick
+        if self.pp.sleep_enabled and self.cfg.timeout is not None:
+            cand.extend(
+                nd.idle_since + self.cfg.timeout
+                for nd in self.nodes
+                if nd.job < 0 and nd.state == IDLE
+            )
+        if self.pp.rl_enabled and self.cfg.rl_decision_interval:
+            cand.append(self.t + self.cfg.rl_decision_interval)
         # strictly future events only: an expired-but-guard-blocked timeout
         # otherwise wedges the clock (the guard is re-evaluated at every batch)
         nt = min((c for c in cand if c > self.t), default=INF)
@@ -409,8 +423,17 @@ class PyDES:
         # 4-5. schedule + start
         self._scheduler_pass()
         self._start_jobs()
-        # 6-8. power management: the policy's oracle-side hook
-        self.cfg.policy.post_schedule_ref(self)
+        # 6-8. power management: the same flag-gated rule sequence as the
+        # engine's _power_step (a disabled rule selects no nodes there;
+        # here it is simply skipped — identical state either way)
+        if self.pp.sleep_enabled:
+            self._timeout_switch_off(ipm_cap=self.pp.ipm_enabled)
+        if self.pp.ipm_enabled:
+            self._ipm_wake()
+        if self.pp.rl_enabled and self.rl_policy is not None:
+            n_on, n_off = self.rl_policy(self)
+            self._apply_rl(n_on, n_off)
+            self._start_jobs()
 
     def _complete(self, j: _Job) -> None:
         self.counters["job_lifecycle"] += 1

@@ -1,0 +1,40 @@
+"""Declarative experiment layer over the one-compile grid engine.
+
+An :class:`Experiment` is a frozen, JSON-round-trippable spec of a full
+study — workload, platform, a scheduler x timeout grid, replications, output
+directory — and :func:`run` evaluates the *whole grid* as ONE compiled
+program per replication via ``engine.sweep``'s traced policy axis
+(core/SEMANTICS.md §Traced policy axis). This is the paper's
+"JSON-configurable, reproducible experiments" layer (§2.3.2/2.3.3), scaled
+to grids: the Figs. 4/5 six-scheduler comparison is one program, not six.
+
+    from repro import experiments
+    exp = experiments.Experiment(
+        name="fig45",
+        workload={"preset": "nasa_ipsc", "n_jobs": 400},
+        platform=128,
+        schedulers=("EASY PSUS", "EASY PSAS", "EASY PSAS+IPM"),
+        timeouts=(300, 900, 1800),
+    )
+    result = experiments.run(exp)     # result.n_compiles == 1
+    exp.save("exp.json")              # and back: Experiment.load("exp.json")
+
+CLI: ``python -m repro.launch.sim --experiment exp.json``.
+"""
+from repro.experiments.spec import (
+    Experiment,
+    check_unknown_keys,
+    resolve_platform,
+    resolve_workload,
+)
+from repro.experiments.runner import ExperimentResult, run, run_file
+
+__all__ = [
+    "Experiment",
+    "ExperimentResult",
+    "check_unknown_keys",
+    "resolve_platform",
+    "resolve_workload",
+    "run",
+    "run_file",
+]

@@ -1,0 +1,156 @@
+"""Evaluate an :class:`Experiment`: the whole grid, one compiled program.
+
+``run(experiment)`` resolves the spec, builds the scheduler x timeout
+scenario grid, and pushes it through ``engine.sweep`` — the traced policy
+axis makes the full grid (all replications included) exactly ONE compiled
+XLA program. Results come back as a flat rows table (one dict per grid
+point per replication) and, when ``experiment.out`` is set, are written as
+a deterministic ``metrics.json`` (byte-identical across reruns of the same
+spec — the golden-file anchor in ``tests/test_experiments.py``) plus a
+``rows.csv`` for spreadsheet use.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import json
+import os
+import time
+from typing import Optional, Tuple
+
+from repro.core import engine
+from repro.experiments.spec import Experiment, resolve_platform, resolve_workload
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentResult:
+    """Rows are scheduler-major x timeout x replication, in grid order.
+
+    ``n_compiles`` is the compiled-program count of the grid's jitted
+    driver (the one-compile guarantee: 1, or None on JAX versions without
+    cache introspection). ``wall_s`` is host wall time for all sweeps —
+    reported, never written into metrics.json (determinism).
+    """
+
+    experiment: Experiment
+    rows: Tuple[dict, ...]
+    n_compiles: Optional[int]
+    wall_s: float
+
+    @property
+    def jobs_per_s(self) -> float:
+        sim_jobs = sum(r["n_jobs"] for r in self.rows)
+        return sim_jobs / self.wall_s if self.wall_s > 0 else 0.0
+
+    def table(self) -> str:
+        """A compact fixed-width text table (CLI output)."""
+        cols = ["scheduler", "timeout", "replication", "total_energy_kwh",
+                "wasted_energy_kwh", "mean_wait_s", "utilization"]
+        lines = [" ".join(f"{c:>18s}" for c in cols)]
+        for r in self.rows:
+            cells = []
+            for c in cols:
+                v = r.get(c)
+                cells.append(
+                    f"{v:>18.3f}" if isinstance(v, float) else f"{str(v):>18s}"
+                )
+            lines.append(" ".join(cells))
+        return "\n".join(lines)
+
+
+def _metrics_payload(result: ExperimentResult) -> dict:
+    return {
+        "experiment": dataclasses.asdict(result.experiment),
+        "n_compiles": result.n_compiles,
+        "rows": list(result.rows),
+    }
+
+
+def run(
+    experiment: Experiment,
+    platform=None,
+    workload=None,
+) -> ExperimentResult:
+    """Run the experiment grid; one compiled program for everything.
+
+    ``platform`` / ``workload`` optionally inject pre-resolved objects
+    (benchmarks construct platforms programmatically); the spec remains the
+    declarative record. With both injected and ``replications == 1`` the
+    spec's workload/platform entries are never resolved. A workload can only
+    be injected into a single-replication run: replications r >= 1 would be
+    resolved from the spec, silently mixing two different studies.
+    """
+    if workload is not None and experiment.replications > 1:
+        raise ValueError(
+            "cannot inject a workload into a run with replications > 1: "
+            "replications >= 1 regenerate from the spec's workload entry, "
+            "which need not match the injected object"
+        )
+    if experiment.out and (platform is not None or workload is not None):
+        raise ValueError(
+            "cannot combine injected platform/workload objects with "
+            "experiment.out: metrics.json records the spec as the "
+            "reproduction recipe, which would not describe what actually "
+            "ran; write outputs yourself or put the platform/workload in "
+            "the spec"
+        )
+    plat = platform if platform is not None else resolve_platform(experiment.platform)
+    cfg = experiment.engine_config()
+    scenarios = experiment.grid()
+
+    rows = []
+    n_compiles: Optional[int] = None
+    t0 = time.perf_counter()
+    for r in range(experiment.replications):
+        # an injected workload implies replications == 1 (guarded above)
+        wl = (
+            workload
+            if workload is not None
+            else resolve_workload(experiment.workload, replication=r)
+        )
+        batch = engine.sweep(plat, wl, scenarios, cfg)
+        if batch.n_compiles is not None:
+            n_compiles = max(n_compiles or 0, batch.n_compiles)
+        for sc, m in zip(scenarios, batch.metrics):
+            rows.append(
+                {
+                    "scheduler": sc["scheduler"],
+                    "timeout": sc["timeout"],
+                    "replication": r,
+                    **m.row(),
+                }
+            )
+    wall = time.perf_counter() - t0
+
+    result = ExperimentResult(
+        experiment=experiment,
+        rows=tuple(rows),
+        n_compiles=n_compiles,
+        wall_s=wall,
+    )
+    if experiment.out:
+        write_outputs(result, experiment.out)
+    return result
+
+
+def write_outputs(result: ExperimentResult, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "metrics.json"), "w") as f:
+        json.dump(_metrics_payload(result), f, indent=2, sort_keys=True)
+        f.write("\n")
+    rows = result.rows
+    cols = sorted({k for r in rows for k in r}, key=lambda c: (
+        ["scheduler", "timeout", "replication"].index(c)
+        if c in ("scheduler", "timeout", "replication")
+        else 3,
+        c,
+    ))
+    with open(os.path.join(out_dir, "rows.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=cols)
+        w.writeheader()
+        w.writerows(rows)
+
+
+def run_file(path: str) -> ExperimentResult:
+    """CLI entry: load a spec file and run it (``launch/sim.py --experiment``)."""
+    return run(Experiment.load(path))

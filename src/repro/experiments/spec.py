@@ -1,0 +1,178 @@
+"""The frozen :class:`Experiment` spec and its JSON round-trip.
+
+The spec is deliberately *declarative*: every field is a JSON value (or a
+tuple of them), so ``to_json``/``from_json`` round-trip losslessly and a
+spec file fully reproduces a study (seeded generators, pinned grids). The
+workload/platform resolvers below are the single spelling shared by the
+experiment runner and ``launch/sim.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Mapping, Optional, Tuple, Union
+
+from repro.workloads.generator import PRESETS, GeneratorConfig, generate_workload
+from repro.workloads.platform import PlatformSpec, load_platform
+from repro.workloads.workload import Workload, load_workload
+
+
+def check_unknown_keys(keys, known, where: str) -> None:
+    """Reject unknown config keys loudly (with a did-you-mean hint) instead
+    of silently ignoring typos. Shared by the experiment spec and the
+    ``launch/sim.py`` single-run config."""
+    unknown = sorted(set(keys) - set(known))
+    if not unknown:
+        return
+    import difflib
+
+    hints = []
+    for k in unknown:
+        close = difflib.get_close_matches(str(k), sorted(known), n=1)
+        hints.append(
+            f"{k!r}" + (f" (did you mean {close[0]!r}?)" if close else "")
+        )
+    raise ValueError(
+        f"unknown {where} key(s): {', '.join(hints)}; "
+        f"known keys: {', '.join(sorted(known))}"
+    )
+
+
+def check_workload_keys(spec: Mapping) -> None:
+    """Fail fast (with a did-you-mean hint) on typo'd generator-override
+    keys in a mapping workload spec — otherwise they surface as an opaque
+    ``dataclasses.replace`` TypeError at run() time."""
+    known = {f.name for f in dataclasses.fields(GeneratorConfig)} | {"preset"}
+    check_unknown_keys(spec, known, "workload spec")
+
+
+def resolve_workload(spec, replication: int = 0) -> Workload:
+    """Workload from a declarative spec.
+
+    * ``"preset:<name>"`` — a seeded generator preset,
+    * ``{"preset": <name>, ...GeneratorConfig overrides}`` — preset with
+      overrides (e.g. ``n_jobs``),
+    * ``{...GeneratorConfig fields}`` — a full generator config,
+    * ``"profiles"`` — the model-training job-profile workload,
+    * a path to a workload JSON file, or an in-memory :class:`Workload`.
+
+    ``replication`` offsets the generator seed (replication r uses
+    ``seed + r``); file-backed and in-memory workloads reject r > 0 —
+    there is nothing to vary.
+    """
+    gcfg = None
+    if isinstance(spec, str) and spec.startswith("preset:"):
+        gcfg = PRESETS[spec.split(":", 1)[1]]
+    elif isinstance(spec, Mapping):
+        check_workload_keys(spec)
+        over = dict(spec)
+        base = PRESETS[over.pop("preset")] if "preset" in over else GeneratorConfig()
+        gcfg = dataclasses.replace(base, **over)
+    if gcfg is not None:
+        if replication:
+            gcfg = dataclasses.replace(gcfg, seed=gcfg.seed + replication)
+        return generate_workload(gcfg)
+    if replication:
+        raise ValueError(
+            f"workload spec {spec!r} is not seeded-generated; replications "
+            "require a preset/generator spec (the seed is the replicate axis)"
+        )
+    if isinstance(spec, Workload):
+        return spec
+    if spec == "profiles":
+        from repro.configs.job_profiles import profile_workload
+
+        return profile_workload()
+    return load_workload(spec)
+
+
+def resolve_platform(spec) -> PlatformSpec:
+    """Platform from a declarative spec: an int node count, a platform JSON
+    path or parsed dict (homogeneous / node_groups / per-node schemas), or
+    an in-memory :class:`PlatformSpec`."""
+    if isinstance(spec, PlatformSpec):
+        return spec
+    if isinstance(spec, int):
+        return PlatformSpec(nb_nodes=spec)
+    return load_platform(spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class Experiment:
+    """A declarative, reproducible grid study (JSON-round-trippable).
+
+    The grid is the cross product ``schedulers x timeouts``, evaluated as
+    ONE compiled program per replication (``engine.sweep`` over the traced
+    policy axis). Scheduler labels come from ``policy.from_label``; a
+    timeout of ``None`` means "never switch off".
+    """
+
+    name: str
+    workload: Union[str, dict]  # resolve_workload spec
+    platform: Union[str, int, dict]  # resolve_platform spec
+    schedulers: Tuple[str, ...] = ("EASY PSUS",)
+    timeouts: Tuple[Optional[int], ...] = (None,)
+    node_order: str = "id"  # "id" | "cheap" | "idle-watts" (static)
+    terminate_overrun: bool = False
+    window: int = 32  # scheduler scan window (static)
+    replications: int = 1  # generator-seed replicates (seed, seed+1, ...)
+    out: Optional[str] = None  # output dir for metrics.json / rows.csv
+
+    def __post_init__(self):
+        # normalize JSON lists to tuples so specs hash and compare stably
+        object.__setattr__(self, "schedulers", tuple(self.schedulers))
+        object.__setattr__(self, "timeouts", tuple(self.timeouts))
+        if not self.schedulers or not self.timeouts:
+            raise ValueError("experiment grid needs >= 1 scheduler and timeout")
+        if self.replications < 1:
+            raise ValueError("replications must be >= 1")
+        from repro.core.policy import from_label
+
+        for label in self.schedulers:
+            from_label(label)  # fail fast on unknown labels
+        if isinstance(self.workload, Mapping):
+            check_workload_keys(self.workload)  # fail fast on typo'd keys
+
+    # ---- grid ----
+    def grid(self):
+        """The scenario mappings ``engine.sweep`` consumes, in row order
+        (scheduler-major, then timeout)."""
+        return [
+            {"scheduler": s, "timeout": t}
+            for s in self.schedulers
+            for t in self.timeouts
+        ]
+
+    def engine_config(self):
+        """The shared static EngineConfig (every grid point is a traced
+        scenario over it)."""
+        from repro.core.types import EngineConfig
+
+        return EngineConfig(
+            node_order=self.node_order,
+            terminate_overrun=self.terminate_overrun,
+            window=self.window,
+        )
+
+    # ---- JSON round-trip ----
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Experiment":
+        obj = json.loads(text)
+        if not isinstance(obj, Mapping):
+            raise ValueError("experiment JSON must be an object")
+        check_unknown_keys(
+            obj, {f.name for f in dataclasses.fields(cls)}, "experiment"
+        )
+        return cls(**obj)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "Experiment":
+        with open(path) as f:
+            return cls.from_json(f.read())

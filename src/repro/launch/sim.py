@@ -5,6 +5,10 @@ config; PyYAML not required).
     PYTHONPATH=src python -m repro.launch.sim --config configs/sim_example.json
     PYTHONPATH=src python -m repro.launch.sim --workload wl.json --platform p.json \
         --scheduler "EASY PSUS" --timeout 900 --out out/run1
+    PYTHONPATH=src python -m repro.launch.sim --experiment exp.json   # grid study
+
+``--experiment`` runs a declarative :mod:`repro.experiments` spec: a whole
+scheduler x timeout grid (x replications) as ONE compiled program.
 
 Config keys (paper's runtime layer):
     workload:   path to workload.json | "preset:<name>" | "profiles"
@@ -39,9 +43,27 @@ from repro.core.gantt import intervals_from_log, render_png, write_csv
 from repro.core.metrics import metrics_from_state, np_state
 from repro.core.policy import RLController, from_label, scheduler_labels
 from repro.core.types import EngineConfig
-from repro.workloads.generator import PRESETS, generate_workload
-from repro.workloads.platform import PlatformSpec, load_platform
-from repro.workloads.workload import Workload, load_workload
+from repro.experiments import (
+    check_unknown_keys,
+    resolve_platform,
+    resolve_workload,
+)
+
+
+# single-run config keys (the experiment layer validates its own spec)
+_KNOWN_KEYS = {
+    "workload", "platform", "scheduler", "timeout", "terminate_overrun",
+    "node_order", "rl", "gantt", "out",
+}
+_KNOWN_RL_KEYS = {"checkpoint", "decision_interval"}
+
+
+def _validate_keys(config: Dict[str, Any]) -> None:
+    """Reject unknown config keys loudly instead of silently ignoring typos."""
+    check_unknown_keys(config, _KNOWN_KEYS, "config")
+    rl = config.get("rl")
+    if isinstance(rl, dict):
+        check_unknown_keys(rl, _KNOWN_RL_KEYS, "rl config")
 
 
 def _load_mini_yaml(path: str) -> Dict[str, Any]:
@@ -72,27 +94,6 @@ def _load_mini_yaml(path: str) -> Dict[str, Any]:
                 except ValueError:
                     out[k.strip()] = v.strip("'\"")
     return out
-
-
-def resolve_workload(spec) -> Workload:
-    if isinstance(spec, Workload):
-        return spec
-    if isinstance(spec, str) and spec.startswith("preset:"):
-        name = spec.split(":", 1)[1]
-        return generate_workload(PRESETS[name])
-    if spec == "profiles":
-        from repro.configs.job_profiles import profile_workload
-
-        return profile_workload()
-    return load_workload(spec)
-
-
-def resolve_platform(spec) -> PlatformSpec:
-    if isinstance(spec, PlatformSpec):
-        return spec
-    if isinstance(spec, int):
-        return PlatformSpec(nb_nodes=spec)
-    return load_platform(spec)
 
 
 def _checkpoint_controller(params, meta):
@@ -164,6 +165,7 @@ def _resolve_rl_policy(pol, config, plat):
 
 
 def run(config: Dict[str, Any]) -> Dict[str, Any]:
+    _validate_keys(config)
     wl = resolve_workload(config["workload"])
     plat = resolve_platform(config.get("platform", wl.nb_res))
     sched = config.get("scheduler", "EASY PSUS")
@@ -235,6 +237,11 @@ def run(config: Dict[str, Any]) -> Dict[str, Any]:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default=None)
+    ap.add_argument(
+        "--experiment", default=None, metavar="SPEC.json",
+        help="run a declarative repro.experiments grid spec "
+             "(scheduler x timeout grid as ONE compiled program)",
+    )
     ap.add_argument("--workload", default=None)
     ap.add_argument("--platform", default=None)
     ap.add_argument(
@@ -246,6 +253,35 @@ def main(argv=None):
     ap.add_argument("--terminate-overrun", action="store_true")
     ap.add_argument("--out", default="out/sim")
     args = ap.parse_args(argv)
+
+    if args.experiment:
+        # the spec is the whole study: reject single-run flags rather than
+        # silently ignoring them (the same loud-failure contract as
+        # _validate_keys)
+        clashing = [
+            f"--{name.replace('_', '-')}"
+            for name in (
+                "config", "workload", "platform", "scheduler", "timeout",
+                "terminate_overrun", "out",
+            )
+            if getattr(args, name) != ap.get_default(name)
+        ]
+        if clashing:
+            ap.error(
+                f"--experiment runs a self-contained spec; {', '.join(clashing)} "
+                "would be ignored — set the equivalent field in the spec file"
+            )
+        from repro.experiments import run_file
+
+        result = run_file(args.experiment)
+        print(result.table())
+        print(
+            f"# grid: {len(result.rows)} rows, "
+            f"{result.n_compiles if result.n_compiles is not None else '?'} "
+            f"compiled program(s), {result.wall_s:.2f}s "
+            f"({result.jobs_per_s:.0f} simulated jobs/s)"
+        )
+        return result
 
     if args.config:
         config = _load_mini_yaml(args.config)

@@ -375,14 +375,33 @@ def test_sweep_rejects_mismatched_platform_and_empty_axis():
         engine.sweep(plat, wl, [PlatformSpec(nb_nodes=8)], cfg)
     with pytest.raises(ValueError, match="at least one scenario"):
         engine.sweep(plat, wl, [], cfg)
-    with pytest.raises(ValueError, match="config.timeout"):
-        engine.sweep(plat, wl, [60, 120], EngineConfig())
-    # every spelling of a timeout override is guarded, not just ints
-    with pytest.raises(ValueError, match="config.timeout"):
-        engine.sweep(plat, wl, [{"timeout": 300}], EngineConfig())
-    with pytest.raises(ValueError, match="config.timeout"):
-        const = engine.make_const(plat, EngineConfig(timeout=300))
-        engine.sweep(plat, wl, [const], EngineConfig())
+    with pytest.raises(TypeError, match="unsupported sweep scenario"):
+        engine.sweep(plat, wl, [object()], cfg)
+    with pytest.raises(TypeError, match="unknown sweep scenario key"):
+        engine.sweep(plat, wl, [{"timeot": 60}], cfg)
+    with pytest.raises(ValueError, match="controller"):
+        # in-graph controllers are static trace structure, not an axis point
+        engine.sweep(
+            plat, wl, [RLController(controller=lambda s, c: (0, 0))], cfg
+        )
+
+
+def test_sweep_timeouts_need_no_placeholder_config_timeout():
+    """Pre-traced-axis engines compiled the timeout-expiry event candidate
+    only when config.timeout was set, so sweeping timeouts under
+    config.timeout=None was a guarded error. The superset program always
+    carries the (flag-gated) candidate: the sweep now simply works and
+    matches per-config runs."""
+    plat = PlatformSpec(nb_nodes=16)
+    wl = generate_workload(GeneratorConfig(n_jobs=30, nb_res=16, seed=6))
+    batch = engine.sweep(plat, wl, [60, 900], EngineConfig())
+    for i, t in enumerate([60, 900]):
+        single = engine.simulate(plat, wl, EngineConfig(timeout=t))
+        m1 = metrics_from_state(single, plat)
+        assert batch[i].makespan_s == m1.makespan_s
+        np.testing.assert_allclose(
+            batch[i].total_energy_j, m1.total_energy_j, rtol=1e-6
+        )
 
 
 # ------------------------------------------------- grouped RL env plumbing
