@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all test-slow test-nightly bench-scale
+.PHONY: test test-all test-slow test-nightly bench-scale docs-check
 
 # tier-1 gate (what CI and the ROADMAP "Tier-1 verify" line run);
 # pytest.ini excludes the `slow` marker from this run
@@ -30,3 +30,9 @@ test-nightly: test-slow
 # (asserts the sweep stays ONE compiled program)
 bench-scale:
 	$(PY) benchmarks/bench_scale.py --jobs 200 --nodes 512 --oracle-jobs 50 --hetero
+
+# documentation hygiene: dead links, stale file references, code-fence
+# balance, and fenced `python -m` commands over README / SEMANTICS /
+# experiments docs (also run as tests/test_docs.py in tier-1)
+docs-check:
+	$(PY) tools/docs_check.py

@@ -1,0 +1,97 @@
+"""Runtime-DVFS grid benchmark (core/SEMANTICS.md §DVFS).
+
+A scheduler x DVFS-config grid — DVFS-enabled policy stacks crossed with
+mode-table platform variants — as ONE compiled program, asserting the
+one-compile guarantee holds with rule 9 in the superset. Reports wall time
+and simulated jobs/s for the ``dvfs`` section of ``BENCH_grid.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_dvfs --jobs 300
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.core import engine
+from repro.core.types import EngineConfig
+from repro.workloads.generator import GeneratorConfig, generate_workload
+from repro.workloads.platform import dvfs_platform_example, platform_from_groups
+
+
+def scenario_grid(platform):
+    """Schedulers x DVFS configs: ladder stacks, a non-DVFS baseline, and a
+    mode-table platform variant (hotter turbo watts) — every point a traced
+    scenario."""
+    hot = platform_from_groups(
+        tuple(
+            dataclasses.replace(
+                g,
+                dvfs_modes=tuple(
+                    dataclasses.replace(m, power=1.25 * m.power)
+                    for m in g.dvfs_modes
+                ),
+            )
+            for g in platform.groups()
+        )
+    )
+    labels = ("EASY PSUS", "EASY DVFS", "FCFS DVFS", "EASY PSUS+DVFS",
+              "EASY PSAS+IPM+DVFS")
+    grid = [{"scheduler": lbl, "timeout": 900} for lbl in labels]
+    grid += [
+        {"scheduler": "EASY DVFS", "timeout": 900, "platform": hot},
+        {"scheduler": "EASY DVFS", "timeout": 300},
+    ]
+    return grid
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=300)
+    ap.add_argument("--nodes", type=int, default=48)
+    args = ap.parse_args(argv)
+
+    plat = dvfs_platform_example(args.nodes)
+    wl = generate_workload(
+        GeneratorConfig(n_jobs=args.jobs, nb_res=args.nodes, seed=7)
+    )
+    cfg = EngineConfig(node_order="cheap", terminate_overrun=True)
+    grid = scenario_grid(plat)
+
+    engine.sweep(plat, wl, grid, cfg)  # warm-up: compile once
+    t0 = time.perf_counter()
+    batch = engine.sweep(plat, wl, grid, cfg)
+    wall = time.perf_counter() - t0
+    assert batch.n_compiles in (None, 1), (
+        f"the DVFS grid recompiled: {batch.n_compiles} programs"
+    )
+
+    rows = []
+    for sc, m in zip(grid, batch.metrics):
+        rows.append(
+            {
+                "scheduler": sc["scheduler"],
+                "timeout": sc["timeout"],
+                "platform": "hot" if "platform" in sc else "base",
+                "total_energy_kwh": round(m.total_energy_j / 3.6e6, 3),
+                "mean_wait_s": round(m.mean_wait_s, 1),
+                # residency across >1 mode proves rule 9 actually switched
+                "modes_used": int(
+                    sum(sum(1 for r in g if r > 0) for g in m.mode_residency_s)
+                ),
+            }
+        )
+    out = {
+        "n_compiles": batch.n_compiles,
+        "grid_k": len(grid),
+        "wall_s": round(wall, 3),
+        "jobs_per_s": round(len(grid) * args.jobs / wall, 1) if wall else None,
+        "rows": rows,
+    }
+    print(json.dumps(out, indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    main()

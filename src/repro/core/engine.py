@@ -42,7 +42,10 @@ import numpy as np
 from repro.core.policy import (
     PolicyParams,
     PowerPolicy,
+    alloc_min_speed,
+    apply_dvfs,
     apply_rl_commands,
+    effective_node_speed,
     from_label,
     ipm_wake,
     timeout_switch_off,
@@ -86,6 +89,12 @@ class EngineConst(NamedTuple):
     timeout: jax.Array  # i32 idle-timeout (s); INF_TIME = never
     rl_interval: jax.Array  # i32 RL decision tick; INF_TIME = event-driven only
     policy: PolicyParams  # traced policy axis (bool flags; SEMANTICS.md)
+    # runtime DVFS mode tables (§DVFS): per-group absolute operating points,
+    # sorted ascending by speed; M (table width) is a shape, the values are
+    # traced — DVFS-table sweeps vmap like every other platform quantity
+    dvfs_speed: jax.Array  # f32[G, M] node speed in mode m
+    dvfs_watts: jax.Array  # f32[G, M] ACTIVE-state watts in mode m
+    dvfs_n_modes: jax.Array  # i32[G] live modes per group (<= M; rest padding)
 
 
 class SimState(NamedTuple):
@@ -123,6 +132,14 @@ class SimState(NamedTuple):
     # next batch; global-action mode reads the vector sums — core/policy.py)
     rl_on_cmd: jax.Array
     rl_off_cmd: jax.Array
+    # runtime DVFS (§DVFS): current per-group mode, pending agent mode
+    # commands (-1 = no change), each running job's current effective speed
+    # (the remaining-work rescale anchor), and the mode ledgers
+    dvfs_mode: jax.Array  # i32[G]
+    rl_mode_cmd: jax.Array  # i32[G]
+    job_speed: jax.Array  # f32[J]
+    mode_time: jax.Array  # f32[G, M] residency seconds (accrues when enabled)
+    mode_energy: jax.Array  # f32[G, M] ACTIVE energy by mode
 
 
 class GanttLog(NamedTuple):
@@ -171,6 +188,7 @@ def make_const(
             )
         order_key = jnp.broadcast_to(jnp.asarray(key, jnp.float32), (N,))
         group_id = jnp.zeros(N, I32)
+    dvfs_speed, dvfs_watts, dvfs_n = platform.group_dvfs_tables()
     return EngineConst(
         power=power,
         t_on=t_on,
@@ -183,6 +201,9 @@ def make_const(
             config.rl_decision_interval or int(INF_TIME), I32
         ),
         policy=config.policy.params(config.base).traced(),
+        dvfs_speed=jnp.asarray(dvfs_speed, jnp.float32),
+        dvfs_watts=jnp.asarray(dvfs_watts, jnp.float32),
+        dvfs_n_modes=jnp.asarray(dvfs_n, I32),
     )
 
 
@@ -249,6 +270,11 @@ def init_state(
         n_switch_off=jnp.asarray(0, I32),
         rl_on_cmd=jnp.zeros(G, I32),
         rl_off_cmd=jnp.zeros(G, I32),
+        dvfs_mode=jnp.zeros(G, I32),
+        rl_mode_cmd=jnp.full(G, -1, I32),
+        job_speed=jnp.ones(J, jnp.float32),
+        mode_time=jnp.zeros((G, platform.n_dvfs_modes()), jnp.float32),
+        mode_energy=jnp.zeros((G, platform.n_dvfs_modes()), jnp.float32),
     )
 
 
@@ -487,10 +513,12 @@ def _start_jobs(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
     # realized wall time = nominal work / slowest allocated node, resolved
     # now that the allocation is known (core/SEMANTICS.md §Heterogeneity);
     # the f32 ceil is the cross-engine contract — the oracle computes the
-    # identical float32 expression so schedules stay bit-exact
-    speed_min = jnp.full(J, jnp.inf, jnp.float32).at[cj].min(
-        jnp.where(nj >= 0, const.speed, jnp.inf)
+    # identical float32 expression so schedules stay bit-exact. Under DVFS
+    # the node speed is the group's *current mode* speed (§DVFS).
+    node_speed = effective_node_speed(
+        const, s.dvfs_mode, const.policy.dvfs_enabled
     )
+    speed_min = alloc_min_speed(nj, node_speed, J)
     speed_min = jnp.where(start, speed_min, jnp.float32(1.0))
     realized = jnp.maximum(
         jnp.ceil(s.job_run.astype(jnp.float32) / speed_min).astype(I32), 1
@@ -505,6 +533,7 @@ def _start_jobs(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
         job_status=jnp.where(start, RUNNING, s.job_status),
         job_start=jnp.where(start, s.t, s.job_start),
         job_eff=jnp.where(start, eff, s.job_eff),
+        job_speed=jnp.where(start, speed_min, s.job_speed),
         job_terminated=jnp.where(start, term, s.job_terminated),
         job_finish=jnp.where(start, s.t + eff, s.job_finish),
         node_state=jnp.where(node_starts, ACTIVE, s.node_state),
@@ -528,13 +557,28 @@ def _power_step(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
     s = ipm_wake(s, const, enabled=pp.ipm_enabled)
     controller = getattr(cfg.policy, "controller", None)
     if controller is not None:
-        on, off = controller(s, const)
+        out = controller(s, const)
+        if getattr(cfg.policy, "dvfs", False) and len(out) < 3:
+            # a legacy (on, off) controller under RL:dvfs would silently pin
+            # every group at mode 0 (dvfs_rl bypasses the ladder); the
+            # arity is static, so fail at trace time instead
+            raise ValueError(
+                "RLController(dvfs=True) needs a controller returning "
+                "(on, off, mode) — this one returns only (on, off), so no "
+                "mode command would ever be issued"
+            )
+        from repro.core.rl.actions import full_commands  # lazy: import cycle
+
+        on, off, mode = full_commands(s, out)
         s = s._replace(
             rl_on_cmd=jnp.broadcast_to(on, s.rl_on_cmd.shape).astype(I32),
             rl_off_cmd=jnp.broadcast_to(off, s.rl_off_cmd.shape).astype(I32),
+            rl_mode_cmd=jnp.broadcast_to(mode, s.rl_mode_cmd.shape).astype(I32),
         )
     s = apply_rl_commands(s, const, grouped=pp.rl_grouped,
                           enabled=pp.rl_enabled)
+    s = apply_dvfs(s, const, terminate_overrun=cfg.terminate_overrun,
+                   enabled=pp.dvfs_enabled, rl=pp.dvfs_rl)
     return s
 
 
@@ -588,10 +632,19 @@ def next_time(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
 
 def accrue_energy(s: SimState, t_next: jax.Array, const: EngineConst) -> SimState:
     dt = jnp.maximum(t_next - s.t, 0).astype(jnp.float32)
-    # per-node draw scattered into the [G, 5] group x state energy ledger
+    # per-node draw scattered into the [G, 5] group x state energy ledger;
+    # under DVFS an ACTIVE node draws its group's current-mode watts (§DVFS)
     node_power = jnp.take_along_axis(
         const.power, s.node_state[:, None], axis=1
     )[:, 0]
+    dvfs_on = const.policy.dvfs_enabled
+    node_mode = s.dvfs_mode[const.group_id]
+    active = s.node_state == ACTIVE
+    node_power = jnp.where(
+        dvfs_on & active,
+        const.dvfs_watts[const.group_id, node_mode],
+        node_power,
+    )
     delta = (
         jnp.zeros_like(s.energy)
         .at[const.group_id, s.node_state]
@@ -599,13 +652,24 @@ def accrue_energy(s: SimState, t_next: jax.Array, const: EngineConst) -> SimStat
         * dt
     )
     e, c = _kahan_add(s.energy, s.energy_c, delta)
+    # DVFS ledgers: per-group mode residency and ACTIVE energy by mode
+    G = s.energy.shape[0]
+    mode_time = s.mode_time.at[jnp.arange(G), s.dvfs_mode].add(
+        jnp.where(dvfs_on, dt, 0.0)
+    )
+    mode_energy = s.mode_energy.at[const.group_id, node_mode].add(
+        jnp.where(dvfs_on & active, node_power * dt, 0.0)
+    )
     n_waiting = jnp.sum(
         ((s.job_status == WAITING) & (s.job_subtime <= s.t))
         | (s.job_status == ALLOCATED),
         dtype=jnp.float32,
     )
     w, wc = _kahan_add(s.wait_integral, s.wait_c, n_waiting * dt)
-    return s._replace(energy=e, energy_c=c, wait_integral=w, wait_c=wc)
+    return s._replace(
+        energy=e, energy_c=c, mode_time=mode_time, mode_energy=mode_energy,
+        wait_integral=w, wait_c=wc,
+    )
 
 
 def all_done(s: SimState) -> jax.Array:
@@ -771,13 +835,16 @@ def _scenario_const(
         if (
             scenario.nb_nodes != platform.nb_nodes
             or scenario.n_groups() != platform.n_groups()
+            or scenario.n_dvfs_modes() != platform.n_dvfs_modes()
         ):
             raise ValueError(
-                "sweep platforms must share node count and group count "
+                "sweep platforms must share node count, group count, and "
+                "DVFS mode-table width "
                 f"(base {platform.nb_nodes} nodes/{platform.n_groups()} "
-                f"groups, scenario {scenario.nb_nodes}/"
-                f"{scenario.n_groups()}); shapes are part of the compiled "
-                "program"
+                f"groups/{platform.n_dvfs_modes()} modes, scenario "
+                f"{scenario.nb_nodes}/{scenario.n_groups()}/"
+                f"{scenario.n_dvfs_modes()}); shapes are part of the "
+                "compiled program"
             )
         return make_const(scenario, config), scenario
     if isinstance(scenario, str):  # scheduler label, e.g. "EASY PSAS+IPM"
@@ -887,7 +954,7 @@ def sweep(
     key = (
         config.window, config.node_order, config.terminate_overrun,
         getattr(config.policy, "controller", None),
-        platform.nb_nodes, platform.n_groups(),
+        platform.nb_nodes, platform.n_groups(), platform.n_dvfs_modes(),
         int(s0.job_status.shape[0]), cap, len(scenarios),
     )
     fn = _SWEEP_FNS.pop(key, None)

@@ -63,6 +63,12 @@ def metrics_from_state(
         n_terminated=int((s["job_terminated"] & done).sum()),
         energy_by_group_j=tuple(tuple(row) for row in energy_g.tolist()),
         group_names=names,
+        mode_residency_s=tuple(
+            tuple(row) for row in s["mode_time"].astype(np.float64).tolist()
+        ),
+        energy_by_mode_j=tuple(
+            tuple(row) for row in s["mode_energy"].astype(np.float64).tolist()
+        ),
     )
 
 

@@ -14,7 +14,9 @@ program:
 * ``sleep_enabled`` — rule 6 (idle-timeout switch-off) is active,
 * ``ipm_enabled``   — rule 6's demand cap + rule 7 (proactive wake),
 * ``rl_enabled``    — rule 8 (agent power commands) is active,
-* ``rl_grouped``    — rule 8 selects within node groups.
+* ``rl_grouped``    — rule 8 selects within node groups,
+* ``dvfs_enabled``  — rule 9 (runtime per-group DVFS mode switching),
+* ``dvfs_rl``       — rule 9 modes come from agent commands, not the ladder.
 
 Because the flags are traced operands (not static config), a whole
 scheduler x policy x timeout grid vmaps through ONE compiled program
@@ -44,12 +46,14 @@ from repro.core.types import (
     ACTIVE,
     IDLE,
     INF_TIME,
+    RUNNING,
     SLEEP,
     SWITCHING_OFF,
     SWITCHING_ON,
     WAITING,
     BasePolicy,
     PSMVariant,
+    did_you_mean,
 )
 
 I32 = jnp.int32
@@ -71,6 +75,8 @@ class PolicyParams(NamedTuple):
     ipm_enabled: Any  # rule 6 demand cap + rule 7 proactive wake
     rl_enabled: Any  # rule 8 active (agent power commands)
     rl_grouped: Any  # rule 8 selects per node group
+    dvfs_enabled: Any  # rule 9 active (runtime per-group DVFS switching)
+    dvfs_rl: Any  # rule 9 modes from agent commands (else pressure ladder)
 
     def traced(self) -> "PolicyParams":
         """The jnp.bool_ spelling carried in EngineConst (vmap-stackable)."""
@@ -213,6 +219,89 @@ def apply_rl_commands(s, const, grouped=False, enabled=True):
     )
 
 
+def effective_node_speed(const, mode, enabled):
+    """f32[N] node speed under DVFS mode vector ``mode`` (i32[G]); the base
+    ``const.speed`` when ``enabled`` is off. The single spelling of the
+    current-operating-point speed shared by job start (rule 5) and the
+    rescale (rule 9)."""
+    return jnp.where(
+        enabled,
+        const.dvfs_speed[const.group_id, mode[const.group_id]],
+        const.speed,
+    )
+
+
+def alloc_min_speed(node_job, node_speed, n_jobs):
+    """f32[J] min node speed over each job's allocated nodes (inf when the
+    job holds none) — the cross-engine realized-runtime contract's scatter
+    (core/SEMANTICS.md §Heterogeneity / §DVFS)."""
+    cj = jnp.maximum(node_job, 0)
+    return jnp.full(n_jobs, jnp.inf, jnp.float32).at[cj].min(
+        jnp.where(node_job >= 0, node_speed, jnp.inf)
+    )
+
+
+def apply_dvfs(s, const, terminate_overrun=False, enabled=True, rl=False):
+    """Rule 9: per-group DVFS mode selection + remaining-work rescale.
+
+    Mode selection (core/SEMANTICS.md §DVFS):
+
+    * heuristic ladder (``rl=False``): group g's mode index is the integer
+      ``min(n_modes[g] - 1, demand * n_modes[g] // N)`` where ``demand`` is
+      the cluster's queued resource demand — an empty queue idles every
+      group at its slowest mode, a saturated queue runs them at the fastest.
+    * agent-commanded (``rl=True``): the pending ``rl_mode_cmd`` vector
+      (i32[G], -1 = no change) is applied, clamped per group, then cleared.
+
+    Remaining-work rescale: every RUNNING, non-terminated job whose
+    allocation's effective speed changed gets its remaining wall time
+    rescaled by the f32 contract expression
+    ``max(ceil((f32(finish - t) * old_speed) / new_speed), 1)``; under
+    ``terminate_overrun`` the new finish is capped at ``start + reqtime``
+    (walltime is a user clock, it never scales) and the job is marked
+    terminated when the cap bites. ``enabled``/``rl`` may be traced flags
+    (the engine's superset power step) or Python bools (the RL env).
+    """
+    G, _ = const.dvfs_speed.shape
+    N = s.node_state.shape[0]
+    n_modes = const.dvfs_n_modes
+    ladder = jnp.minimum(n_modes - 1, (queued_demand(s) * n_modes) // N)
+    commanded = jnp.where(
+        s.rl_mode_cmd >= 0,
+        jnp.clip(s.rl_mode_cmd, 0, n_modes - 1),
+        s.dvfs_mode,
+    )
+    target = jnp.where(rl, commanded, ladder).astype(I32)
+    mode = jnp.where(enabled, target, s.dvfs_mode)
+
+    # effective per-node speed under the (possibly new) mode vector
+    eff = effective_node_speed(const, mode, enabled)
+    J = s.job_status.shape[0]
+    alloc_min = alloc_min_speed(s.node_job, eff, J)
+    running = (s.job_status == RUNNING) & ~s.job_terminated
+    speed_min = jnp.where(running, alloc_min, s.job_speed)
+    changed = running & (speed_min != s.job_speed) & enabled
+    rem = jnp.maximum(s.job_finish - s.t, 1).astype(jnp.float32)
+    work = rem * s.job_speed  # f32 remaining work (contract expression)
+    new_rem = jnp.maximum(jnp.ceil(work / speed_min).astype(I32), 1)
+    new_finish = s.t + new_rem
+    terminated = s.job_terminated
+    if terminate_overrun:
+        cap = s.job_start + s.job_reqtime
+        capped = changed & (new_finish > cap)
+        new_finish = jnp.minimum(new_finish, cap)
+        terminated = terminated | capped
+    finish = jnp.where(changed, new_finish, s.job_finish)
+    return s._replace(
+        dvfs_mode=mode,
+        rl_mode_cmd=jnp.where(enabled, jnp.full(G, -1, I32), s.rl_mode_cmd),
+        job_speed=jnp.where(running & enabled, speed_min, s.job_speed),
+        job_finish=finish,
+        job_eff=jnp.where(changed, finish - s.job_start, s.job_eff),
+        job_terminated=terminated,
+    )
+
+
 # ---------------------------------------------------------------------------
 # the declarative policy stacks
 # ---------------------------------------------------------------------------
@@ -226,7 +315,13 @@ class PowerPolicy:
     hashable frozen dataclasses, so an ``EngineConfig`` remains a valid jit
     cache key; they carry no trace structure except an optional in-graph
     ``controller`` (RL).
+
+    ``dvfs=True`` composes runtime per-group DVFS mode switching (rule 9,
+    §DVFS) onto any stack: the queue-pressure ladder by default, agent
+    commands under :class:`RLController`.
     """
+
+    dvfs: bool = False
 
     @property
     def eager_ready(self) -> bool:
@@ -240,6 +335,8 @@ class PowerPolicy:
             ipm_enabled=False,
             rl_enabled=False,
             rl_grouped=False,
+            dvfs_enabled=self.dvfs,
+            dvfs_rl=False,
         )
 
     def params(self, base: BasePolicy = BasePolicy.EASY) -> PolicyParams:
@@ -250,13 +347,31 @@ class PowerPolicy:
             **self.flags(),
         )
 
-    def psm_label(self) -> str:
+    def _base_label(self) -> str:
         return "AlwaysOn"
+
+    def psm_label(self) -> str:
+        lbl = self._base_label()
+        return f"{lbl}+DVFS" if self.dvfs else lbl
 
 
 @dataclasses.dataclass(frozen=True)
 class AlwaysOn(PowerPolicy):
     """Classic always-on baseline: nodes never sleep (legacy PSM ``NONE``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DVFS(PowerPolicy):
+    """Queue-pressure DVFS ladder on always-on nodes (rule 9, §DVFS): each
+    decision point sets every group's mode to
+    ``min(n_modes - 1, demand * n_modes // N)`` — slowest when the queue is
+    empty, fastest when demand saturates the cluster. Compose DVFS onto a
+    sleeping stack with e.g. ``TimeoutSleep(dvfs=True)`` ("PSUS+DVFS")."""
+
+    dvfs: bool = True
+
+    def psm_label(self) -> str:
+        return "DVFS"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -278,7 +393,7 @@ class TimeoutSleep(PowerPolicy):
     def flags(self) -> dict:
         return {**super().flags(), "sleep_enabled": True}
 
-    def psm_label(self) -> str:
+    def _base_label(self) -> str:
         return "PSAS(AutoOn)" if self.transition_aware else "PSUS"
 
 
@@ -293,7 +408,7 @@ class IPM(TimeoutSleep):
     def flags(self) -> dict:
         return {**super().flags(), "ipm_enabled": True}
 
-    def psm_label(self) -> str:
+    def _base_label(self) -> str:
         return "PSAS+IPM"
 
 
@@ -306,11 +421,15 @@ class RLController(PowerPolicy):
     commands target node groups individually (see ``apply_rl_commands``).
 
     ``controller``: optional in-graph policy ``f(s, const) -> (on[G], off[G])``
-    evaluated inside the engine's power step — this is how a checkpointed
-    network drives ``run_sim`` end-to-end as one compiled program
-    (``launch/sim.py``). When None, pending commands set externally (the RL
-    env path) are applied. The controller is the one piece of policy
+    — or ``(on[G], off[G], mode[G])`` when ``dvfs=True`` (mode -1 = no
+    change) — evaluated inside the engine's power step; this is how a
+    checkpointed network drives ``run_sim`` end-to-end as one compiled
+    program (``launch/sim.py``). When None, pending commands set externally
+    (the RL env path) are applied. The controller is the one piece of policy
     structure that stays *static*: a network cannot be a traced flag.
+
+    ``dvfs=True`` ("RL:dvfs"): rule 9's per-group modes come from the
+    agent's mode commands instead of the queue-pressure ladder.
     """
 
     grouped: bool = False
@@ -321,10 +440,14 @@ class RLController(PowerPolicy):
             **super().flags(),
             "rl_enabled": True,
             "rl_grouped": self.grouped,
+            "dvfs_rl": self.dvfs,
         }
 
     def psm_label(self) -> str:
-        return "RL:groups" if self.grouped else "RL"
+        base = "RL:groups" if self.grouped else "RL"
+        if not self.dvfs:
+            return base
+        return "RL:dvfs" if not self.grouped else f"{base}+DVFS"
 
 
 # ---------------------------------------------------------------------------
@@ -347,6 +470,8 @@ def policy_from_psm(psm: PSMVariant) -> PowerPolicy:
 
 def psm_of(policy: PowerPolicy) -> Optional[PSMVariant]:
     """Best-effort reverse map (None for policies with no legacy twin)."""
+    if getattr(policy, "dvfs", False):
+        return None  # runtime DVFS postdates the PSMVariant enum
     if isinstance(policy, RLController):
         return PSMVariant.RL
     if isinstance(policy, IPM):
@@ -371,34 +496,60 @@ _PSM_TOKENS = {
     "PSAS(AUTOON)": TimeoutSleep(transition_aware=True),  # alias
     "PSAS+IPM": IPM(),
     "ALWAYSON": AlwaysOn(),
+    "DVFS": DVFS(),
     "RL": RLController(),
     "RL:GROUPS": RLController(grouped=True),
+    "RL:DVFS": RLController(dvfs=True),
 }
 _CANONICAL_PSM = ("PSUS", "PSAS", "PSAS+IPM", "AlwaysOn")
 _CANONICAL_RL = ("RL", "RL:groups")
+_CANONICAL_DVFS = ("DVFS",)
+
+
+def _resolve_psm_token(token: str) -> Optional[PowerPolicy]:
+    psm = _PSM_TOKENS.get(token)
+    if psm is not None:
+        return psm
+    # generic DVFS composition: "<PSM>+DVFS" turns rule 9 on over any
+    # registered stack ("PSUS+DVFS", "PSAS+IPM+DVFS", "RL:GROUPS+DVFS", ...)
+    if token.endswith("+DVFS"):
+        base = _PSM_TOKENS.get(token[: -len("+DVFS")])
+        if base is not None:
+            return dataclasses.replace(base, dvfs=True)
+    return None
 
 
 def from_label(label: str) -> Tuple[BasePolicy, PowerPolicy]:
     """Parse ``"<FCFS|EASY> <PSM>"`` into a (base, policy) pair.
 
-    PSM tokens: PSUS | PSAS | PSAS(AutoOn) | PSAS+IPM | AlwaysOn | RL |
-    RL:groups (case-insensitive).
+    PSM tokens: PSUS | PSAS | PSAS(AutoOn) | PSAS+IPM | AlwaysOn | DVFS |
+    RL | RL:groups | RL:dvfs, plus ``<PSM>+DVFS`` for any of them
+    (case-insensitive).
     """
     parts = label.split()
     if len(parts) == 2 and parts[0].upper() in _BASE_TOKENS:
-        psm = _PSM_TOKENS.get(parts[1].upper())
+        psm = _resolve_psm_token(parts[1].upper())
         if psm is not None:
             return _BASE_TOKENS[parts[0].upper()], psm
+    known = scheduler_labels(include_rl=True, include_dvfs=True)
     raise KeyError(
-        f"unknown scheduler label {label!r}; expected one of "
-        f"{', '.join(scheduler_labels(include_rl=True))} "
-        f"(alias: 'PSAS(AutoOn)' for PSAS)"
+        f"unknown scheduler label {label!r}{did_you_mean(label, known)}; "
+        f"expected one of {', '.join(known)} "
+        "(alias: 'PSAS(AutoOn)' for PSAS; '<PSM>+DVFS' composes rule 9 "
+        "onto any stack)"
     )
 
 
-def scheduler_labels(include_rl: bool = False) -> Tuple[str, ...]:
+def scheduler_labels(
+    include_rl: bool = False, include_dvfs: bool = False
+) -> Tuple[str, ...]:
     """Canonical labels, in the order the paper's figures use."""
-    psms = _CANONICAL_PSM + (_CANONICAL_RL if include_rl else ())
+    psms = (
+        _CANONICAL_PSM
+        + (_CANONICAL_DVFS if include_dvfs else ())
+        + (_CANONICAL_RL if include_rl else ())
+        + (("RL:dvfs",) if include_rl and include_dvfs else ())
+    )
     return tuple(
         f"{base} {psm}" for psm in psms for base in ("FCFS", "EASY")
     )
@@ -406,5 +557,5 @@ def scheduler_labels(include_rl: bool = False) -> Tuple[str, ...]:
 
 def label_of(base: BasePolicy, policy: PowerPolicy) -> str:
     b = "FCFS" if base == BasePolicy.FCFS else "EASY"
-    p = policy.psm_label()
-    return f"{b} {'PSAS' if p == 'PSAS(AutoOn)' else p}"
+    p = policy.psm_label().replace("PSAS(AutoOn)", "PSAS")
+    return f"{b} {p}"

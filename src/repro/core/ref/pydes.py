@@ -62,6 +62,7 @@ class _Job:
     start: float = -1.0
     finish: float = INF
     alloc_ready: float = INF  # predicted start recorded at allocation
+    speed: float = 1.0  # current effective speed (DVFS rescale anchor, f32)
 
 
 class PyDES:
@@ -98,6 +99,14 @@ class PyDES:
             self.okey = platform.node_order_key()  # f32[N]
         self.gid = platform.node_group_id()  # i32[N]
         self.n_groups = platform.n_groups()
+        # runtime DVFS mode tables + state (core/SEMANTICS.md §DVFS)
+        self.dvfs_speed, self.dvfs_watts, self.dvfs_n_modes = (
+            platform.group_dvfs_tables()
+        )
+        self.mode = [0] * self.n_groups  # current mode per group
+        M = self.dvfs_speed.shape[1]
+        self.mode_time = [[0.0] * M for _ in range(self.n_groups)]
+        self.mode_energy = [[0.0] * M for _ in range(self.n_groups)]
 
         wl = workload.sorted_by_subtime()
         self.jobs: List[_Job] = []
@@ -136,6 +145,13 @@ class PyDES:
         return [
             sum(g[k] for g in self.energy_by_group) for k in range(5)
         ]
+
+    def _eff_speed(self, nid: int) -> np.float32:
+        """Node speed under the current DVFS mode (§DVFS); base otherwise."""
+        if self.pp.dvfs_enabled:
+            g = int(self.gid[nid])
+            return np.float32(self.dvfs_speed[g, self.mode[g]])
+        return np.float32(self.speed[nid])
 
     # ---------- ready times (SEMANTICS.md variant table) ----------
     def _ready(self, nd: _Node) -> float:
@@ -254,7 +270,7 @@ class PyDES:
                 # §Heterogeneity) — the JAX engine evaluates the identical
                 # float32 ceil, keeping schedule tables bit-exact
                 speed_min = min(
-                    np.float32(self.speed[nd.nid])
+                    self._eff_speed(nd.nid)
                     for nd in self.nodes
                     if nd.job == jid
                 )
@@ -267,6 +283,7 @@ class PyDES:
                 else:
                     j.eff_runtime = realized
                     j.terminated = False
+                j.speed = speed_min
                 j.status = RUNNING
                 j.start = self.t
                 j.finish = self.t + j.eff_runtime
@@ -366,6 +383,50 @@ class PyDES:
                 nd.until = self.t + float(self.t_off[nd.nid])
                 self._gantt_mark(nd)
 
+    def _apply_dvfs(self, mode_cmd=None) -> None:
+        """Rule 9 (§DVFS): per-group mode selection + remaining-work rescale.
+
+        Concrete twin of ``policy.apply_dvfs``: the heuristic ladder uses
+        the identical integer expression, the rescale the identical float32
+        expression, so schedules stay bit-exact across engines.
+        """
+        N = len(self.nodes)
+        if self.pp.dvfs_rl:
+            if mode_cmd is not None:
+                for g, c in enumerate(np.asarray(mode_cmd).reshape(-1)):
+                    if c >= 0:
+                        self.mode[g] = int(
+                            min(max(int(c), 0), int(self.dvfs_n_modes[g]) - 1)
+                        )
+        else:
+            demand = self._queued_demand()
+            for g in range(self.n_groups):
+                m_g = int(self.dvfs_n_modes[g])
+                self.mode[g] = min(m_g - 1, (demand * m_g) // N)
+        # rescale running, non-terminated jobs whose allocation speed changed
+        for j in self.jobs:
+            if j.status != RUNNING or j.terminated:
+                continue
+            speed_min = min(
+                self._eff_speed(nd.nid)
+                for nd in self.nodes
+                if nd.job == j.jid
+            )
+            if speed_min == np.float32(j.speed):
+                continue
+            rem = np.float32(max(j.finish - self.t, 1.0))
+            work = rem * np.float32(j.speed)  # f32 contract expression
+            new_rem = max(int(np.ceil(np.float32(work / speed_min))), 1)
+            new_finish = self.t + new_rem
+            if self.cfg.terminate_overrun:
+                cap = j.start + j.reqtime
+                if new_finish > cap:
+                    new_finish = cap
+                    j.terminated = True
+            j.finish = float(new_finish)
+            j.eff_runtime = int(j.finish - j.start)
+            j.speed = speed_min
+
     # ---------- event machinery ----------
     def _next_time(self) -> float:
         self.counters["sim_advance"] += 1
@@ -398,10 +459,18 @@ class PyDES:
         dt = t_next - self.t
         if dt <= 0:
             return
+        dvfs_on = self.pp.dvfs_enabled
         for nd in self.nodes:
-            self.energy_by_group[self.gid[nd.nid]][nd.state] += (
-                float(self.power[nd.nid, nd.state]) * dt
-            )
+            g = int(self.gid[nd.nid])
+            draw = float(self.power[nd.nid, nd.state])
+            if dvfs_on and nd.state == ACTIVE:
+                # ACTIVE draw follows the group's current DVFS mode (§DVFS)
+                draw = float(self.dvfs_watts[g, self.mode[g]])
+                self.mode_energy[g][self.mode[g]] += draw * dt
+            self.energy_by_group[g][nd.state] += draw * dt
+        if dvfs_on:
+            for g in range(self.n_groups):
+                self.mode_time[g][self.mode[g]] += dt
 
     def _process_batch(self) -> None:
         t = self.t
@@ -423,17 +492,21 @@ class PyDES:
         # 4-5. schedule + start
         self._scheduler_pass()
         self._start_jobs()
-        # 6-8. power management: the same flag-gated rule sequence as the
+        # 6-9. power management: the same flag-gated rule sequence as the
         # engine's _power_step (a disabled rule selects no nodes there;
         # here it is simply skipped — identical state either way)
         if self.pp.sleep_enabled:
             self._timeout_switch_off(ipm_cap=self.pp.ipm_enabled)
         if self.pp.ipm_enabled:
             self._ipm_wake()
+        mode_cmd = None
         if self.pp.rl_enabled and self.rl_policy is not None:
-            n_on, n_off = self.rl_policy(self)
-            self._apply_rl(n_on, n_off)
+            cmds = self.rl_policy(self)
+            mode_cmd = cmds[2] if len(cmds) > 2 else None
+            self._apply_rl(cmds[0], cmds[1])
             self._start_jobs()
+        if self.pp.dvfs_enabled:
+            self._apply_dvfs(mode_cmd)
 
     def _complete(self, j: _Job) -> None:
         self.counters["job_lifecycle"] += 1
@@ -514,6 +587,8 @@ class PyDES:
             n_terminated=sum(1 for j in self.jobs if j.terminated and j.status == DONE),
             energy_by_group_j=tuple(tuple(g) for g in self.energy_by_group),
             group_names=self.p.group_names(),
+            mode_residency_s=tuple(tuple(m) for m in self.mode_time),
+            energy_by_mode_j=tuple(tuple(m) for m in self.mode_energy),
         )
 
     def schedule_table(self) -> np.ndarray:

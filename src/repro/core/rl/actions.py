@@ -1,13 +1,18 @@
 """Action translators (paper Config.py registry): discrete action -> node
-power commands applied per SEMANTICS.md rule 8.
+power commands applied per SEMANTICS.md rule 8 (and rule 9 for DVFS).
 
 Every translator is ``f(sim_state, const, action, n_levels) -> (on, off)``
-where ``on``/``off`` are ``i32[G]`` per-group command vectors (G = number of
-node groups, known from ``sim_state.rl_on_cmd``). Global translators put the
-whole command in one slot — the engine's global-action mode reads the vector
-sums, so this is bit-compatible with the legacy scalar commands. Group
-translators (``GROUP_ACTIONS``) emit genuinely per-group commands and
-require an ``RLController(grouped=True)`` policy.
+or ``-> (on, off, mode)`` where ``on``/``off`` are ``i32[G]`` per-group
+command vectors (G = number of node groups, known from
+``sim_state.rl_on_cmd``) and ``mode`` is an ``i32[G]`` DVFS mode-command
+vector (-1 = leave the group's mode unchanged; rule 9). Use
+:func:`full_commands` to normalize either arity to the triple. Global
+translators put the whole command in one slot — the engine's global-action
+mode reads the vector sums, so this is bit-compatible with the legacy
+scalar commands. Group translators (``GROUP_ACTIONS``) emit genuinely
+per-group commands and require an ``RLController(grouped=True)`` policy;
+DVFS translators (``DVFS_ACTIONS``) emit mode commands and require an
+``RLController(dvfs=True)`` policy.
 """
 from __future__ import annotations
 
@@ -17,6 +22,19 @@ from repro.core.engine import SimState
 from repro.core.types import ACTIVE, IDLE, SWITCHING_ON
 
 I32 = jnp.int32
+
+
+def full_commands(s: SimState, ret):
+    """Normalize a translator/controller return to ``(on, off, mode)``.
+
+    Two-tuples (non-DVFS translators) get an all ``-1`` mode vector (no
+    mode change, rule 9 no-op).
+    """
+    if len(ret) == 2:
+        on, off = ret
+        return on, off, jnp.full(s.rl_mode_cmd.shape[0], -1, I32)
+    on, off, mode = ret
+    return on, off, mode.astype(I32)
 
 
 def _global(s: SimState, n_on, n_off):
@@ -78,14 +96,33 @@ def group_target_fraction(s: SimState, const, action, n_levels: int = 9):
     return jnp.maximum(gap, 0), jnp.maximum(-gap, 0)
 
 
+def group_mode(s: SimState, const, action, n_levels: int):
+    """DVFS action space (rule 9): action = g * n_levels + k commands group
+    g's DVFS mode to k this decision; other groups keep their mode (-1).
+    ``n_levels`` is the platform's mode-table width M
+    (``PlatformSpec.n_dvfs_modes()``); out-of-table k is clamped per group
+    by ``apply_dvfs``. Emits no on/off commands."""
+    G = s.rl_on_cmd.shape[0]
+    g = (action.astype(I32) // n_levels).clip(0, G - 1)
+    k = action.astype(I32) % n_levels
+    gids = jnp.arange(G, dtype=I32)
+    mode = jnp.where(gids == g, k, -1).astype(I32)
+    zeros = jnp.zeros(G, I32)
+    return zeros, zeros, mode
+
+
 ACTION_TRANSLATORS = {
     "delta": delta_nodes,
     "target_fraction": target_on_fraction,
     "group_target_fraction": group_target_fraction,
+    "group_mode": group_mode,
 }
 
 # translators whose commands are per-group (need RLController(grouped=True))
 GROUP_ACTIONS = frozenset({"group_target_fraction"})
+# translators that command DVFS modes (need RLController(dvfs=True);
+# n_levels must equal the platform's mode-table width)
+DVFS_ACTIONS = frozenset({"group_mode"})
 
 
 def action_space_size(name: str, n_levels: int = None, n_groups: int = 1) -> int:
@@ -95,4 +132,11 @@ def action_space_size(name: str, n_levels: int = None, n_groups: int = 1) -> int
         return n_levels or 9
     if name == "group_target_fraction":
         return n_groups * (n_levels or 9)
+    if name == "group_mode":
+        if not n_levels:
+            raise ValueError(
+                "group_mode needs n_levels = the platform's DVFS mode-table "
+                "width (PlatformSpec.n_dvfs_modes())"
+            )
+        return n_groups * n_levels
     raise KeyError(name)

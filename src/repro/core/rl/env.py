@@ -28,11 +28,13 @@ from repro.core.engine import (
     next_time,
     process_batch,
 )
-from repro.core.policy import RLController, apply_rl_commands
+from repro.core.policy import RLController, apply_dvfs, apply_rl_commands
 from repro.core.rl.actions import (
     ACTION_TRANSLATORS,
+    DVFS_ACTIONS,
     GROUP_ACTIONS,
     action_space_size,
+    full_commands,
 )
 from repro.core.rl.features import FEATURE_EXTRACTORS, feature_size
 from repro.core.rl.rewards import REWARDS, RewardWeights
@@ -77,6 +79,12 @@ class EnvConfig:
                 f"{self.engine.policy.grouped}) disagree: group-targeted "
                 "actions need a grouped controller and vice versa"
             )
+        if (self.action in DVFS_ACTIONS) != self.engine.policy.dvfs:
+            raise ValueError(
+                f"action {self.action!r} and RLController(dvfs="
+                f"{self.engine.policy.dvfs}) disagree: DVFS mode commands "
+                "need a dvfs controller (rule 9) and vice versa"
+            )
 
     @property
     def n_actions(self) -> int:
@@ -116,11 +124,17 @@ def env_step(
     event batch. Returns (state, obs, reward, done, info). No-op when done."""
     prev = state.sim
 
-    n_on, n_off = ACTION_TRANSLATORS[cfg.action](
-        prev, const, action, cfg.n_action_levels
+    n_on, n_off, n_mode = full_commands(
+        prev,
+        ACTION_TRANSLATORS[cfg.action](prev, const, action, cfg.n_action_levels),
     )
-    sim = prev._replace(rl_on_cmd=n_on, rl_off_cmd=n_off)
+    sim = prev._replace(rl_on_cmd=n_on, rl_off_cmd=n_off, rl_mode_cmd=n_mode)
     sim = apply_rl_commands(sim, const, grouped=cfg.engine.policy.grouped)
+    if cfg.engine.policy.dvfs:  # rule 9: apply the agent's mode commands now
+        sim = apply_dvfs(
+            sim, const,
+            terminate_overrun=cfg.engine.terminate_overrun, rl=True,
+        )
 
     nt = next_time(sim, const, cfg.engine)
     can_advance = (nt < INF_TIME) & ~all_done(sim)
@@ -169,7 +183,8 @@ class HPCGymEnv:
         self.cfg = config or EnvConfig()
         needs_groups = (
             self.cfg.action in GROUP_ACTIONS
-            or self.cfg.feature == "compact_groups"
+            or self.cfg.action in DVFS_ACTIONS
+            or self.cfg.feature in ("compact_groups", "compact_dvfs")
         )
         if needs_groups and self.cfg.n_groups != platform.n_groups():
             raise ValueError(
@@ -177,6 +192,16 @@ class HPCGymEnv:
                 f"has {platform.n_groups()} node groups; group-targeted "
                 "actions/features size the action space and observation "
                 "from n_groups"
+            )
+        if (
+            self.cfg.action in DVFS_ACTIONS
+            and self.cfg.n_action_levels != platform.n_dvfs_modes()
+        ):
+            raise ValueError(
+                f"EnvConfig.n_action_levels={self.cfg.n_action_levels} but "
+                f"the platform's DVFS mode-table width is "
+                f"{platform.n_dvfs_modes()}; mode commands would be "
+                "mis-decoded (set n_action_levels = n_dvfs_modes())"
             )
         self.platform = platform
         self.workload = workload

@@ -164,10 +164,42 @@ def compact_group_features(s: SimState, const: EngineConst) -> jnp.ndarray:
     return jnp.concatenate([compact_features(s, const), group_mix_features(s, const)])
 
 
+def dvfs_mode_features(s: SimState, const: EngineConst) -> jnp.ndarray:
+    """Per-group current-DVFS-mode summary, ``f32[G * 3]`` (§DVFS).
+
+    Normalized mode index (0 = slowest .. 1 = fastest of the group's table),
+    current mode speed / cluster max table speed, and current mode watts /
+    cluster max table watts — enough for the agent to see where each island
+    sits on its energy/speed trade-off. All terms in [0, 1]; exactly
+    constant when no DVFS table is declared (single-mode platforms).
+    """
+    G = const.dvfs_speed.shape[0]
+    gids = jnp.arange(G)
+    span = jnp.maximum(const.dvfs_n_modes.astype(jnp.float32) - 1.0, 1.0)
+    idx = s.dvfs_mode.astype(jnp.float32) / span
+    sp = const.dvfs_speed[gids, s.dvfs_mode] / jnp.maximum(
+        jnp.max(const.dvfs_speed), 1e-6
+    )
+    wt = const.dvfs_watts[gids, s.dvfs_mode] / jnp.maximum(
+        jnp.max(const.dvfs_watts), 1e-6
+    )
+    return jnp.stack([idx, sp, wt], axis=-1).reshape(-1)
+
+
+def compact_dvfs_features(s: SimState, const: EngineConst) -> jnp.ndarray:
+    """compact_group_features + the DVFS mode block (the observation for
+    RL-commanded DVFS: the agent needs both each island's state mix and its
+    current operating point)."""
+    return jnp.concatenate(
+        [compact_group_features(s, const), dvfs_mode_features(s, const)]
+    )
+
+
 FEATURE_EXTRACTORS = {
     "compact": compact_features,
     "queue_window": queue_window_features,
     "compact_groups": compact_group_features,
+    "compact_dvfs": compact_dvfs_features,
 }
 
 
@@ -178,4 +210,6 @@ def feature_size(name: str, window: int = 8, n_groups: int = 1) -> int:
         return 20 + 4 * window
     if name == "compact_groups":
         return 20 + 6 * n_groups
+    if name == "compact_dvfs":
+        return 20 + 9 * n_groups
     raise KeyError(name)

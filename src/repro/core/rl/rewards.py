@@ -75,6 +75,22 @@ def group_waste_wait(
     return -(w.w_energy * d_waste + w.w_wait * d_wait)
 
 
+def energy_wait(prev, new, const, w):
+    """r = -(w_e * Δtotal_energy + w_w * Δaggregate_wait), normalized.
+
+    The DVFS objective: mode choices move *ACTIVE*-state energy, which the
+    waste-based rewards deliberately ignore — an agent commanding DVFS
+    modes must be charged for total draw or turbo is free.
+    """
+    e_scale = _cluster_active_watts(const) * 3600.0
+    d_e = (jnp.sum(new.energy) - jnp.sum(prev.energy)) / e_scale
+    N = new.node_state.shape[0]
+    d_wait = (new.wait_integral - prev.wait_integral) / (
+        jnp.float32(N) * 3600.0
+    )
+    return -(w.w_energy * d_e + w.w_wait * d_wait)
+
+
 def energy_only(prev, new, const, w):
     e_scale = _cluster_active_watts(const) * 3600.0
     return -(jnp.sum(new.energy) - jnp.sum(prev.energy)) / e_scale
@@ -88,6 +104,7 @@ def wait_only(prev, new, const, w):
 REWARDS = {
     "waste_wait": waste_wait_tradeoff,
     "group_waste_wait": group_waste_wait,
+    "energy_wait": energy_wait,
     "energy_only": energy_only,
     "wait_only": wait_only,
 }

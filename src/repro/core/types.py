@@ -21,6 +21,17 @@ WAITING, ALLOCATED, RUNNING, DONE = 0, 1, 2, 3
 INF_TIME = np.int32(2**30)  # sentinel "never" (headroom for + t_on arithmetic)
 
 
+def did_you_mean(unknown, known) -> str:
+    """``"; did you mean 'x'?"`` error suffix (the config-key validation
+    style shared by scheduler labels, DVFS mode names, and spec keys)."""
+    import difflib
+
+    close = difflib.get_close_matches(
+        str(unknown), [str(k) for k in known], n=1
+    )
+    return f"; did you mean {close[0]!r}?" if close else ""
+
+
 class BasePolicy(enum.IntEnum):
     FCFS = 0
     EASY = 1
@@ -112,6 +123,22 @@ class SimMetrics(NamedTuple):
     # a homogeneous platform has exactly one group == energy_by_state_j
     energy_by_group_j: tuple = ()
     group_names: tuple = ()
+    # runtime DVFS ledgers (core/SEMANTICS.md §DVFS): per group x mode
+    # residency seconds and ACTIVE-state energy attributed to the mode the
+    # group was in while it accrued. All-zero when no DVFS policy ran.
+    mode_residency_s: tuple = ()
+    energy_by_mode_j: tuple = ()
+
+    def _group_labels(self, n: int) -> list:
+        names = list(self.group_names) + [
+            f"group{i}" for i in range(len(self.group_names), n)
+        ]
+        # duplicate group names would collide as dict keys and silently
+        # drop groups; qualify repeats with their group index
+        return [
+            nm if names.count(nm) == 1 else f"{nm}{i}"
+            for i, nm in enumerate(names)
+        ]
 
     def row(self) -> dict:
         out = {
@@ -125,16 +152,18 @@ class SimMetrics(NamedTuple):
             "n_terminated": self.n_terminated,
         }
         if len(self.energy_by_group_j) > 1:
-            names = list(self.group_names) + [
-                f"group{i}"
-                for i in range(len(self.group_names), len(self.energy_by_group_j))
-            ]
-            # duplicate group names would collide as dict keys and silently
-            # drop groups; qualify repeats with their group index
-            names = [
-                n if names.count(n) == 1 else f"{n}{i}"
-                for i, n in enumerate(names)
-            ]
+            names = self._group_labels(len(self.energy_by_group_j))
             for name, e in zip(names, self.energy_by_group_j):
                 out[f"energy_kwh.{name}"] = float(sum(e)) / 3.6e6
+        # DVFS columns only when a DVFS policy actually ran (residency
+        # accrues only under dvfs_enabled) and there is a real mode choice
+        modes = self.mode_residency_s
+        if modes and any(sum(m) > 0 for m in modes) and max(
+            len(m) for m in modes
+        ) > 1:
+            names = self._group_labels(len(modes))
+            for name, res, e in zip(names, modes, self.energy_by_mode_j):
+                for k, (r_s, e_j) in enumerate(zip(res, e)):
+                    out[f"mode_s.{name}.m{k}"] = float(r_s)
+                    out[f"mode_kwh.{name}.m{k}"] = float(e_j) / 3.6e6
         return out

@@ -24,7 +24,9 @@ from repro.experiments.spec import Experiment, resolve_platform, resolve_workloa
 
 @dataclasses.dataclass(frozen=True)
 class ExperimentResult:
-    """Rows are scheduler-major x timeout x replication, in grid order.
+    """Rows are scheduler-major x timeout [x platform] x replication, in
+    grid order (a ``platform`` column appears when the spec has a platform
+    axis).
 
     ``n_compiles`` is the compiled-program count of the grid's jitted
     driver (the one-compile guarantee: 1, or None on JAX versions without
@@ -46,6 +48,8 @@ class ExperimentResult:
         """A compact fixed-width text table (CLI output)."""
         cols = ["scheduler", "timeout", "replication", "total_energy_kwh",
                 "wasted_energy_kwh", "mean_wait_s", "utilization"]
+        if any("platform" in r for r in self.rows):
+            cols.insert(2, "platform")
         lines = [" ".join(f"{c:>18s}" for c in cols)]
         for r in self.rows:
             cells = []
@@ -64,6 +68,57 @@ def _metrics_payload(result: ExperimentResult) -> dict:
         "n_compiles": result.n_compiles,
         "rows": list(result.rows),
     }
+
+
+def _engine_config_with_rl(experiment: Experiment, plat):
+    """The shared static EngineConfig; RL scheduler labels get the
+    checkpointed in-graph controller from ``experiment.rl`` attached.
+
+    The controller is static trace structure (core/SEMANTICS.md §Traced vs
+    static), shared by every grid point: non-RL rows run it with rule 8
+    traced off, and all RL labels must therefore name ONE policy stack.
+    """
+    from repro.core.policy import RLController, from_label
+
+    cfg = experiment.engine_config()
+    rl_stacks = {
+        label: pol
+        for label in experiment.schedulers
+        for _, pol in [from_label(label)]
+        if isinstance(pol, RLController)
+    }
+    if not rl_stacks:
+        if experiment.rl is not None:
+            raise ValueError(
+                "experiment declares an rl checkpoint block but no RL "
+                f"scheduler label is in the grid ({list(experiment.schedulers)}); "
+                "add an 'RL' / 'RL:groups' / 'RL:dvfs' label or drop the "
+                "rl entry"
+            )
+        return cfg
+    if len(set(rl_stacks.values())) > 1:
+        raise ValueError(
+            "an experiment grid shares ONE in-graph RL controller (static "
+            "trace structure); scheduler labels "
+            f"{sorted(rl_stacks)} name different RL stacks — split them "
+            "into separate experiments"
+        )
+    if not experiment.rl or "checkpoint" not in experiment.rl:
+        raise ValueError(
+            f"RL scheduler label(s) {sorted(rl_stacks)} need an "
+            'rl: {"checkpoint": <dir>} experiment entry (a policy saved by '
+            "training.checkpoint.save_policy)"
+        )
+    # lazy import: repro.launch.sim imports repro.experiments at module top
+    from repro.launch.sim import _resolve_rl_policy
+
+    pol = next(iter(rl_stacks.values()))
+    pol, rl = _resolve_rl_policy(pol, {"rl": dict(experiment.rl)}, plat)
+    return dataclasses.replace(
+        cfg,
+        policy=pol,
+        rl_decision_interval=rl.get("decision_interval"),
+    )
 
 
 def run(
@@ -95,8 +150,15 @@ def run(
             "the spec"
         )
     plat = platform if platform is not None else resolve_platform(experiment.platform)
-    cfg = experiment.engine_config()
-    scenarios = experiment.grid()
+    cfg = _engine_config_with_rl(experiment, plat)
+    # swap platform-axis *names* for resolved PlatformSpecs (traced sweep
+    # scenarios); the declarative grid keeps the names for the rows table
+    grid = experiment.grid()
+    axis = {name: resolve_platform(spec) for name, spec in experiment.platforms}
+    scenarios = [
+        {**sc, "platform": axis[sc["platform"]]} if "platform" in sc else sc
+        for sc in grid
+    ]
 
     rows = []
     n_compiles: Optional[int] = None
@@ -111,15 +173,16 @@ def run(
         batch = engine.sweep(plat, wl, scenarios, cfg)
         if batch.n_compiles is not None:
             n_compiles = max(n_compiles or 0, batch.n_compiles)
-        for sc, m in zip(scenarios, batch.metrics):
-            rows.append(
-                {
-                    "scheduler": sc["scheduler"],
-                    "timeout": sc["timeout"],
-                    "replication": r,
-                    **m.row(),
-                }
-            )
+        for sc, m in zip(grid, batch.metrics):
+            row = {
+                "scheduler": sc["scheduler"],
+                "timeout": sc["timeout"],
+            }
+            if "platform" in sc:
+                row["platform"] = sc["platform"]
+            row["replication"] = r
+            row.update(m.row())
+            rows.append(row)
     wall = time.perf_counter() - t0
 
     result = ExperimentResult(
@@ -139,10 +202,9 @@ def write_outputs(result: ExperimentResult, out_dir: str) -> None:
         json.dump(_metrics_payload(result), f, indent=2, sort_keys=True)
         f.write("\n")
     rows = result.rows
+    lead = ["scheduler", "timeout", "platform", "replication"]
     cols = sorted({k for r in rows for k in r}, key=lambda c: (
-        ["scheduler", "timeout", "replication"].index(c)
-        if c in ("scheduler", "timeout", "replication")
-        else 3,
+        lead.index(c) if c in lead else len(lead),
         c,
     ))
     with open(os.path.join(out_dir, "rows.csv"), "w", newline="") as f:

@@ -97,14 +97,32 @@ def resolve_platform(spec) -> PlatformSpec:
     return load_platform(spec)
 
 
+_KNOWN_RL_KEYS = {"checkpoint", "decision_interval"}
+
+
 @dataclasses.dataclass(frozen=True)
 class Experiment:
     """A declarative, reproducible grid study (JSON-round-trippable).
 
-    The grid is the cross product ``schedulers x timeouts``, evaluated as
-    ONE compiled program per replication (``engine.sweep`` over the traced
-    policy axis). Scheduler labels come from ``policy.from_label``; a
-    timeout of ``None`` means "never switch off".
+    The grid is the cross product ``schedulers x timeouts [x platforms]``,
+    evaluated as ONE compiled program per replication (``engine.sweep`` over
+    the traced policy axis — platform tables are traced operands too, so the
+    platform axis vmaps like every other). Scheduler labels come from
+    ``policy.from_label``; a timeout of ``None`` means "never switch off".
+
+    ``platforms`` is an optional *named* platform axis: a mapping
+    ``{name: resolve_platform spec}`` (or a sequence of ``(name, spec)``
+    pairs). When set, every grid point additionally carries a platform name
+    and the base ``platform`` field is only the sweep's shape anchor —
+    every axis entry must share its node/group counts and DVFS mode-table
+    width. Rows gain a ``platform`` column.
+
+    ``rl`` attaches a checkpointed controller to RL scheduler labels:
+    ``{"checkpoint": <dir saved by training.checkpoint.save_policy>,
+    "decision_interval": <s>}`` — the same block ``launch/sim.py`` takes.
+    The controller is static trace structure shared by the whole grid, so
+    all RL labels in one experiment must name the same policy stack;
+    non-RL rows run with rule 8 traced off, unaffected.
     """
 
     name: str
@@ -112,6 +130,8 @@ class Experiment:
     platform: Union[str, int, dict]  # resolve_platform spec
     schedulers: Tuple[str, ...] = ("EASY PSUS",)
     timeouts: Tuple[Optional[int], ...] = (None,)
+    platforms: Tuple = ()  # optional named platform axis ((name, spec), ...)
+    rl: Optional[dict] = None  # {"checkpoint": dir, "decision_interval": s}
     node_order: str = "id"  # "id" | "cheap" | "idle-watts" (static)
     terminate_overrun: bool = False
     window: int = 32  # scheduler scan window (static)
@@ -122,6 +142,7 @@ class Experiment:
         # normalize JSON lists to tuples so specs hash and compare stably
         object.__setattr__(self, "schedulers", tuple(self.schedulers))
         object.__setattr__(self, "timeouts", tuple(self.timeouts))
+        object.__setattr__(self, "platforms", self._norm_platforms())
         if not self.schedulers or not self.timeouts:
             raise ValueError("experiment grid needs >= 1 scheduler and timeout")
         if self.replications < 1:
@@ -132,15 +153,46 @@ class Experiment:
             from_label(label)  # fail fast on unknown labels
         if isinstance(self.workload, Mapping):
             check_workload_keys(self.workload)  # fail fast on typo'd keys
+        if self.rl is not None:
+            check_unknown_keys(self.rl, _KNOWN_RL_KEYS, "experiment rl")
+
+    def _norm_platforms(self) -> Tuple:
+        """Normalize the platform axis to ((name, json-able spec), ...)."""
+        from repro.workloads.platform import PlatformSpec
+
+        entries = self.platforms
+        if isinstance(entries, Mapping):
+            entries = tuple(entries.items())
+        out = []
+        for e in entries:
+            if isinstance(e, str) or not hasattr(e, "__len__") or len(e) != 2:
+                raise ValueError(
+                    f"platform-axis entry {e!r} is not a (name, spec) pair "
+                    "(pass a mapping {name: spec} or a pair sequence)"
+                )
+            name, spec = e
+            if isinstance(spec, PlatformSpec):
+                spec = spec.to_json()  # keep the spec JSON-round-trippable
+            out.append((str(name), spec))
+        names = [n for n, _ in out]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate platform-axis names: {names}")
+        return tuple(out)
 
     # ---- grid ----
     def grid(self):
-        """The scenario mappings ``engine.sweep`` consumes, in row order
-        (scheduler-major, then timeout)."""
+        """The declarative grid points, in row order (scheduler-major, then
+        timeout, then platform-axis entry). The runner swaps each point's
+        platform *name* for the resolved :class:`PlatformSpec` before
+        handing the scenarios to ``engine.sweep``."""
+        plats = [name for name, _ in self.platforms] or [None]
         return [
-            {"scheduler": s, "timeout": t}
+            {"scheduler": s, "timeout": t, **(
+                {"platform": p} if p is not None else {}
+            )}
             for s in self.schedulers
             for t in self.timeouts
+            for p in plats
         ]
 
     def engine_config(self):

@@ -16,7 +16,8 @@ Config keys (paper's runtime layer):
                 platforms use the "node_groups"/"nodes" JSON schema
                 (core/SEMANTICS.md §Heterogeneity) and get per-group
                 energy breakdowns in metrics.json
-    scheduler:  "<FCFS|EASY> <PSUS|PSAS|PSAS+IPM|AlwaysOn|RL|RL:groups>"
+    scheduler:  "<FCFS|EASY> <PSUS|PSAS|PSAS+IPM|AlwaysOn|DVFS|RL|RL:groups
+                |RL:dvfs|<PSM>+DVFS>"
                 (the policy.from_label registry — single source of truth)
     timeout:    idle seconds before switch-off (null = never)
     terminate_overrun: bool
@@ -145,6 +146,22 @@ def _resolve_rl_policy(pol, config, plat):
             f"actions but scheduler label requests grouped={pol.grouped}; "
             "use the matching 'RL' / 'RL:groups' label"
         )
+    if bool(meta.get("dvfs", False)) != pol.dvfs:
+        raise ValueError(
+            f"RL checkpoint was trained with dvfs={meta.get('dvfs', False)} "
+            f"but scheduler label requests dvfs={pol.dvfs}; use the "
+            "matching 'RL' / 'RL:dvfs' label"
+        )
+    if pol.dvfs:
+        from repro.core.rl.actions import DVFS_ACTIONS
+
+        if meta["action"] in DVFS_ACTIONS and meta["n_levels"] != plat.n_dvfs_modes():
+            raise ValueError(
+                f"RL checkpoint commands {meta['n_levels']} DVFS modes but "
+                f"this platform's mode-table width is {plat.n_dvfs_modes()}"
+                "; mode commands would be mis-decoded — retrain or pick a "
+                "matching platform"
+            )
     if pol.grouped:
         from repro.core.rl.actions import action_space_size
 
@@ -247,12 +264,22 @@ def main(argv=None):
     ap.add_argument(
         "--scheduler",
         default="EASY PSUS",
-        choices=list(scheduler_labels(include_rl=True)),
+        metavar="LABEL",
+        help="a policy.from_label scheduler label: "
+             f"{', '.join(scheduler_labels(include_rl=True, include_dvfs=True))}"
+             ", or '<PSM>+DVFS' composing rule 9 onto any stack "
+             "(e.g. 'EASY PSAS+IPM+DVFS')",
     )
     ap.add_argument("--timeout", type=int, default=None)
     ap.add_argument("--terminate-overrun", action="store_true")
     ap.add_argument("--out", default="out/sim")
     args = ap.parse_args(argv)
+    try:
+        from_label(args.scheduler)
+    except KeyError as e:
+        # registry validation with the did-you-mean hint, instead of a
+        # frozen argparse choices list drifting from from_label
+        ap.error(str(e.args[0]) if e.args else str(e))
 
     if args.experiment:
         # the spec is the whole study: reject single-run flags rather than

@@ -252,9 +252,15 @@ def save_policy(
     feature_window: int = 8,
     grouped: bool = False,
     n_groups: int = 1,
+    dvfs: bool = False,
     step: int = 0,
 ) -> None:
-    """Save an RL policy with the versioned header ``load_policy`` checks."""
+    """Save an RL policy with the versioned header ``load_policy`` checks.
+
+    ``dvfs``: the policy was trained commanding DVFS modes
+    (``RLController(dvfs=True)``; for mode actions ``n_levels`` is the
+    platform's mode-table width).
+    """
     meta = {
         "kind": _POLICY_KIND,
         "version": POLICY_CKPT_VERSION,
@@ -267,6 +273,7 @@ def save_policy(
         "feature_window": int(feature_window),
         "grouped": bool(grouped),
         "n_groups": int(n_groups),
+        "dvfs": bool(dvfs),
     }
     Checkpointer(directory).save(step, params, meta)
 

@@ -15,9 +15,15 @@ table accessors (:meth:`PlatformSpec.node_power_table` and friends)
 broadcast them, so both cases feed the engines through one code path
 (core/SEMANTICS.md §Heterogeneity).
 
-DVFS profiles are carried in the schema for forward compatibility (the paper
-models them but does not evaluate them for lack of public traces); the engine
-uses the node's operating ``speed`` to scale realized runtimes.
+DVFS is modelled at two levels. The *static* level predates runtime DVFS:
+``dvfs_profiles`` + ``dvfs_mode`` pin one operating point for a whole run
+(the engine then just uses the node's operating ``speed``). The *runtime*
+level (core/SEMANTICS.md §DVFS) gives every node group a small mode table —
+:meth:`NodeGroup.dvfs_modes`, or the document-level ``dvfs_profiles`` for a
+homogeneous machine — of absolute ``(speed, active-watts)`` operating
+points; a DVFS-enabled power policy switches each group's mode while the
+simulation runs. :meth:`PlatformSpec.group_dvfs_tables` lowers the schema
+to the ``[G, M]`` tables both engines consume.
 """
 from __future__ import annotations
 
@@ -41,7 +47,12 @@ STATE_NAMES = ("sleep", "switching_on", "idle", "active", "switching_off")
 
 @dataclasses.dataclass(frozen=True)
 class DvfsProfile:
-    """One DVFS operating point: nominal power (W) and normalized speed."""
+    """One DVFS operating point: active power draw (W) and absolute speed.
+
+    Used statically (``PlatformSpec.dvfs_mode`` pins one profile for a whole
+    run) and as a runtime mode-table entry (``NodeGroup.dvfs_modes`` /
+    document-level ``dvfs_profiles`` — see core/SEMANTICS.md §DVFS).
+    """
 
     name: str
     power: float
@@ -52,6 +63,16 @@ class DvfsProfile:
             raise ValueError(
                 f"DvfsProfile.speed must be positive, got {self.speed}"
             )
+        if self.power <= 0:
+            raise ValueError(
+                f"DvfsProfile.power must be positive, got {self.power}"
+            )
+
+
+def _validate_modes(modes, where: str) -> None:
+    names = [p.name for p in modes]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate DVFS mode names in {where}: {names}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,7 +81,11 @@ class NodeGroup:
 
     ``speed`` is the group's operating compute speed (realized wall time of a
     job = nominal runtime / min speed over its allocated nodes — see
-    core/SEMANTICS.md §Heterogeneity).
+    core/SEMANTICS.md §Heterogeneity). ``dvfs_modes`` is the group's runtime
+    DVFS mode table — absolute (speed, active-watts) operating points a
+    DVFS-enabled power policy switches between at runtime (SEMANTICS.md
+    §DVFS); empty means the single base operating point
+    ``(speed, power_active)``.
     """
 
     count: int
@@ -73,12 +98,15 @@ class NodeGroup:
     t_switch_on: int = 30 * 60
     t_switch_off: int = 45 * 60
     speed: float = 1.0
+    dvfs_modes: Tuple[DvfsProfile, ...] = ()
 
     def __post_init__(self):
         if self.count <= 0:
             raise ValueError(f"NodeGroup.count must be positive, got {self.count}")
         if self.speed <= 0:
             raise ValueError(f"NodeGroup.speed must be positive, got {self.speed}")
+        object.__setattr__(self, "dvfs_modes", tuple(self.dvfs_modes))
+        _validate_modes(self.dvfs_modes, f"node group {self.name!r}")
 
     def power_table(self) -> Tuple[float, ...]:
         return (
@@ -90,7 +118,7 @@ class NodeGroup:
         )
 
     def to_json(self) -> Dict[str, Any]:
-        return {
+        out = {
             "name": self.name,
             "count": self.count,
             "compute_speed": self.speed,
@@ -108,6 +136,11 @@ class NodeGroup:
                 },
             },
         }
+        if self.dvfs_modes:
+            out["dvfs_modes"] = [
+                dataclasses.asdict(p) for p in self.dvfs_modes
+            ]
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +172,18 @@ class PlatformSpec:
             raise ValueError(
                 f"compute_speed must be positive, got {self.compute_speed}"
             )
+        object.__setattr__(self, "dvfs_profiles", tuple(self.dvfs_profiles))
+        _validate_modes(self.dvfs_profiles, "platform dvfs_profiles")
+        if self.dvfs_mode is not None:
+            names = [p.name for p in self.dvfs_profiles]
+            if self.dvfs_mode not in names:
+                from repro.core.types import did_you_mean
+
+                raise ValueError(
+                    f"unknown DVFS mode {self.dvfs_mode!r}; this platform "
+                    f"declares {names or 'no dvfs_profiles'}"
+                    + did_you_mean(self.dvfs_mode, names)
+                )
         if self.node_groups:
             object.__setattr__(self, "node_groups", tuple(self.node_groups))
             total = sum(g.count for g in self.node_groups)
@@ -180,6 +225,10 @@ class PlatformSpec:
                 t_switch_on=self.t_switch_on,
                 t_switch_off=self.t_switch_off,
                 speed=self.speed(),
+                # document-level profiles are the synthesized group's runtime
+                # mode table — a homogeneous machine with dvfs_profiles can
+                # run a DVFS-enabled policy directly
+                dvfs_modes=self.dvfs_profiles,
             ),
         )
 
@@ -238,6 +287,46 @@ class PlatformSpec:
 
     def group_active_powers(self) -> Tuple[float, ...]:
         return tuple(g.power_active for g in self.groups())
+
+    # ---- runtime DVFS mode tables (core/SEMANTICS.md §DVFS) ---------------
+    def group_dvfs_modes(self) -> Tuple[Tuple[DvfsProfile, ...], ...]:
+        """Each group's mode table, sorted ascending by speed (index 0 is
+        the slowest mode — the heuristic ladder's idle point). A group with
+        no declared modes gets the single base operating point."""
+        out = []
+        for g in self.groups():
+            modes = g.dvfs_modes or (
+                DvfsProfile("base", power=g.power_active, speed=g.speed),
+            )
+            out.append(tuple(sorted(modes, key=lambda p: (p.speed, p.name))))
+        return tuple(out)
+
+    def n_dvfs_modes(self) -> int:
+        """Mode-table width M (max modes over groups; >= 1). M is a shape:
+        platforms in one sweep must agree on it."""
+        return max(len(t) for t in self.group_dvfs_modes())
+
+    def group_dvfs_tables(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(f32[G, M] speed, f32[G, M] active watts, i32[G] mode counts).
+
+        Groups with fewer than M modes pad by repeating their last (fastest)
+        entry; the per-group count clamps mode selection so the padding is
+        never chosen. Mode 0's entries equal the group's base (speed,
+        power_active) when no modes are declared — that identity is the
+        metamorphic single-mode guarantee (§DVFS).
+        """
+        tabs = self.group_dvfs_modes()
+        G, M = len(tabs), self.n_dvfs_modes()
+        speed = np.ones((G, M), np.float32)
+        watts = np.zeros((G, M), np.float32)
+        n = np.zeros(G, np.int32)
+        for gi, t in enumerate(tabs):
+            n[gi] = len(t)
+            for mi in range(M):
+                p = t[min(mi, len(t) - 1)]
+                speed[gi, mi] = np.float32(p.speed)
+                watts[gi, mi] = np.float32(p.power)
+        return speed, watts, n
 
     # ---- legacy scalar views ---------------------------------------------
     def power_table(self):
@@ -310,6 +399,10 @@ def platform_from_groups(groups: Sequence[NodeGroup], **kw) -> PlatformSpec:
         raise ValueError("platform_from_groups needs at least one group")
     if len(groups) == 1:
         g = groups[0]
+        if g.dvfs_modes:
+            # the collapsed scalar spec keeps the group's runtime mode table
+            # as its document-level profiles (groups() round-trips them)
+            kw = {**kw, "dvfs_profiles": g.dvfs_modes}
         return PlatformSpec(
             nb_nodes=g.count,
             power_active=g.power_active,
@@ -372,10 +465,15 @@ def _group_from_json(
     default_speed: float = 1.0,
 ) -> NodeGroup:
     fields = _states_from_json(d.get("states", {}), defaults)
+    modes = tuple(
+        DvfsProfile(m["name"], float(m["power"]), float(m.get("speed", 1.0)))
+        for m in d.get("dvfs_modes", [])
+    )
     return NodeGroup(
         count=count,
         name=str(d.get("name", f"group{index}")),
         speed=float(d.get("compute_speed", d.get("speed", default_speed))),
+        dvfs_modes=modes,
         **fields,
     )
 
@@ -490,6 +588,31 @@ def mixed_platform_example(nb_nodes: int = 16) -> PlatformSpec:
                       power_switch_on=100.0, power_switch_off=4.0,
                       t_switch_on=120, t_switch_off=180, speed=0.5),
             NodeGroup(count=nb_nodes - a - b, name="std"),
+        )
+    )
+
+
+def dvfs_platform_example(nb_nodes: int = 16) -> PlatformSpec:
+    """Canonical runtime-DVFS example: the mixed 3-group platform with a
+    (slow/base/turbo) mode table on each group (core/SEMANTICS.md §DVFS).
+
+    Mode speeds bracket each group's base speed; mode watts scale roughly
+    with speed so turbo trades energy for wall time. Used by tests and
+    ``benchmarks/bench_dvfs.py``.
+    """
+
+    def ladder(base_speed: float, base_watts: float) -> Tuple[DvfsProfile, ...]:
+        return (
+            DvfsProfile("slow", power=0.6 * base_watts, speed=0.5 * base_speed),
+            DvfsProfile("base", power=base_watts, speed=base_speed),
+            DvfsProfile("turbo", power=1.5 * base_watts, speed=1.5 * base_speed),
+        )
+
+    mixed = mixed_platform_example(nb_nodes)
+    return platform_from_groups(
+        tuple(
+            dataclasses.replace(g, dvfs_modes=ladder(g.speed, g.power_active))
+            for g in mixed.groups()
         )
     )
 

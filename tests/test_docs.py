@@ -1,0 +1,35 @@
+"""Documentation hygiene: the `make docs-check` lane, run in tier-1 too.
+
+The checker (tools/docs_check.py) verifies dead links, stale file
+references, code-fence balance, and that fenced `python -m` / `python
+<file>` commands still resolve — so README/SEMANTICS/experiments docs
+cannot silently rot when files move.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+import docs_check  # noqa: E402
+
+
+def test_repo_docs_are_clean():
+    problems = docs_check.main()
+    assert not problems, "\n".join(problems)
+
+
+def test_checker_catches_rot(tmp_path):
+    """The checker itself must detect each rot class (meta-test)."""
+    bad = tmp_path / "bad.md"
+    bad.write_text(
+        "see [x](does/not/exist.md) and `src/gone/file.py`\n"
+        "```sh\nPYTHONPATH=src python -m repro.launch.missing_mod\n```\n"
+        "```\nunbalanced\n"
+    )
+    rel = os.path.relpath(str(bad), docs_check.REPO)
+    problems = docs_check.main(docs=(rel,))
+    text = "\n".join(problems)
+    assert "dead link" in text
+    assert "stale file reference" in text
+    assert "missing module" in text
+    assert "unbalanced" in text

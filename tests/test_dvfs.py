@@ -1,0 +1,616 @@
+"""Runtime per-group DVFS (core/SEMANTICS.md §DVFS).
+
+Covers: the metamorphic single-mode guarantee (a DVFS-enabled run over an
+identity mode table is bit-exact with the non-DVFS path — engine == oracle
+== pre-DVFS golden — for every scheduler label), multi-mode ladder parity
+between both engines, agent-commanded modes (RL:dvfs, in-graph controller
+vs oracle rl_policy), the remaining-work rescale rule, mode ledgers, the
+scheduler x DVFS one-compile sweep, the platform-schema JSON path, and the
+did-you-mean guards.
+"""
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.metrics import metrics_from_state, schedule_table
+from repro.core.policy import DVFS, RLController, from_label, scheduler_labels
+from repro.core.ref.pydes import run_pydes
+from repro.core.types import BasePolicy, EngineConfig
+from repro.workloads.generator import GeneratorConfig, generate_workload
+from repro.workloads.platform import (
+    DvfsProfile,
+    NodeGroup,
+    PlatformSpec,
+    dvfs_platform_example,
+    load_platform,
+    mixed_platform_example,
+    platform_from_groups,
+)
+from repro.workloads.workload import workload_from_arrays
+
+I32 = jnp.int32
+
+SIX = tuple(l for l in scheduler_labels() if "AlwaysOn" not in l)
+
+DVFS_LABELS = ("EASY DVFS", "FCFS DVFS", "EASY PSUS+DVFS",
+               "EASY PSAS+IPM+DVFS")
+
+
+def _wl(n_jobs=60, seed=11, **kw):
+    kw.setdefault("overrun_prob", 0.2)
+    return generate_workload(
+        GeneratorConfig(n_jobs=n_jobs, nb_res=16, seed=seed, **kw)
+    )
+
+
+# ------------------------------------------- metamorphic single-mode table
+
+@pytest.mark.parametrize("label", SIX)
+def test_single_mode_table_is_bit_exact_with_non_dvfs(label):
+    """Identity mode table (the default: one entry = the group's base
+    operating point): DVFS enabled == DVFS disabled == oracle, bit-exact
+    schedules and bit-exact f32 energy ledger, for every scheduler label."""
+    plat = mixed_platform_example(16)  # no declared modes -> identity table
+    wl = _wl()
+    base, pol = from_label(label)
+    kw = dict(base=base, timeout=240, terminate_overrun=True,
+              node_order="cheap")
+    golden = engine.simulate(plat, wl, EngineConfig(policy=pol, **kw))
+    cfg_dvfs = EngineConfig(policy=dataclasses.replace(pol, dvfs=True), **kw)
+    s = engine.simulate(plat, wl, cfg_dvfs)
+    np.testing.assert_array_equal(schedule_table(s), schedule_table(golden))
+    np.testing.assert_array_equal(
+        np.asarray(s.energy), np.asarray(golden.energy)
+    )
+    m_ref, des = run_pydes(plat, wl, cfg_dvfs)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, plat)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+    assert m.makespan_s == m_ref.makespan_s
+
+
+def test_explicit_single_mode_equal_to_base_is_identity():
+    """A *declared* one-entry table equal to the base operating point is the
+    same identity (the table values, not their absence, are the contract)."""
+    wl = _wl(n_jobs=40, seed=3)
+    plain = PlatformSpec(nb_nodes=16)
+    declared = platform_from_groups(
+        (
+            NodeGroup(
+                count=16,
+                dvfs_modes=(DvfsProfile("base", power=190.0, speed=1.0),),
+            ),
+        )
+    )
+    cfg = EngineConfig(policy=DVFS(), timeout=300, terminate_overrun=True)
+    s_plain = engine.simulate(plain, wl, dataclasses.replace(cfg))
+    s_decl = engine.simulate(declared, wl, cfg)
+    np.testing.assert_array_equal(
+        schedule_table(s_decl), schedule_table(s_plain)
+    )
+    golden = engine.simulate(
+        plain, wl,
+        EngineConfig(policy=from_label("EASY AlwaysOn")[1], timeout=300,
+                     terminate_overrun=True),
+    )
+    np.testing.assert_array_equal(
+        schedule_table(s_decl), schedule_table(golden)
+    )
+
+
+# ------------------------------------------------- multi-mode ladder parity
+
+@pytest.mark.parametrize("label", DVFS_LABELS)
+def test_multi_mode_ladder_oracle_parity(label):
+    """Queue-pressure ladder over a real 3-mode table on the mixed platform:
+    bit-exact schedules, energy within the Kahan tolerance, and matching
+    mode-residency ledgers across engines; modes must actually switch."""
+    plat = dvfs_platform_example(16)
+    wl = _wl()
+    base, pol = from_label(label)
+    cfg = EngineConfig(base=base, policy=pol, timeout=240,
+                       terminate_overrun=True, node_order="cheap")
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, plat)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+    res = np.asarray(m.mode_residency_s)
+    np.testing.assert_allclose(
+        res, np.asarray(m_ref.mode_residency_s), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(m.energy_by_mode_j),
+        np.asarray(m_ref.energy_by_mode_j),
+        rtol=1e-5,
+    )
+    # the ladder really moved: more than one mode has residency somewhere
+    assert (res > 0).sum() > res.shape[0], label
+
+
+def test_mode_ledgers_are_consistent():
+    """Residency sums to the accrued horizon per group; energy-by-mode sums
+    to the ACTIVE row of the per-group energy ledger."""
+    plat = dvfs_platform_example(16)
+    wl = _wl(n_jobs=50, seed=4)
+    cfg = EngineConfig(policy=DVFS(), node_order="cheap")
+    s = engine.simulate(plat, wl, cfg)
+    m = metrics_from_state(s, plat)
+    res = np.asarray(m.mode_residency_s)  # [G, M]
+    horizon = float(np.asarray(s.t))
+    np.testing.assert_allclose(res.sum(axis=1), horizon, rtol=1e-5)
+    by_mode = np.asarray(m.energy_by_mode_j).sum(axis=1)  # [G]
+    active = np.asarray(m.energy_by_group_j)[:, 3]  # ACTIVE column
+    np.testing.assert_allclose(by_mode, active, rtol=1e-4)
+    # row() exposes the ledgers only when DVFS ran with a real mode choice
+    row = m.row()
+    assert any(k.startswith("mode_s.") for k in row)
+    assert any(k.startswith("mode_kwh.") for k in row)
+    row_off = metrics_from_state(
+        engine.simulate(plat, wl, EngineConfig()), plat
+    ).row()
+    assert not any(k.startswith("mode_") for k in row_off)
+
+
+def test_dvfs_changes_realized_runtimes():
+    """With an empty queue the ladder idles at the slowest mode: a lone
+    1-node job on a 2x-mode table runs at the slow mode's speed."""
+    plat = platform_from_groups(
+        (
+            NodeGroup(count=4, dvfs_modes=(
+                DvfsProfile("slow", power=100.0, speed=0.5),
+                DvfsProfile("fast", power=260.0, speed=2.0),
+            )),
+        )
+    )
+    wl = workload_from_arrays(
+        res=[1], subtime=[0], runtime=[100], reqtime=[500], nb_res=4
+    )
+    s = engine.simulate(
+        plat, wl, EngineConfig(policy=DVFS(), terminate_overrun=True)
+    )
+    # demand (1) * n_modes (2) // N (4) = 0 -> slow mode, speed 0.5
+    assert schedule_table(s)[0, 1] == 200.0
+    golden = engine.simulate(plat, wl, EngineConfig(terminate_overrun=True))
+    assert schedule_table(golden)[0, 1] == 100.0  # base speed 1.0
+
+
+# ----------------------------------------------- agent-commanded (RL:dvfs)
+
+def _mode_controllers():
+    """Scripted DVFS controller implemented identically for both engines:
+    fastest mode while demand is queued, slowest when idle."""
+
+    def jax_ctrl(s, const):
+        G = s.rl_on_cmd.shape[0]
+        waiting = (s.job_status == 0) & (s.job_subtime <= s.t)
+        demand = jnp.sum(jnp.where(waiting, s.job_res, 0))
+        mode = jnp.where(demand > 0, const.dvfs_n_modes - 1, 0)
+        z = jnp.zeros(G, I32)
+        return z, z, mode
+
+    def py_ctrl(des):
+        G = des.n_groups
+        demand = des._queued_demand()
+        mode = [
+            int(des.dvfs_n_modes[g]) - 1 if demand > 0 else 0
+            for g in range(G)
+        ]
+        return np.zeros(G, int), np.zeros(G, int), np.asarray(mode)
+
+    return jax_ctrl, py_ctrl
+
+
+def test_rl_dvfs_controller_oracle_parity():
+    jax_ctrl, py_ctrl = _mode_controllers()
+    plat = dvfs_platform_example(16)
+    wl = _wl(n_jobs=50, seed=5, overrun_prob=0.0)
+    cfg = EngineConfig(
+        base=BasePolicy.EASY,
+        policy=RLController(dvfs=True, controller=jax_ctrl),
+        rl_decision_interval=600, node_order="cheap",
+        terminate_overrun=True,
+    )
+    s = engine.simulate(plat, wl, cfg)
+    cfg_ref = dataclasses.replace(cfg, policy=RLController(dvfs=True))
+    m_ref, des = run_pydes(plat, wl, cfg_ref, rl_policy=py_ctrl)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, plat)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+
+
+def test_rl_dvfs_rejects_legacy_two_tuple_controller():
+    """A (on, off)-only controller under RL:dvfs would silently pin mode 0;
+    the arity mismatch must fail loudly at trace time."""
+    plat = dvfs_platform_example(16)
+    wl = _wl(n_jobs=5, seed=0)
+    cfg = EngineConfig(
+        policy=RLController(
+            dvfs=True,
+            controller=lambda s, const: (s.rl_on_cmd * 0, s.rl_off_cmd * 0),
+        ),
+    )
+    with pytest.raises(ValueError, match=r"\(on, off, mode\)"):
+        engine.simulate(plat, wl, cfg)
+
+
+def test_rescale_formula_midrun():
+    """A mode flip mid-run rescales the remaining wall time by the f32
+    contract expression (checked against a hand computation)."""
+    plat = platform_from_groups(
+        (
+            NodeGroup(count=2, dvfs_modes=(
+                DvfsProfile("half", power=100.0, speed=0.5),
+                DvfsProfile("base", power=190.0, speed=1.0),
+            )),
+        )
+    )
+    # job 0 runs [0, 400) at the mode in force at start; job 1's arrival at
+    # t=100 raises demand, flipping the ladder to the fast mode
+    wl = workload_from_arrays(
+        res=[1, 2], subtime=[0, 100], runtime=[200, 50],
+        reqtime=[900, 900], nb_res=2,
+    )
+    s = engine.simulate(plat, wl, EngineConfig(policy=DVFS()))
+    table = schedule_table(s)
+    # start at mode 0 (speed .5): eff = 400, finish would be 400.
+    # at t=100: demand=2, n_modes=2, N=2 -> mode 1 (speed 1.0);
+    # rem = 300, work = 300 * 0.5 = 150, new_rem = 150 -> finish 250.
+    assert table[0, 0] == 0.0
+    assert table[0, 1] == 250.0
+    m_ref, des = run_pydes(plat, wl, EngineConfig(policy=DVFS()))
+    np.testing.assert_array_equal(table, des.schedule_table())
+
+
+def test_terminated_jobs_keep_their_walltime_cap():
+    """terminate_overrun: a job capped at reqtime is never rescaled, and a
+    rescale that crosses the cap terminates at it (both engines agree)."""
+    plat = platform_from_groups(
+        (
+            NodeGroup(count=2, dvfs_modes=(
+                DvfsProfile("half", power=100.0, speed=0.5),
+                DvfsProfile("base", power=190.0, speed=1.0),
+            )),
+        )
+    )
+    wl = workload_from_arrays(
+        res=[1, 2, 1], subtime=[0, 100, 150], runtime=[200, 50, 60],
+        reqtime=[220, 900, 900], nb_res=2,
+    )
+    cfg = EngineConfig(policy=DVFS(), terminate_overrun=True)
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    # job 0 started at mode 0: realized 400 > reqtime 220 -> capped + marked
+    table = schedule_table(s)
+    assert table[0, 2] == 1.0  # terminated
+    assert table[0, 1] == 220.0  # the cap held through later mode flips
+
+
+# --------------------------------------------------------- sweeps / grids
+
+def test_scheduler_x_dvfs_grid_one_compile():
+    """Schedulers x DVFS stacks x mode-table platform variants: ONE compiled
+    program, rows bit-exact with their per-config compiles."""
+    plat = dvfs_platform_example(16)
+    hot = platform_from_groups(
+        tuple(
+            dataclasses.replace(
+                g,
+                dvfs_modes=tuple(
+                    dataclasses.replace(m, power=1.3 * m.power)
+                    for m in g.dvfs_modes
+                ),
+            )
+            for g in plat.groups()
+        )
+    )
+    wl = _wl(n_jobs=40, seed=2)
+    cfg = EngineConfig(node_order="cheap", terminate_overrun=True,
+                       timeout=300, window=28)
+    scenarios = [
+        "EASY PSUS",
+        "EASY DVFS",
+        "FCFS DVFS",
+        "EASY PSAS+IPM+DVFS",
+        {"scheduler": "EASY DVFS", "timeout": 900},
+        {"scheduler": "EASY DVFS", "platform": hot},
+    ]
+    batch = engine.sweep(plat, wl, scenarios, cfg)
+    if batch.n_compiles is not None:
+        assert batch.n_compiles == 1
+    for i, label in enumerate(["EASY PSUS", "EASY DVFS", "FCFS DVFS",
+                               "EASY PSAS+IPM+DVFS"]):
+        base, pol = from_label(label)
+        single = engine.simulate(
+            plat, wl,
+            EngineConfig(base=base, policy=pol, timeout=300,
+                         node_order="cheap", terminate_overrun=True,
+                         window=28),
+        )
+        np.testing.assert_array_equal(
+            schedule_table(batch.state_at(i)), schedule_table(single),
+            err_msg=label,
+        )
+    # the hot mode table was a traced operand: same schedule, more energy
+    np.testing.assert_array_equal(
+        schedule_table(batch.state_at(5)), schedule_table(batch.state_at(1))
+    )
+    assert batch[5].total_energy_j > batch[1].total_energy_j
+
+
+def test_sweep_rejects_mode_table_width_mismatch():
+    plat = dvfs_platform_example(16)  # 3 modes per group
+    wl = _wl(n_jobs=5, seed=0)
+    with pytest.raises(ValueError, match="mode-table width"):
+        engine.sweep(
+            plat, wl, [mixed_platform_example(16)], EngineConfig()
+        )
+
+
+def test_experiment_platform_axis_with_dvfs(tmp_path):
+    """The experiments platform axis crosses DVFS mode tables in one
+    program; rows carry the platform name."""
+    from repro import experiments
+
+    plat = dvfs_platform_example(16)
+    hot = platform_from_groups(
+        tuple(
+            dataclasses.replace(
+                g,
+                dvfs_modes=tuple(
+                    dataclasses.replace(m, power=1.3 * m.power)
+                    for m in g.dvfs_modes
+                ),
+            )
+            for g in plat.groups()
+        )
+    )
+    exp = experiments.Experiment(
+        name="dvfs_axis",
+        workload={"preset": "fig3_small", "n_jobs": 40},
+        platform=plat,
+        schedulers=("EASY PSUS", "EASY DVFS"),
+        timeouts=(300,),
+        platforms={"base": plat, "hot": hot},
+        node_order="cheap",
+        out=str(tmp_path / "out"),
+    )
+    again = experiments.Experiment.from_json(exp.to_json())
+    assert [n for n, _ in again.platforms] == ["base", "hot"]
+    for bad in (["hi"], [128], [("a", 1, 2)]):
+        with pytest.raises(ValueError, match="not a .name, spec. pair"):
+            experiments.Experiment(
+                name="bad", workload="preset:fig3_small", platform=16,
+                platforms=bad,
+            )
+    result = experiments.run(again)
+    assert len(result.rows) == 4
+    if result.n_compiles is not None:
+        assert result.n_compiles == 1
+    assert [r["platform"] for r in result.rows] == [
+        "base", "hot", "base", "hot"
+    ]
+    dvfs_rows = [r for r in result.rows if r["scheduler"] == "EASY DVFS"]
+    assert dvfs_rows[1]["total_energy_kwh"] > dvfs_rows[0]["total_energy_kwh"]
+    with open(tmp_path / "out" / "rows.csv") as f:
+        header = f.readline().strip().split(",")
+    assert header[:4] == ["scheduler", "timeout", "platform", "replication"]
+
+
+def test_experiment_rl_checkpoint_entries(tmp_path):
+    """RL-checkpoint scenario entries: an RL label rides the grid next to
+    baselines, driven by a saved policy."""
+    import jax
+
+    from repro import experiments
+    from repro.core.rl.env import EnvConfig
+    from repro.core.rl.networks import policy_init
+    from repro.training.checkpoint import save_policy
+
+    ecfg = EnvConfig()
+    params = policy_init(jax.random.PRNGKey(0), ecfg.obs_size, ecfg.n_actions)
+    ckpt = str(tmp_path / "policy")
+    save_policy(
+        ckpt, params, obs_size=ecfg.obs_size, n_actions=ecfg.n_actions,
+        feature=ecfg.feature, action=ecfg.action,
+        n_levels=ecfg.n_action_levels,
+    )
+    exp = experiments.Experiment(
+        name="rl_entries",
+        workload={"preset": "fig3_small", "n_jobs": 40},
+        platform=16,
+        schedulers=("EASY PSUS", "EASY RL"),
+        timeouts=(300,),
+        rl={"checkpoint": ckpt, "decision_interval": 600},
+    )
+    result = experiments.run(exp)
+    assert [r["scheduler"] for r in result.rows] == ["EASY PSUS", "EASY RL"]
+    assert all(r["total_energy_kwh"] > 0 for r in result.rows)
+    with pytest.raises(ValueError, match="checkpoint"):
+        experiments.run(dataclasses.replace(exp, rl=None))
+    with pytest.raises(ValueError, match="ONE in-graph RL controller"):
+        experiments.run(
+            dataclasses.replace(exp, schedulers=("EASY RL", "EASY RL:groups"))
+        )
+    with pytest.raises(ValueError, match="no RL scheduler label"):
+        # an rl block without any RL label would silently run baselines only
+        experiments.run(dataclasses.replace(exp, schedulers=("EASY PSUS",)))
+
+
+# ----------------------------------------------------- schema + guards
+
+def test_dvfs_modes_json_roundtrip(tmp_path):
+    """node_groups JSON with dvfs_modes loads, round-trips, and the mode
+    tables sort ascending by speed with per-group counts."""
+    obj = {
+        "node_groups": [
+            {
+                "name": "big",
+                "count": 4,
+                "states": {"active": {"power": 300.0}},
+                "dvfs_modes": [
+                    {"name": "turbo", "power": 400.0, "speed": 2.0},
+                    {"name": "eco", "power": 150.0, "speed": 0.5},
+                ],
+            },
+            {"name": "small", "count": 4,
+             "states": {"active": {"power": 100.0}}},
+        ]
+    }
+    plat = load_platform(obj)
+    speed, watts, n = plat.group_dvfs_tables()
+    assert plat.n_dvfs_modes() == 2
+    np.testing.assert_array_equal(n, [2, 1])
+    np.testing.assert_allclose(speed[0], [0.5, 2.0])  # sorted by speed
+    np.testing.assert_allclose(watts[0], [150.0, 400.0])
+    np.testing.assert_allclose(speed[1], [1.0, 1.0])  # padded base entry
+    np.testing.assert_allclose(watts[1], [100.0, 100.0])
+    # round trip through to_json / load_platform
+    again = load_platform(json.loads(json.dumps(plat.to_json())))
+    assert again.groups()[0].dvfs_modes == plat.groups()[0].dvfs_modes
+
+
+def test_homogeneous_profiles_feed_the_mode_table():
+    """Document-level dvfs_profiles are the synthesized group's runtime
+    table (and survive the single-group collapse)."""
+    plat = PlatformSpec(
+        nb_nodes=8,
+        dvfs_profiles=(
+            DvfsProfile("eco", power=120.0, speed=0.5),
+            DvfsProfile("turbo", power=250.0, speed=2.0),
+        ),
+    )
+    speed, watts, n = plat.group_dvfs_tables()
+    np.testing.assert_allclose(speed[0], [0.5, 2.0])
+    assert int(n[0]) == 2
+    collapsed = platform_from_groups(plat.groups())
+    assert collapsed.dvfs_profiles == plat.dvfs_profiles
+
+
+def test_unknown_dvfs_mode_name_did_you_mean():
+    with pytest.raises(ValueError, match="did you mean 'turbo'"):
+        PlatformSpec(
+            nb_nodes=8,
+            dvfs_profiles=(DvfsProfile("turbo", power=250.0, speed=2.0),),
+            dvfs_mode="trubo",
+        )
+    with pytest.raises(ValueError, match="duplicate DVFS mode names"):
+        NodeGroup(count=2, dvfs_modes=(
+            DvfsProfile("eco", power=100.0, speed=0.5),
+            DvfsProfile("eco", power=200.0, speed=1.0),
+        ))
+
+
+def test_unknown_scheduler_label_did_you_mean():
+    with pytest.raises(KeyError, match="did you mean 'EASY DVFS'"):
+        from_label("EASY DVFSS")
+    # the registry accepts the new tokens
+    assert from_label("EASY DVFS")[1] == DVFS()
+    assert from_label("easy rl:dvfs")[1] == RLController(dvfs=True)
+    assert from_label("FCFS PSAS+IPM+DVFS")[1].dvfs
+    assert "EASY DVFS" in scheduler_labels(include_dvfs=True)
+    assert "EASY RL:dvfs" in scheduler_labels(
+        include_rl=True, include_dvfs=True
+    )
+
+
+def test_sim_driver_runs_dvfs_label(tmp_path):
+    from repro.launch.sim import run as sim_run
+
+    out = str(tmp_path / "run")
+    res = sim_run(
+        {
+            "workload": "preset:fig3_small",
+            "platform": 16,
+            "scheduler": "EASY DVFS",
+            "gantt": False,
+            "out": out,
+        }
+    )
+    assert res["scheduler"] == "EASY DVFS"
+    assert res["total_energy_kwh"] > 0
+
+
+def test_rl_dvfs_checkpoint_label_mismatch_errors(tmp_path):
+    """A non-DVFS checkpoint must not drive an 'RL:dvfs' scheduler (and
+    vice versa) — mode commands would be mis-decoded."""
+    import jax
+
+    from repro.core.rl.networks import policy_init
+    from repro.launch.sim import run as sim_run
+    from repro.training.checkpoint import save_policy
+
+    params = policy_init(jax.random.PRNGKey(0), 20, 9)
+    ckpt = str(tmp_path / "pol")
+    save_policy(
+        ckpt, params, obs_size=20, n_actions=9, feature="compact",
+        action="target_fraction", n_levels=9,
+    )
+    with pytest.raises(ValueError, match="dvfs"):
+        sim_run(
+            {
+                "workload": "preset:fig3_small",
+                "platform": 16,
+                "scheduler": "EASY RL:dvfs",
+                "rl": {"checkpoint": ckpt},
+                "gantt": False,
+                "out": str(tmp_path / "x"),
+            }
+        )
+
+
+# ----------------------------------------------------------- RL plumbing
+
+def test_group_mode_env_episode():
+    from repro.core.rl.env import EnvConfig, HPCGymEnv
+
+    plat = dvfs_platform_example(16)
+    wl = _wl(n_jobs=12, seed=1, overrun_prob=0.0)
+    cfg = EnvConfig(
+        engine=EngineConfig(
+            policy=RLController(dvfs=True),
+            base=BasePolicy.EASY,
+            rl_decision_interval=300,
+        ),
+        action="group_mode",
+        feature="compact_dvfs",
+        reward="energy_wait",
+        n_groups=3,
+        n_action_levels=plat.n_dvfs_modes(),
+        max_steps=500,
+    )
+    assert cfg.n_actions == 3 * plat.n_dvfs_modes()
+    assert cfg.obs_size == 20 + 9 * 3
+    env = HPCGymEnv(plat, wl, cfg)
+    obs = env.reset()
+    assert obs.shape == (cfg.obs_size,)
+    done, steps = False, 0
+    while not done and steps < 500:
+        obs, r, done, _ = env.step(steps % cfg.n_actions)
+        assert np.isfinite(r)
+        steps += 1
+    assert done
+    sim = env.state.sim
+    assert (np.asarray(sim.mode_time).sum(axis=1) > 0).all()
+
+
+def test_group_mode_env_validation():
+    from repro.core.rl.env import EnvConfig, HPCGymEnv
+
+    with pytest.raises(ValueError, match="dvfs"):
+        EnvConfig(action="group_mode")  # controller not dvfs
+    with pytest.raises(ValueError, match="dvfs"):
+        EnvConfig(engine=EngineConfig(policy=RLController(dvfs=True)))
+    plat = dvfs_platform_example(16)  # 3 modes
+    wl = _wl(n_jobs=5, seed=0)
+    cfg = EnvConfig(
+        engine=EngineConfig(policy=RLController(dvfs=True)),
+        action="group_mode", n_groups=3, n_action_levels=5,
+    )
+    with pytest.raises(ValueError, match="mode-table width"):
+        HPCGymEnv(plat, wl, cfg)

@@ -262,16 +262,25 @@ def test_policy_params_lowering():
     assert TimeoutSleep().params(BasePolicy.EASY) == PolicyParams(
         backfill=True, eager_ready=True, sleep_enabled=True,
         ipm_enabled=False, rl_enabled=False, rl_grouped=False,
+        dvfs_enabled=False, dvfs_rl=False,
     )
     assert IPM().params(BasePolicy.FCFS) == PolicyParams(
         backfill=False, eager_ready=False, sleep_enabled=True,
         ipm_enabled=True, rl_enabled=False, rl_grouped=False,
+        dvfs_enabled=False, dvfs_rl=False,
     )
-    from repro.core.policy import AlwaysOn, RLController
+    from repro.core.policy import DVFS, AlwaysOn, RLController
 
     assert AlwaysOn().params(BasePolicy.EASY).sleep_enabled is False
     pp = RLController(grouped=True).params(BasePolicy.EASY)
     assert pp.rl_enabled and pp.rl_grouped and pp.eager_ready
+    assert not pp.dvfs_enabled
+    pp = DVFS().params(BasePolicy.EASY)
+    assert pp.dvfs_enabled and not pp.dvfs_rl and not pp.sleep_enabled
+    pp = RLController(dvfs=True).params(BasePolicy.EASY)
+    assert pp.dvfs_enabled and pp.dvfs_rl and pp.rl_enabled
+    pp = TimeoutSleep(dvfs=True).params(BasePolicy.EASY)
+    assert pp.dvfs_enabled and pp.sleep_enabled and not pp.dvfs_rl
 
 
 def test_sweep_label_and_policy_scenarios():

@@ -161,7 +161,11 @@ def test_feature_extractors_bounded():
 
 
 def test_action_translators_within_bounds():
-    from repro.core.rl.actions import ACTION_TRANSLATORS, action_space_size
+    from repro.core.rl.actions import (
+        ACTION_TRANSLATORS,
+        action_space_size,
+        full_commands,
+    )
 
     wl = generate_workload(GeneratorConfig(n_jobs=10, nb_res=16, seed=4))
     cfg = env_cfg()
@@ -171,7 +175,11 @@ def test_action_translators_within_bounds():
     for name, fn in ACTION_TRANSLATORS.items():
         n = action_space_size(name, 9, n_groups=1)
         for a in range(n):
-            n_on, n_off = fn(s, const, jnp.asarray(a), 9)
+            n_on, n_off, n_mode = full_commands(
+                s, fn(s, const, jnp.asarray(a), 9)
+            )
             assert n_on.shape == s.rl_on_cmd.shape
+            assert n_mode.shape == s.rl_mode_cmd.shape
             assert 0 <= int(n_on.sum()) <= 16
             assert 0 <= int(n_off.sum()) <= 16
+            assert int(n_mode.min()) >= -1
