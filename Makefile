@@ -21,8 +21,9 @@ test-slow:
 # nightly lane (.github/workflows/nightly.yml): the slow parity sweeps —
 # including the full 6-scheduler x 4-timeout experiment grid asserting
 # n_compiles == 1 (tests/test_experiments.py) — plus the mixed-platform
-# scale benchmark's own one-compile assertion, so neither can rot outside
-# the tier-1 gate
+# scale benchmark's own assertions (one compiled sweep program, and the
+# statically specialized single run beating the traced superset single
+# run), so none of them can rot outside the tier-1 gate
 test-nightly: test-slow
 	$(PY) benchmarks/bench_scale.py --jobs 120 --nodes 256 --oracle-jobs 40 --hetero
 

@@ -41,7 +41,8 @@ def main(argv=None):
         ),
         max_steps=args.steps * 4,
     )
-    const = make_const(plat, ecfg.engine)
+    # closure constant of the jitted vmapped step -> specialized flags
+    const = make_const(plat, ecfg.engine, specialize=True)
 
     # --- host-loop single env (paper-style Gym cadence) ---
     env = HPCGymEnv(plat, wl, ecfg)

@@ -127,6 +127,7 @@ def main() -> None:
                 scale["grid_k"] * scale["jobs"] / scale["t_sweep"], 1
             ) if scale.get("t_sweep") else None,
             single_run_s=round(scale["t_jax"], 3),
+            single_run_specialized_s=round(scale["t_jax_spec"], 3),
             oracle_run_s=round(scale["t_oracle"], 3),
         )
 

@@ -34,7 +34,9 @@ def main():
     )
 
     s0 = engine.init_state(platform, workload, config)
-    const = engine.make_const(platform, config)
+    # specialize=True: a single-config run folds the policy flags in as
+    # closure constants, so only this scheduler's rules are compiled
+    const = engine.make_const(platform, config, specialize=True)
     s, log = engine.run_sim_gantt(
         s0, const, config, max_batches=engine.default_batch_cap(len(workload))
     )

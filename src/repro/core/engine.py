@@ -23,6 +23,15 @@ recompile. The scheduler/policy structure is lowered to
 bit-exact with the per-config compiles it replaced, and :func:`sweep` vmaps
 a whole scheduler x policy x timeout x platform grid through ONE compiled
 program (core/SEMANTICS.md §Traced policy axis).
+
+Single-config runs take the *static specialization* path instead
+(core/SEMANTICS.md §Static specialization): :func:`simulate` folds the
+``PolicyParams`` flags in as Python closure constants
+(``PolicyParams.static()``), so every flag gate becomes a Python branch
+(:func:`repro.core.policy.static_bool`) and the rules that are off never
+enter the trace — one cached compile per config (bounded LRU), bit-exact
+with the superset program. :func:`sweep` keeps the traced axis and its
+one-compile-per-grid guarantee.
 Heterogeneous platforms (mixed node groups with different power models,
 transition delays, and compute speeds) are first-class: every node-indexed
 quantity is a per-node table and energy is accounted per node group
@@ -32,8 +41,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from collections import OrderedDict
-from typing import Any, Mapping, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Mapping, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +58,7 @@ from repro.core.policy import (
     effective_node_speed,
     from_label,
     ipm_wake,
+    static_bool,
     timeout_switch_off,
 )
 from repro.core.types import (
@@ -140,6 +151,9 @@ class SimState(NamedTuple):
     job_speed: jax.Array  # f32[J]
     mode_time: jax.Array  # f32[G, M] residency seconds (accrues when enabled)
     mode_energy: jax.Array  # f32[G, M] ACTIVE energy by mode
+    # set by run_sim/run_sim_gantt when the batch/log cap stopped the run
+    # before completion — metrics from a truncated state are partial
+    truncated: jax.Array  # bool
 
 
 class GanttLog(NamedTuple):
@@ -157,7 +171,19 @@ class GanttLog(NamedTuple):
 def make_const(
     platform: PlatformSpec,
     config: EngineConfig,
+    specialize: bool = False,
 ) -> EngineConst:
+    """Lower (platform, config) to the engine's traced tables.
+
+    ``specialize=True`` carries the policy axis as *concrete* Python bools
+    (``PolicyParams.static()``) instead of traced flags: the right choice
+    for a const that is closed over by a single-config program (the RL
+    env/learners, ``run_sim_gantt`` drivers) — disabled rules are then
+    pruned at trace time. A specialized const must NOT be stacked into a
+    sweep (``sweep`` builds its own traced consts) and loses its
+    specialization if passed through a jit boundary as an argument (the
+    bools become traced operands again — correct, just not specialized).
+    """
     N = platform.nb_nodes
     if platform.node_groups:
         power = jnp.asarray(platform.node_power_table(), jnp.float32)
@@ -200,7 +226,11 @@ def make_const(
         rl_interval=jnp.asarray(
             config.rl_decision_interval or int(INF_TIME), I32
         ),
-        policy=config.policy.params(config.base).traced(),
+        policy=(
+            config.policy.params(config.base).static()
+            if specialize
+            else config.policy.params(config.base).traced()
+        ),
         dvfs_speed=jnp.asarray(dvfs_speed, jnp.float32),
         dvfs_watts=jnp.asarray(dvfs_watts, jnp.float32),
         dvfs_n_modes=jnp.asarray(dvfs_n, I32),
@@ -275,6 +305,7 @@ def init_state(
         job_speed=jnp.ones(J, jnp.float32),
         mode_time=jnp.zeros((G, platform.n_dvfs_modes()), jnp.float32),
         mode_energy=jnp.zeros((G, platform.n_dvfs_modes()), jnp.float32),
+        truncated=jnp.asarray(False),
     )
 
 
@@ -289,31 +320,38 @@ def _clamp_job(idx: jax.Array) -> jax.Array:
 def _ready_times(s: SimState, const: EngineConst) -> jax.Array:
     """Policy-dependent node ready times (SEMANTICS.md table); INF for ACTIVE.
 
-    ``const.policy.eager_ready`` is a *traced* flag: both columns of the
-    ready-time table are evaluated and selected per scenario, so a vmapped
-    sweep can mix eager (AlwaysOn/PSUS/RL) and transition-aware (PSAS/IPM)
-    policies in one compiled program.
+    ``const.policy.eager_ready`` is read through :func:`static_bool`: as a
+    *traced* flag (sweeps) both columns of the ready-time table are
+    evaluated and selected per scenario, so a vmapped sweep can mix eager
+    (AlwaysOn/PSUS/RL) and transition-aware (PSAS/IPM) policies in one
+    compiled program; as a concrete bool (the specialized single-config
+    path) only the live column is traced.
     """
     t = s.t
-    eager = jnp.where(
-        s.node_state == ACTIVE, INF, jnp.full_like(s.node_state, 0) + t
-    )
-    aware = jnp.select(
-        [
-            s.node_state == IDLE,
-            s.node_state == SWITCHING_ON,
-            s.node_state == SLEEP,
-            s.node_state == SWITCHING_OFF,
-        ],
-        [
-            jnp.broadcast_to(t, s.node_state.shape),
-            s.node_until,
-            jnp.broadcast_to(t + const.t_on, s.node_state.shape),
-            s.node_until + const.t_on,
-        ],
-        default=jnp.broadcast_to(INF, s.node_state.shape),
-    )
-    return jnp.where(const.policy.eager_ready, eager, aware).astype(I32)
+    eager_b = static_bool(const.policy.eager_ready)
+    if eager_b is not False:
+        eager = jnp.where(
+            s.node_state == ACTIVE, INF, jnp.full_like(s.node_state, 0) + t
+        )
+    if eager_b is not True:
+        aware = jnp.select(
+            [
+                s.node_state == IDLE,
+                s.node_state == SWITCHING_ON,
+                s.node_state == SLEEP,
+                s.node_state == SWITCHING_OFF,
+            ],
+            [
+                jnp.broadcast_to(t, s.node_state.shape),
+                s.node_until,
+                jnp.broadcast_to(t + const.t_on, s.node_state.shape),
+                s.node_until + const.t_on,
+            ],
+            default=jnp.broadcast_to(INF, s.node_state.shape),
+        )
+    if eager_b is None:
+        return jnp.where(const.policy.eager_ready, eager, aware).astype(I32)
+    return (eager if eager_b else aware).astype(I32)
 
 
 def _kahan_add(energy, comp, delta):
@@ -459,27 +497,35 @@ def _scheduler_pass(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimSt
     the backfill test. backfill=False (FCFS): attempts stop at the first
     failure (``blocked`` latches) and the shadow machinery never engages
     (shadow stays -1 == head-phase for every attempt). Both behaviours are
-    one program, bit-exact with the former per-base compiles.
+    one program, bit-exact with the former per-base compiles. A concrete
+    ``backfill`` (the specialized single-config path) traces only the live
+    behaviour — FCFS drops the O(N log N) shadow machinery entirely.
     """
     window = _queue_window(s, cfg.window)
     backfill = const.policy.backfill
+    bf = static_bool(backfill)
 
     def body(k, carry):
         s, shadow, extra, blocked = carry
         j = window[k]
         valid = j >= 0
 
-        can_try = valid & (backfill | ~blocked)
+        # specialized EASY: blocked never gates an attempt (backfill | ...)
+        can_try = valid if bf else valid & (backfill | ~blocked)
         ok, s_new, _ = _try_allocate(s, const, cfg, _clamp_job(j), shadow, extra)
         take = can_try & ok
         s = jax.tree_util.tree_map(
             lambda a, b: jnp.where(take, b, a), s, s_new
         )
         newly_blocked = can_try & ~ok
+        if bf is False:  # FCFS: shadow/extra stay (-1, 0) == head-phase
+            return s, shadow, extra, blocked | newly_blocked
 
         # compute (S, E) at the first blocked EASY head; cond skips the
         # O(N log N) sort on the (common) unblocked iterations
-        need_shadow = newly_blocked & (shadow < 0) & backfill
+        need_shadow = newly_blocked & (shadow < 0)
+        if bf is None:
+            need_shadow = need_shadow & backfill
         S, E = jax.lax.cond(
             need_shadow,
             lambda s_: _shadow(s_, const, _clamp_job(j)),
@@ -543,18 +589,23 @@ def _start_jobs(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
 
 
 def _power_step(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
-    """Rules 6-8, flag-gated by the traced policy axis (``const.policy``).
+    """Rules 6-9, flag-gated by the policy axis (``const.policy``).
 
-    Every rule is evaluated in every program; a scenario whose flag is off
-    selects zero nodes, leaving state and counters bit-identical to a
-    program that never contained the rule. The optional in-graph RL
+    With traced flags (sweeps) every rule is evaluated in every program; a
+    scenario whose flag is off selects zero nodes, leaving state and
+    counters bit-identical to a program that never contained the rule.
+    With concrete flags (the specialized single-config path) a disabled
+    rule is skipped at trace time — bit-identical by the same argument,
+    but the dead rule never reaches XLA. The optional in-graph RL
     ``controller`` (a network driving run_sim end-to-end) is the one static
     remnant of policy structure — a callable cannot be a traced operand.
     """
     pp = const.policy
-    s = timeout_switch_off(s, const, ipm_cap=pp.ipm_enabled,
-                           enabled=pp.sleep_enabled)
-    s = ipm_wake(s, const, enabled=pp.ipm_enabled)
+    if static_bool(pp.sleep_enabled) is not False:
+        s = timeout_switch_off(s, const, ipm_cap=pp.ipm_enabled,
+                               enabled=pp.sleep_enabled)
+    if static_bool(pp.ipm_enabled) is not False:
+        s = ipm_wake(s, const, enabled=pp.ipm_enabled)
     controller = getattr(cfg.policy, "controller", None)
     if controller is not None:
         out = controller(s, const)
@@ -575,10 +626,12 @@ def _power_step(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
             rl_off_cmd=jnp.broadcast_to(off, s.rl_off_cmd.shape).astype(I32),
             rl_mode_cmd=jnp.broadcast_to(mode, s.rl_mode_cmd.shape).astype(I32),
         )
-    s = apply_rl_commands(s, const, grouped=pp.rl_grouped,
-                          enabled=pp.rl_enabled)
-    s = apply_dvfs(s, const, terminate_overrun=cfg.terminate_overrun,
-                   enabled=pp.dvfs_enabled, rl=pp.dvfs_rl)
+    if static_bool(pp.rl_enabled) is not False:
+        s = apply_rl_commands(s, const, grouped=pp.rl_grouped,
+                              enabled=pp.rl_enabled)
+    if static_bool(pp.dvfs_enabled) is not False:
+        s = apply_dvfs(s, const, terminate_overrun=cfg.terminate_overrun,
+                       enabled=pp.dvfs_enabled, rl=pp.dvfs_rl)
     return s
 
 
@@ -609,8 +662,10 @@ def next_time(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
     (``sleep_enabled``) and the periodic RL decision tick (``rl_enabled``).
     Policy candidates may be <= t; they are clamped out here so an
     expired-but-guard-blocked candidate can never wedge the clock. With a
-    flag off (or its interval at INF) a candidate evaluates to >= INF and
-    never fires — the superset program needs no static gating.
+    traced flag off (or its interval at INF) a candidate evaluates to
+    >= INF and never fires — the superset program needs no static gating;
+    a concrete-off flag (specialized path) drops its candidate from the
+    trace, which is the same minimum.
     """
     t = s.t
     waiting_future = (s.job_status == WAITING) & (s.job_subtime > t)
@@ -620,13 +675,18 @@ def next_time(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
     trans = (s.node_state == SWITCHING_ON) | (s.node_state == SWITCHING_OFF)
     tr = jnp.min(jnp.where(trans & (s.node_until > t), s.node_until, INF))
     pp = const.policy
-    idle_unres = (s.node_job < 0) & (s.node_state == IDLE)
-    expiry = s.node_idle_since + const.timeout
-    to = jnp.min(
-        jnp.where(idle_unres & (expiry > t) & pp.sleep_enabled, expiry, INF)
-    )
-    tick = jnp.where(pp.rl_enabled, t + const.rl_interval, INF)
-    cands = [arr, fin, tr] + [jnp.where(c > t, c, INF) for c in (to, tick)]
+    policy_cands = []
+    if static_bool(pp.sleep_enabled) is not False:
+        idle_unres = (s.node_job < 0) & (s.node_state == IDLE)
+        expiry = s.node_idle_since + const.timeout
+        policy_cands.append(jnp.min(
+            jnp.where(idle_unres & (expiry > t) & pp.sleep_enabled, expiry, INF)
+        ))
+    if static_bool(pp.rl_enabled) is not False:
+        policy_cands.append(
+            jnp.where(pp.rl_enabled, t + const.rl_interval, INF)
+        )
+    cands = [arr, fin, tr] + [jnp.where(c > t, c, INF) for c in policy_cands]
     return functools.reduce(jnp.minimum, cands).astype(I32)
 
 
@@ -638,13 +698,15 @@ def accrue_energy(s: SimState, t_next: jax.Array, const: EngineConst) -> SimStat
         const.power, s.node_state[:, None], axis=1
     )[:, 0]
     dvfs_on = const.policy.dvfs_enabled
-    node_mode = s.dvfs_mode[const.group_id]
-    active = s.node_state == ACTIVE
-    node_power = jnp.where(
-        dvfs_on & active,
-        const.dvfs_watts[const.group_id, node_mode],
-        node_power,
-    )
+    dvfs_b = static_bool(dvfs_on)
+    if dvfs_b is not False:
+        node_mode = s.dvfs_mode[const.group_id]
+        active = s.node_state == ACTIVE
+        node_power = jnp.where(
+            dvfs_on & active,
+            const.dvfs_watts[const.group_id, node_mode],
+            node_power,
+        )
     delta = (
         jnp.zeros_like(s.energy)
         .at[const.group_id, s.node_state]
@@ -653,13 +715,16 @@ def accrue_energy(s: SimState, t_next: jax.Array, const: EngineConst) -> SimStat
     )
     e, c = _kahan_add(s.energy, s.energy_c, delta)
     # DVFS ledgers: per-group mode residency and ACTIVE energy by mode
-    G = s.energy.shape[0]
-    mode_time = s.mode_time.at[jnp.arange(G), s.dvfs_mode].add(
-        jnp.where(dvfs_on, dt, 0.0)
-    )
-    mode_energy = s.mode_energy.at[const.group_id, node_mode].add(
-        jnp.where(dvfs_on & active, node_power * dt, 0.0)
-    )
+    # (skipped under a concrete-off flag: accruing zero is the identity)
+    mode_time, mode_energy = s.mode_time, s.mode_energy
+    if dvfs_b is not False:
+        G = s.energy.shape[0]
+        mode_time = s.mode_time.at[jnp.arange(G), s.dvfs_mode].add(
+            jnp.where(dvfs_on, dt, 0.0)
+        )
+        mode_energy = s.mode_energy.at[const.group_id, node_mode].add(
+            jnp.where(dvfs_on & active, node_power * dt, 0.0)
+        )
     n_waiting = jnp.sum(
         ((s.job_status == WAITING) & (s.job_subtime <= s.t))
         | (s.job_status == ALLOCATED),
@@ -690,7 +755,12 @@ def run_sim(
     cfg: EngineConfig,
     max_batches: Optional[int] = None,
 ) -> SimState:
-    """Run to completion (jit-able; vmap over s and/or const)."""
+    """Run to completion (jit-able; vmap over s and/or const).
+
+    ``truncated`` is set on the returned state when the batch cap stopped
+    the run with future events still pending — metrics from such a state
+    describe a partial simulation, not a finished one.
+    """
     cap = max_batches or cfg.max_batches or default_batch_cap(
         int(s.job_status.shape[0])
     )
@@ -707,7 +777,10 @@ def run_sim(
         s = s._replace(t=nt)
         return process_batch(s, const, cfg)
 
-    return jax.lax.while_loop(cond, body, s)
+    out = jax.lax.while_loop(cond, body, s)
+    # cap-hit detection: the loop would have continued but for n_batches
+    nt = next_time(out, const, cfg)
+    return out._replace(truncated=(~all_done(out)) & (nt < INF))
 
 
 def run_sim_gantt(
@@ -716,7 +789,12 @@ def run_sim_gantt(
     cfg: EngineConfig,
     max_batches: int,
 ) -> Tuple[SimState, GanttLog]:
-    """Like run_sim but records per-batch node-state snapshots for Gantt."""
+    """Like run_sim but records per-batch node-state snapshots for Gantt.
+
+    ``max_batches`` is also the log capacity; a cap-stopped run comes back
+    with ``state.truncated`` set (the Gantt log is then a prefix, not the
+    whole schedule).
+    """
     N = s.node_state.shape[0]
     log = GanttLog(
         t0=jnp.zeros(max_batches, I32),
@@ -749,10 +827,52 @@ def run_sim_gantt(
         s = process_batch(s, const, cfg)
         return s, log
 
-    return jax.lax.while_loop(cond, body, (s, log))
+    out, log = jax.lax.while_loop(cond, body, (s, log))
+    nt = next_time(out, const, cfg)
+    out = out._replace(truncated=(~all_done(out)) & (nt < INF))
+    return out, log
 
 
 # convenience: one-call host API ------------------------------------------------
+
+# jitted single-run programs, keyed like _SWEEP_FNS on the static trace
+# inputs (window, node_order, terminate_overrun, in-graph controller,
+# shapes, batch cap) PLUS the specialization mode: the concrete
+# PolicyParams when specialized (one cached program per policy point),
+# None for the traced superset. Bounded LRU — repeated simulate() calls
+# with identical static structure reuse the compiled program instead of
+# recompiling per call.
+_SIM_FNS: "OrderedDict" = OrderedDict()
+_SIM_CACHE_SIZE = 8
+
+
+def _static_trace_key(platform, config, J, cap):
+    """Every static trace input of a run_sim program, in one place — the
+    shared prefix of the simulate and sweep jit-cache keys (a field missed
+    in one of two copies would silently reuse a program compiled for a
+    different config)."""
+    return (
+        config.window, config.node_order, config.terminate_overrun,
+        getattr(config.policy, "controller", None),
+        # the controller-arity guard in _power_step reads policy.dvfs
+        # statically, so it is trace structure alongside the controller
+        getattr(config.policy, "dvfs", False),
+        platform.nb_nodes, platform.n_groups(), platform.n_dvfs_modes(),
+        J, cap,
+    )
+
+
+def _warn_truncated(state: SimState, what: str) -> None:
+    if bool(np.asarray(state.truncated).any()):
+        warnings.warn(
+            f"{what} hit its batch cap before completing — the returned "
+            "state/metrics describe a PARTIAL simulation (SimState.truncated"
+            " / SimMetrics.truncated). Raise EngineConfig.max_batches (or "
+            "pass max_batches) to run to completion.",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+
 
 def simulate(
     platform: PlatformSpec,
@@ -760,14 +880,61 @@ def simulate(
     config: EngineConfig,
     job_capacity: Optional[int] = None,
     jit: bool = True,
-) -> SimState:
+    specialize: bool = True,
+    return_compiles: bool = False,
+) -> Union[SimState, Tuple[SimState, Optional[int]]]:
+    """Run ONE configuration to completion (the single-config fast path).
+
+    By default the run is *statically specialized* (core/SEMANTICS.md
+    §Static specialization): the policy flags are folded in as closure
+    constants, so XLA dead-code-eliminates the rules the policy turned off
+    — bit-exact with the traced superset program (``specialize=False``)
+    that :func:`sweep` uses for one-compile grids. Compiled programs are
+    cached in a bounded LRU keyed on the static trace structure, so
+    repeated calls with the same shapes/config compile exactly once.
+
+    ``return_compiles=True`` additionally returns the cumulative compile
+    count of the cached program (None on JAX versions without the
+    introspection API) — the no-recompile guarantee for experiment layers.
+    """
     s = init_state(platform, workload, config, job_capacity=job_capacity)
-    const = make_const(platform, config)
+    # specialized: the policy rides as concrete bools (no device scalars),
+    # lifted out below as the closure constant of the cached program
+    const = make_const(platform, config, specialize=specialize)
     cap = config.max_batches or default_batch_cap(len(workload))
-    fn = functools.partial(run_sim, cfg=config, max_batches=cap)
-    if jit:
-        fn = jax.jit(fn, static_argnames=())
-    return fn(s, const)
+    n_compiles = None
+    if not jit:
+        out = run_sim(s, const, config, max_batches=cap)
+    else:
+        static_pp = const.policy if specialize else None
+        key = _static_trace_key(
+            platform, config, int(s.job_status.shape[0]), cap
+        ) + (static_pp,)
+        fn = _SIM_FNS.pop(key, None)
+        if fn is None:
+            if len(_SIM_FNS) >= _SIM_CACHE_SIZE:
+                _SIM_FNS.popitem(last=False)  # evict least-recently-used
+            if static_pp is None:
+                fn = jax.jit(
+                    lambda s_, c_: run_sim(s_, c_, config, max_batches=cap)
+                )
+            else:
+                # the traced const carries policy=None; the concrete flags
+                # are reinserted inside the trace as closure constants
+                fn = jax.jit(
+                    lambda s_, c_: run_sim(
+                        s_, c_._replace(policy=static_pp), config,
+                        max_batches=cap,
+                    )
+                )
+        _SIM_FNS[key] = fn
+        out = fn(s, const._replace(policy=None) if static_pp else const)
+        cache_size = getattr(fn, "_cache_size", None)
+        n_compiles = cache_size() if callable(cache_size) else None
+    _warn_truncated(out, f"simulate({config.label()!r})")
+    if return_compiles:
+        return out, n_compiles
+    return out
 
 
 # batched sweep driver -----------------------------------------------------
@@ -951,12 +1118,9 @@ def sweep(
 
     s0 = init_state(platform, workload, config, job_capacity=job_capacity)
     cap = config.max_batches or default_batch_cap(len(workload))
-    key = (
-        config.window, config.node_order, config.terminate_overrun,
-        getattr(config.policy, "controller", None),
-        platform.nb_nodes, platform.n_groups(), platform.n_dvfs_modes(),
-        int(s0.job_status.shape[0]), cap, len(scenarios),
-    )
+    key = _static_trace_key(
+        platform, config, int(s0.job_status.shape[0]), cap
+    ) + (len(scenarios),)
     fn = _SWEEP_FNS.pop(key, None)
     if fn is None:
         if len(_SWEEP_FNS) >= _SWEEP_CACHE_SIZE:
@@ -972,6 +1136,17 @@ def sweep(
     jax.block_until_ready(out.energy)
     cache_size = getattr(fn, "_cache_size", None)
     n_compiles = cache_size() if callable(cache_size) else None
+
+    trunc = np.flatnonzero(np.asarray(out.truncated))
+    if trunc.size:
+        warnings.warn(
+            f"sweep scenario(s) {[int(i) for i in trunc]} hit the batch cap "
+            "before completing — their rows describe PARTIAL simulations "
+            "(SimMetrics.truncated). Raise EngineConfig.max_batches to run "
+            "them to completion.",
+            RuntimeWarning,
+            stacklevel=2,
+        )
 
     from repro.core.metrics import metrics_from_state  # avoid import cycle
 

@@ -41,6 +41,7 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import (
     ACTIVE,
@@ -82,6 +83,27 @@ class PolicyParams(NamedTuple):
         """The jnp.bool_ spelling carried in EngineConst (vmap-stackable)."""
         return PolicyParams(*[jnp.asarray(bool(v)) for v in self])
 
+    def static(self) -> "PolicyParams":
+        """The concrete Python-bool spelling (single-config specialization).
+
+        A static PolicyParams is closed over as trace *structure*, not a
+        traced operand: the engine's flag accessors (:func:`static_bool`)
+        turn each ``jnp.where`` gate into a Python branch, so XLA never
+        even sees the rules that are off (core/SEMANTICS.md §Static
+        specialization). Hashable — part of the simulate() jit-cache key.
+        """
+        return PolicyParams(*[bool(v) for v in self])
+
+
+def static_bool(flag) -> Optional[bool]:
+    """The engine's flag accessor: Python bool when ``flag`` is concrete
+    (the specialized single-config path — callers then prune the dead
+    branch at trace time), None when it is a traced operand (the sweep
+    axis — callers keep the ``jnp.where`` superset gate)."""
+    if isinstance(flag, (bool, np.bool_)):
+        return bool(flag)
+    return None
+
 
 # ---------------------------------------------------------------------------
 # shared rule implementations (SEMANTICS.md rules 6-8), flag-gated
@@ -115,11 +137,17 @@ def timeout_switch_off(s, const, ipm_cap, enabled=True):
         & ((s.node_state == IDLE) | (s.node_state == SWITCHING_ON)),
         dtype=I32,
     )
-    allowed = jnp.where(
-        ipm_cap,
-        jnp.maximum(avail - queued_demand(s), 0),
-        jnp.asarray(s.node_state.shape[0], I32),
-    )
+    cap = static_bool(ipm_cap)
+    if cap is None:  # traced: evaluate both columns, select per scenario
+        allowed = jnp.where(
+            ipm_cap,
+            jnp.maximum(avail - queued_demand(s), 0),
+            jnp.asarray(s.node_state.shape[0], I32),
+        )
+    elif cap:
+        allowed = jnp.maximum(avail - queued_demand(s), 0)
+    else:
+        allowed = jnp.asarray(s.node_state.shape[0], I32)
     k = jnp.minimum(n_cand, allowed)
     key = jnp.where(cand, s.node_idle_since, INF)  # longest idle first
     order = jnp.argsort(key, stable=True)
@@ -224,11 +252,13 @@ def effective_node_speed(const, mode, enabled):
     ``const.speed`` when ``enabled`` is off. The single spelling of the
     current-operating-point speed shared by job start (rule 5) and the
     rescale (rule 9)."""
-    return jnp.where(
-        enabled,
-        const.dvfs_speed[const.group_id, mode[const.group_id]],
-        const.speed,
-    )
+    sb = static_bool(enabled)
+    if sb is False:
+        return const.speed
+    table = const.dvfs_speed[const.group_id, mode[const.group_id]]
+    if sb is True:
+        return table
+    return jnp.where(enabled, table, const.speed)
 
 
 def alloc_min_speed(node_job, node_speed, n_jobs):
@@ -265,13 +295,19 @@ def apply_dvfs(s, const, terminate_overrun=False, enabled=True, rl=False):
     G, _ = const.dvfs_speed.shape
     N = s.node_state.shape[0]
     n_modes = const.dvfs_n_modes
-    ladder = jnp.minimum(n_modes - 1, (queued_demand(s) * n_modes) // N)
-    commanded = jnp.where(
-        s.rl_mode_cmd >= 0,
-        jnp.clip(s.rl_mode_cmd, 0, n_modes - 1),
-        s.dvfs_mode,
-    )
-    target = jnp.where(rl, commanded, ladder).astype(I32)
+    rl_b = static_bool(rl)
+    if rl_b is not True:
+        ladder = jnp.minimum(n_modes - 1, (queued_demand(s) * n_modes) // N)
+    if rl_b is not False:
+        commanded = jnp.where(
+            s.rl_mode_cmd >= 0,
+            jnp.clip(s.rl_mode_cmd, 0, n_modes - 1),
+            s.dvfs_mode,
+        )
+    if rl_b is None:  # traced: both selectors, chosen per scenario
+        target = jnp.where(rl, commanded, ladder).astype(I32)
+    else:
+        target = (commanded if rl_b else ladder).astype(I32)
     mode = jnp.where(enabled, target, s.dvfs_mode)
 
     # effective per-node speed under the (possibly new) mode vector

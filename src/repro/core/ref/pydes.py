@@ -124,6 +124,7 @@ class PyDES:
         self.t = 0.0
         self.energy_by_group = [[0.0] * 5 for _ in range(self.n_groups)]
         self.n_batches = 0
+        self.truncated = False  # set by run() when the batch cap bites
         self.gantt: List[Tuple[float, float, int, int, int]] = []  # (t0,t1,node,state,job)
         self._gantt_open: Dict[int, Tuple[float, int, int]] = {}
         if config.record_gantt:
@@ -541,11 +542,16 @@ class PyDES:
         )
         # t=0 batch (arrivals at 0, initial scheduling)
         self._process_batch()
-        while self.n_batches < limit:
+        while True:
             if all(j.status == DONE for j in self.jobs):
                 break
             nt = self._next_time()
             if nt >= INF:
+                break
+            if self.n_batches >= limit:
+                # cap hit with future events pending: the same truncation
+                # signal the JAX engine's run_sim raises (SimState.truncated)
+                self.truncated = True
                 break
             self._accrue(nt)
             self.t = nt
@@ -562,14 +568,25 @@ class PyDES:
         by_state = self.energy_by_state
         util = 0.0
         if makespan > 0:
-            # active node-seconds recovered per group from its own draw
-            active_node_s = sum(
-                g[ACTIVE] / p_active
-                for g, p_active in zip(
-                    self.energy_by_group, self.p.group_active_powers()
+            if any(sum(m) > 0 for m in self.mode_time):
+                # DVFS ran: ACTIVE draw followed the mode table, so recover
+                # node-seconds exactly from the per-mode energy ledger (the
+                # same expression as metrics_from_state; §DVFS)
+                active_node_s = sum(
+                    self.mode_energy[g][m] / float(self.dvfs_watts[g, m])
+                    for g in range(self.n_groups)
+                    for m in range(self.dvfs_watts.shape[1])
+                    if float(self.dvfs_watts[g, m]) > 0
                 )
-                if p_active
-            )
+            else:
+                # active node-seconds recovered per group from its own draw
+                active_node_s = sum(
+                    g[ACTIVE] / p_active
+                    for g, p_active in zip(
+                        self.energy_by_group, self.p.group_active_powers()
+                    )
+                    if p_active
+                )
             util = active_node_s / (len(self.nodes) * makespan)
         total = float(sum(by_state))
         wasted = float(
@@ -589,6 +606,7 @@ class PyDES:
             group_names=self.p.group_names(),
             mode_residency_s=tuple(tuple(m) for m in self.mode_time),
             energy_by_mode_j=tuple(tuple(m) for m in self.mode_energy),
+            truncated=self.truncated,
         )
 
     def schedule_table(self) -> np.ndarray:

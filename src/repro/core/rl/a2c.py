@@ -195,7 +195,9 @@ def train_a2c(
     progress: Optional[Callable[[int, dict], None]] = None,
 ):
     """Paper-scale A2C training loop (single host). Returns (params, history)."""
-    const = make_const(platform, env_cfg.engine)
+    # closure constant of the jitted update: specialize the policy flags so
+    # every rollout step traces only the RL stack's rules
+    const = make_const(platform, env_cfg.engine, specialize=True)
     wls = list(workloads)
     if len(wls) < cfg.n_envs:
         wls = (wls * ((cfg.n_envs + len(wls) - 1) // len(wls)))[: cfg.n_envs]

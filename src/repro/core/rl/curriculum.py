@@ -68,7 +68,7 @@ def train_a2c_curriculum(
 
     Returns (params, history) with ``history[i]['stage']`` marking stages.
     """
-    const = make_const(platform, env_cfg.engine)
+    const = make_const(platform, env_cfg.engine, specialize=True)
     key = jax.random.PRNGKey(cfg.seed)
     key, kp = jax.random.split(key)
     params = policy_init(kp, env_cfg.obs_size, env_cfg.n_actions, cfg.hidden)

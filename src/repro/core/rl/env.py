@@ -205,7 +205,10 @@ class HPCGymEnv:
             )
         self.platform = platform
         self.workload = workload
-        self.const = make_const(platform, self.cfg.engine)
+        # the env's const is a closure constant of the jitted reset/step
+        # (functools.partial below), so the policy flags specialize: the
+        # rollout traces only the RLController rules (§Static specialization)
+        self.const = make_const(platform, self.cfg.engine, specialize=True)
         self._sim0 = init_state(
             platform, workload, self.cfg.engine, job_capacity=job_capacity
         )

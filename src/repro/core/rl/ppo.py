@@ -142,7 +142,9 @@ def train_ppo(
     cfg: PPOConfig = PPOConfig(),
     progress: Optional[Callable[[int, dict], None]] = None,
 ):
-    const = make_const(platform, env_cfg.engine)
+    # closure constant of the jitted update: specialized policy flags (the
+    # rollout traces only the RL stack's rules — §Static specialization)
+    const = make_const(platform, env_cfg.engine, specialize=True)
     wls = list(workloads)
     if len(wls) < cfg.n_envs:
         wls = (wls * ((cfg.n_envs + len(wls) - 1) // len(wls)))[: cfg.n_envs]

@@ -128,6 +128,9 @@ class SimMetrics(NamedTuple):
     # group was in while it accrued. All-zero when no DVFS policy ran.
     mode_residency_s: tuple = ()
     energy_by_mode_j: tuple = ()
+    # True when the run hit its batch/log cap before completing: every
+    # other field then describes a PARTIAL simulation, not a finished one
+    truncated: bool = False
 
     def _group_labels(self, n: int) -> list:
         names = list(self.group_names) + [
@@ -151,6 +154,10 @@ class SimMetrics(NamedTuple):
             "n_jobs": self.n_jobs,
             "n_terminated": self.n_terminated,
         }
+        # only surfaced when it bites: a finished run keeps its legacy
+        # column set (deterministic CSV/JSON goldens), a capped run is loud
+        if self.truncated:
+            out["truncated"] = True
         if len(self.energy_by_group_j) > 1:
             names = self._group_labels(len(self.energy_by_group_j))
             for name, e in zip(names, self.energy_by_group_j):

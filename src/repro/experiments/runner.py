@@ -3,7 +3,12 @@
 ``run(experiment)`` resolves the spec, builds the scheduler x timeout
 scenario grid, and pushes it through ``engine.sweep`` — the traced policy
 axis makes the full grid (all replications included) exactly ONE compiled
-XLA program. Results come back as a flat rows table (one dict per grid
+XLA program. A single-point grid (1 scheduler x 1 timeout) skips the
+superset program entirely and takes ``engine.simulate``'s statically
+specialized path instead: the policy flags are closure constants, dead
+rules are DCE'd, and the compile is cached across replications/reruns
+(core/SEMANTICS.md §Static specialization) — rows are bit-exact either
+way. Results come back as a flat rows table (one dict per grid
 point per replication) and, when ``experiment.out`` is set, are written as
 a deterministic ``metrics.json`` (byte-identical across reruns of the same
 spec — the golden-file anchor in ``tests/test_experiments.py``) plus a
@@ -16,6 +21,7 @@ import dataclasses
 import json
 import os
 import time
+import warnings
 from typing import Optional, Tuple
 
 from repro.core import engine
@@ -121,6 +127,31 @@ def _engine_config_with_rl(experiment: Experiment, plat):
     )
 
 
+def _run_single(plat, wl, scenario, cfg):
+    """One grid point through the specialized single-config program.
+
+    The scenario dict is the grid() shape ({scheduler, timeout[, platform
+    -> resolved PlatformSpec]}); the label's policy point is folded into
+    the trace as closure constants (``engine.simulate`` specialization),
+    bit-exact with the traced sweep row it replaces. Returns
+    (SimMetrics, n_compiles-of-the-cached-program).
+    """
+    from repro.core.metrics import metrics_from_state
+    from repro.core.policy import RLController, from_label
+
+    base, pol = from_label(scenario["scheduler"])
+    if isinstance(pol, RLController):
+        # cfg.policy carries the checkpointed in-graph controller attached
+        # by _engine_config_with_rl (shared static trace structure)
+        pol = cfg.policy
+    plat_i = scenario.get("platform", plat)
+    cfg_i = dataclasses.replace(
+        cfg, base=base, policy=pol, timeout=scenario["timeout"]
+    )
+    state, n = engine.simulate(plat_i, wl, cfg_i, return_compiles=True)
+    return metrics_from_state(state, plat_i), n
+
+
 def run(
     experiment: Experiment,
     platform=None,
@@ -170,10 +201,24 @@ def run(
             if workload is not None
             else resolve_workload(experiment.workload, replication=r)
         )
-        batch = engine.sweep(plat, wl, scenarios, cfg)
-        if batch.n_compiles is not None:
-            n_compiles = max(n_compiles or 0, batch.n_compiles)
-        for sc, m in zip(grid, batch.metrics):
+        with warnings.catch_warnings():
+            # the engine layers warn per call; run() emits ONE aggregated
+            # warning over the rows below, labelled with the grid points
+            warnings.filterwarnings(
+                "ignore", message=".*batch cap.*", category=RuntimeWarning
+            )
+            if len(scenarios) == 1:
+                # single-point grid: the statically-specialized fast path
+                # (one cached compile per config, dead rules DCE'd) instead
+                # of the traced-superset sweep program — bit-exact either way
+                metrics, n = _run_single(plat, wl, scenarios[0], cfg)
+                batch_metrics = (metrics,)
+            else:
+                batch = engine.sweep(plat, wl, scenarios, cfg)
+                batch_metrics, n = batch.metrics, batch.n_compiles
+        if n is not None:
+            n_compiles = max(n_compiles or 0, n)
+        for sc, m in zip(grid, batch_metrics):
             row = {
                 "scheduler": sc["scheduler"],
                 "timeout": sc["timeout"],
@@ -184,6 +229,17 @@ def run(
             row.update(m.row())
             rows.append(row)
     wall = time.perf_counter() - t0
+    capped = [
+        (r["scheduler"], r["timeout"]) for r in rows if r.get("truncated")
+    ]
+    if capped:
+        warnings.warn(
+            f"experiment grid point(s) {capped} hit the batch cap before "
+            "completing — their rows describe PARTIAL simulations "
+            "('truncated' column). Raise max_batches to run to completion.",
+            RuntimeWarning,
+            stacklevel=2,
+        )
 
     result = ExperimentResult(
         experiment=experiment,

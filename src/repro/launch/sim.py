@@ -209,7 +209,9 @@ def run(config: Dict[str, Any]) -> Dict[str, Any]:
     os.makedirs(out_dir, exist_ok=True)
 
     s0 = engine.init_state(plat, wl, ecfg)
-    const = engine.make_const(plat, ecfg)
+    # single-config run: fold the policy flags in as closure constants so
+    # the program traces only this scheduler's rules (§Static specialization)
+    const = engine.make_const(plat, ecfg, specialize=True)
     cap = engine.default_batch_cap(len(wl))
     if ecfg.record_gantt:
         s, log = engine.run_sim_gantt(s0, const, ecfg, max_batches=cap)
@@ -226,6 +228,18 @@ def run(config: Dict[str, Any]) -> Dict[str, Any]:
         s = engine.simulate(plat, wl, ecfg)
 
     m = metrics_from_state(s, plat)
+    if m.truncated and ecfg.record_gantt:
+        # engine.simulate already warns for the non-gantt path; keep the
+        # gantt path just as loud — a capped run must not read as finished
+        import warnings
+
+        warnings.warn(
+            f"run {sched!r} hit the batch cap ({cap}) before completing — "
+            "metrics.json describes a PARTIAL simulation ('truncated': "
+            "true). Raise max_batches to run to completion.",
+            RuntimeWarning,
+            stacklevel=2,
+        )
 
     # CSV job log (paper §2.3.3: "CSV outputs including job execution logs")
     d = np_state(s)

@@ -1,0 +1,295 @@
+"""Static specialization of single-config runs + the truncation signal
+(core/SEMANTICS.md §Static specialization).
+
+Covers: simulate()'s bounded jit cache (repeated same-shape runs compile
+once; traced operands like timeout share the entry), specialized-vs-traced
+bit-exactness per scheduler label (incl. DVFS stacks) with the oracle as
+third witness, the trace-size proof that disabled rules are DCE'd, the
+``truncated`` batch-cap flag on both engines (state, metrics, row column,
+and the loud warnings in simulate/sweep/experiments/run_sim_gantt), the
+exact ledger-based DVFS utilization, and the experiment layer's
+single-point fast path.
+"""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import experiments
+from repro.core import engine
+from repro.core.metrics import metrics_from_state, schedule_table
+from repro.core.policy import (
+    DVFS,
+    PolicyParams,
+    from_label,
+    scheduler_labels,
+    static_bool,
+)
+from repro.core.ref.pydes import run_pydes
+from repro.core.types import EngineConfig
+from repro.workloads.generator import GeneratorConfig, generate_workload
+from repro.workloads.platform import PlatformSpec, dvfs_platform_example
+
+SIX = tuple(l for l in scheduler_labels() if "AlwaysOn" not in l)
+
+
+def _wl(n_jobs=60, seed=7, **kw):
+    kw.setdefault("overrun_prob", 0.2)
+    return generate_workload(
+        GeneratorConfig(n_jobs=n_jobs, nb_res=16, seed=seed, **kw)
+    )
+
+
+# ------------------------------------------------------------ flag lowering
+
+def test_policy_params_static_lowering():
+    pp = DVFS().params()
+    assert pp.static() == PolicyParams(
+        backfill=True, eager_ready=True, sleep_enabled=False,
+        ipm_enabled=False, rl_enabled=False, rl_grouped=False,
+        dvfs_enabled=True, dvfs_rl=False,
+    )
+    assert all(isinstance(v, bool) for v in pp.static())
+    # static() round-trips through traced() values
+    assert pp.traced().static() == pp.static()
+    # the accessor: concrete bools come back as bools, traced flags as None
+    assert static_bool(True) is True
+    assert static_bool(np.bool_(False)) is False
+    assert static_bool(pp.traced().backfill) is None
+
+
+# ----------------------------------------------------- simulate() jit cache
+
+def test_simulate_compiles_once_for_repeated_calls():
+    """Identical shapes + static structure: ONE cached compile, reused
+    across calls and across timeout values (timeout is a traced operand)."""
+    wl = _wl(n_jobs=20)
+    plat = PlatformSpec(nb_nodes=16)
+    engine._SIM_FNS.clear()
+    cfg = EngineConfig(timeout=120)
+    s1, n1 = engine.simulate(plat, wl, cfg, return_compiles=True)
+    s2, n2 = engine.simulate(plat, wl, cfg, return_compiles=True)
+    assert len(engine._SIM_FNS) == 1
+    if n2 is not None:
+        assert n1 == n2 == 1, "repeated simulate() recompiled"
+    np.testing.assert_array_equal(
+        np.asarray(s1.energy), np.asarray(s2.energy)
+    )
+    # a different timeout is the SAME program (traced operand)
+    _, n3 = engine.simulate(
+        plat, wl, EngineConfig(timeout=900), return_compiles=True
+    )
+    assert len(engine._SIM_FNS) == 1
+    if n3 is not None:
+        assert n3 == 1
+    # a different policy point is a different specialized program
+    engine.simulate(plat, wl, EngineConfig(policy=DVFS()))
+    assert len(engine._SIM_FNS) == 2
+
+
+def test_sweep_cache_key_includes_controller_dvfs():
+    """Two sweeps sharing one in-graph controller but differing in
+    RLController.dvfs must NOT share a compiled program: the dvfs flag is
+    static trace structure (the controller-arity guard reads it), so the
+    legacy-2-tuple guard must still fire on the second sweep."""
+    from repro.core.policy import RLController
+
+    def legacy(s, const):  # (on, off) only — invalid under dvfs=True
+        return s.rl_on_cmd * 0, s.rl_off_cmd * 0
+
+    plat = dvfs_platform_example(16)
+    wl = _wl(n_jobs=5, seed=0)
+    engine.sweep(
+        plat, wl, ["EASY RL"],
+        EngineConfig(policy=RLController(controller=legacy)),
+    )
+    with pytest.raises(ValueError, match=r"\(on, off, mode\)"):
+        engine.sweep(
+            plat, wl, ["EASY RL:dvfs"],
+            EngineConfig(policy=RLController(dvfs=True, controller=legacy)),
+        )
+
+
+def test_simulate_jit_cache_is_bounded():
+    wl = _wl(n_jobs=5, seed=0)
+    plat = PlatformSpec(nb_nodes=8)
+    engine._SIM_FNS.clear()
+    for w in range(engine._SIM_CACHE_SIZE + 3):
+        engine.simulate(plat, wl, EngineConfig(window=w + 1))
+        assert len(engine._SIM_FNS) <= engine._SIM_CACHE_SIZE
+    assert len(engine._SIM_FNS) == engine._SIM_CACHE_SIZE
+
+
+# ----------------------------------------- specialized == traced == oracle
+
+@pytest.mark.parametrize(
+    "label",
+    SIX + ("EASY DVFS", "EASY PSAS+IPM+DVFS", "EASY RL", "FCFS RL:groups"),
+)
+def test_specialized_matches_traced_per_label(label):
+    """The statically specialized program is bit-exact with the traced
+    superset program (and the oracle) for every scheduler label."""
+    plat = dvfs_platform_example(16)
+    wl = _wl()
+    base, pol = from_label(label)
+    cfg = EngineConfig(base=base, policy=pol, timeout=240,
+                       terminate_overrun=True, node_order="cheap")
+    spec = engine.simulate(plat, wl, cfg, specialize=True)
+    traced = engine.simulate(plat, wl, cfg, specialize=False)
+    np.testing.assert_array_equal(schedule_table(spec), schedule_table(traced))
+    np.testing.assert_array_equal(
+        np.asarray(spec.energy), np.asarray(traced.energy)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(spec.mode_time), np.asarray(traced.mode_time)
+    )
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(spec), des.schedule_table())
+    m = metrics_from_state(spec, plat)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+
+
+def test_specialized_trace_is_smaller():
+    """The point of specialization: disabled rules leave the trace, so the
+    specialized program is strictly smaller than the flag-gated superset
+    (deterministic DCE proof, no timing)."""
+    wl = _wl(n_jobs=10, seed=1)
+    plat = PlatformSpec(nb_nodes=16)
+    cfg = EngineConfig(timeout=120)  # PSUS: rl/ipm/dvfs rules are all off
+    s0 = engine.init_state(plat, wl, cfg)
+    c_spec = engine.make_const(plat, cfg, specialize=True)
+    c_traced = engine.make_const(plat, cfg)
+    n_spec = len(
+        jax.make_jaxpr(
+            lambda s: engine.process_batch(s, c_spec, cfg)
+        )(s0).jaxpr.eqns
+    )
+    n_traced = len(
+        jax.make_jaxpr(
+            lambda s: engine.process_batch(s, c_traced, cfg)
+        )(s0).jaxpr.eqns
+    )
+    assert n_spec < n_traced, (n_spec, n_traced)
+
+
+# ------------------------------------------------------- truncation signal
+
+def test_truncated_flag_engine_and_oracle():
+    wl = _wl(n_jobs=40, seed=3)
+    plat = PlatformSpec(nb_nodes=16)
+    capped = EngineConfig(timeout=120, max_batches=5)
+    with pytest.warns(RuntimeWarning, match="PARTIAL"):
+        s = engine.simulate(plat, wl, capped)
+    assert bool(np.asarray(s.truncated))
+    m = metrics_from_state(s, plat)
+    assert m.truncated and m.row()["truncated"] is True
+    m_ref, des = run_pydes(plat, wl, capped)
+    assert des.truncated and m_ref.truncated
+    # a finished run is silent: flag off, no row column
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        s_ok = engine.simulate(plat, wl, EngineConfig(timeout=120))
+    assert not bool(np.asarray(s_ok.truncated))
+    m_ok = metrics_from_state(s_ok, plat)
+    assert not m_ok.truncated and "truncated" not in m_ok.row()
+    m_ref_ok, _ = run_pydes(plat, wl, EngineConfig(timeout=120))
+    assert not m_ref_ok.truncated
+
+
+def test_truncated_sweep_and_gantt_warn():
+    wl = _wl(n_jobs=40, seed=3)
+    plat = PlatformSpec(nb_nodes=16)
+    cfg = EngineConfig(timeout=120, max_batches=5)
+    with pytest.warns(RuntimeWarning, match="PARTIAL"):
+        batch = engine.sweep(plat, wl, [60, 600], cfg)
+    assert all(m.truncated for m in batch.metrics)
+    assert all(r["truncated"] for r in batch.rows())
+    # run_sim_gantt's log cap raises the same flag on the returned state
+    s0 = engine.init_state(plat, wl, cfg)
+    const = engine.make_const(plat, cfg, specialize=True)
+    s, log = engine.run_sim_gantt(s0, const, cfg, max_batches=5)
+    assert bool(np.asarray(s.truncated))
+    assert int(log.n) <= 5
+
+
+# ------------------------------------------------- exact DVFS utilization
+
+def test_dvfs_utilization_uses_the_mode_ledger():
+    """Under a non-identity mode table, utilization must come from the
+    per-mode energy ledger (exact), not the base active draw — and both
+    engines must agree on it."""
+    plat = dvfs_platform_example(16)
+    wl = _wl(n_jobs=50, seed=4)
+    cfg = EngineConfig(policy=DVFS(), node_order="cheap")
+    s = engine.simulate(plat, wl, cfg)
+    m = metrics_from_state(s, plat)
+    m_ref, _ = run_pydes(plat, wl, cfg)
+    assert m.utilization == pytest.approx(m_ref.utilization, rel=1e-5)
+    # the exact value: sum over [g, m] of mode_energy / mode_watts
+    _, watts, _ = plat.group_dvfs_tables()
+    me = np.asarray(m.energy_by_mode_j, np.float64)
+    active_s = (me / np.where(watts > 0, watts, np.inf)).sum()
+    expected = active_s / (plat.nb_nodes * m.makespan_s)
+    assert m.utilization == pytest.approx(expected, rel=1e-12)
+    # ... and it differs from the old base-draw approximation (the bug)
+    eg = np.asarray(m.energy_by_group_j, np.float64)
+    naive = sum(
+        eg[g, 3] / p for g, p in enumerate(plat.group_active_powers()) if p
+    ) / (plat.nb_nodes * m.makespan_s)
+    assert m.utilization != pytest.approx(naive, rel=1e-3)
+    # identity table (no declared modes): the legacy expression still rules
+    plain = PlatformSpec(nb_nodes=16)
+    s_id = engine.simulate(plain, wl, EngineConfig(policy=DVFS()))
+    m_id = metrics_from_state(s_id, plain)
+    m_id_ref, _ = run_pydes(plain, wl, EngineConfig(policy=DVFS()))
+    assert m_id.utilization == pytest.approx(m_id_ref.utilization, rel=1e-5)
+
+
+# ------------------------------------------- experiment-layer fast path
+
+def test_experiment_single_point_takes_the_fast_path():
+    """A 1x1 grid routes through the specialized program (compile cached,
+    n_compiles == 1) and its row is bit-exact with the sweep program's."""
+    exp = experiments.Experiment(
+        name="single",
+        workload={"preset": "fig3_small", "n_jobs": 30},
+        platform=16,
+        schedulers=("EASY PSAS",),
+        timeouts=(120,),
+        terminate_overrun=True,
+    )
+    result = experiments.run(exp)
+    assert len(result.rows) == 1
+    if result.n_compiles is not None:
+        assert result.n_compiles == 1
+    wl = experiments.resolve_workload(exp.workload)
+    plat = experiments.resolve_platform(exp.platform)
+    batch = engine.sweep(
+        plat, wl, [{"scheduler": "EASY PSAS", "timeout": 120}],
+        exp.engine_config(),
+    )
+    row, srow = result.rows[0], batch.rows()[0]
+    for k in ("total_energy_kwh", "wasted_energy_kwh", "mean_wait_s",
+              "utilization", "makespan_s"):
+        assert row[k] == srow[k], k
+
+
+def test_rl_env_const_is_specialized():
+    """The RL rollout path carries concrete policy flags: its closure-bound
+    const specializes the trace to the RLController rules."""
+    from repro.core.policy import RLController
+    from repro.core.rl.env import EnvConfig, HPCGymEnv
+
+    wl = _wl(n_jobs=8, seed=0, overrun_prob=0.0)
+    env = HPCGymEnv(
+        PlatformSpec(nb_nodes=16), wl,
+        EnvConfig(engine=EngineConfig(policy=RLController())),
+    )
+    assert all(isinstance(v, bool) for v in env.const.policy)
+    assert env.const.policy.rl_enabled and not env.const.policy.sleep_enabled
+    obs = env.reset()
+    assert np.isfinite(np.asarray(obs)).all()
+    _, r, _, _ = env.step(0)
+    assert np.isfinite(r)
