@@ -21,9 +21,12 @@ test-slow:
 # nightly lane (.github/workflows/nightly.yml): the slow parity sweeps —
 # including the full 6-scheduler x 4-timeout experiment grid asserting
 # n_compiles == 1 (tests/test_experiments.py) — plus the mixed-platform
-# scale benchmark's own assertions (one compiled sweep program, and the
+# scale benchmark's own assertions (one compiled sweep program, the
 # statically specialized single run beating the traced superset single
-# run), so none of them can rot outside the tier-1 gate
+# run, and the fused hot loop not regressing vs the unfused specialized
+# run), so none of them can rot outside the tier-1 gate. Once the fused
+# run beats the sequential oracle at scale (ROADMAP), add
+# --assert-beat-oracle here to gate it.
 test-nightly: test-slow
 	$(PY) benchmarks/bench_scale.py --jobs 120 --nodes 256 --oracle-jobs 40 --hetero
 

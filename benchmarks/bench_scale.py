@@ -13,6 +13,7 @@ overhead) and the vectorized JAX engine. At 11 200 nodes we report:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -39,6 +40,9 @@ def main(argv=None):
                     help="3-group mixed platform; sweep stays ONE compiled "
                          "program (EngineConst per-node tables are traced "
                          "operands, not static config)")
+    ap.add_argument("--assert-beat-oracle", action="store_true",
+                    help="fail unless the fused specialized single run beats "
+                         "the sequential pydes oracle (the nightly gate)")
     args = ap.parse_args(argv)
 
     gcfg = PRESETS["cea_curie"]
@@ -54,10 +58,14 @@ def main(argv=None):
         plat = mixed_platform_example(args.nodes)
     else:
         plat = PlatformSpec(nb_nodes=args.nodes)
+    # legacy loop shape for the historical baselines (t_jax / t_spec track
+    # the same program across PRs); the fused hot loop is timed separately
     cfg = EngineConfig(
         base=BasePolicy.EASY, psm=PSMVariant.PSUS, timeout=args.timeout,
         node_order="cheap" if args.hetero else "id",
+        fused_events=False,
     )
+    cfg_fused = dataclasses.replace(cfg, fused_events=True)
 
     # --- vectorized engine, single simulation (traced superset program) ---
     s0 = engine.init_state(plat, wl, cfg)
@@ -103,6 +111,32 @@ def main(argv=None):
         assert t_spec < t_jax, (
             f"specialized single run ({t_spec:.3f}s, best of 2) did not "
             f"beat the superset single run ({t_jax:.3f}s, best of 2)"
+        )
+
+    # --- single simulation, fused hot loop (SEMANTICS §Hot loop): one event
+    # pass per batch (fused draw+min), quiet-batch fast path, early-exit
+    # scheduler scan — must stay bit-exact with the legacy loop above
+    out_fused = engine.simulate(plat, wl, cfg_fused)  # warm-up: compiles once
+    t0 = time.perf_counter()
+    out_fused = engine.simulate(plat, wl, cfg_fused)
+    jax.block_until_ready(out_fused.energy)
+    t_fused = time.perf_counter() - t0
+    np.testing.assert_array_equal(
+        np.asarray(out_fused.job_start), np.asarray(out.job_start)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out_fused.energy), np.asarray(out.energy)
+    )
+    if t_spec > 0.05 and t_fused > t_spec:  # same noise guard as above
+        t0 = time.perf_counter()
+        jax.block_until_ready(engine.simulate(plat, wl, cfg).energy)
+        t_spec = min(t_spec, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(engine.simulate(plat, wl, cfg_fused).energy)
+        t_fused = min(t_fused, time.perf_counter() - t0)
+        assert t_fused <= t_spec, (
+            f"fused single run ({t_fused:.3f}s, best of 2) regressed vs the "
+            f"unfused specialized run ({t_spec:.3f}s, best of 2)"
         )
 
     # --- vectorized engine, K-point grid in ONE program ---
@@ -164,6 +198,14 @@ def main(argv=None):
     print(f"jax_single_run_s={t_jax:.2f} (first incl. compile: {t_first:.2f})")
     print(f"jax_single_run_specialized_s={t_spec:.2f} "
           f"({t_jax/t_spec:.1f}x vs the traced superset program)")
+    print(f"jax_single_run_fused_s={t_fused:.2f} "
+          f"({t_spec/t_fused:.1f}x vs the unfused specialized run, "
+          f"{t_oracle/t_fused:.1f}x vs the sequential oracle)")
+    if args.assert_beat_oracle:
+        assert t_fused < t_oracle, (
+            f"fused specialized single run ({t_fused:.2f}s) did not beat "
+            f"the sequential oracle ({t_oracle:.2f}s)"
+        )
     print(
         f"jax_{K}way_grid_s={t_sweep:.2f} "
         f"({len(exp.schedulers)} schedulers x {len(exp.timeouts)} timeouts) "
@@ -177,7 +219,8 @@ def main(argv=None):
         f"mean_wait_s={m.mean_wait_s:.0f} utilization={m.utilization:.4f}"
     )
     return dict(
-        t_jax=t_jax, t_jax_spec=t_spec, t_oracle=t_oracle, t_sweep=t_sweep,
+        t_jax=t_jax, t_jax_spec=t_spec, t_jax_fused=t_fused,
+        t_oracle=t_oracle, t_sweep=t_sweep,
         batches=batches, n_compiles=n_compiles, grid_k=K, jobs=args.jobs,
         nodes=args.nodes,
     )

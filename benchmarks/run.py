@@ -128,6 +128,7 @@ def main() -> None:
             ) if scale.get("t_sweep") else None,
             single_run_s=round(scale["t_jax"], 3),
             single_run_specialized_s=round(scale["t_jax_spec"], 3),
+            single_run_fused_s=round(scale["t_jax_fused"], 3),
             oracle_run_s=round(scale["t_oracle"], 3),
         )
 

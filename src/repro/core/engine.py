@@ -67,6 +67,7 @@ from repro.core.types import (
     DONE,
     IDLE,
     INF_TIME,
+    N_STATES,
     RUNNING,
     SLEEP,
     SWITCHING_OFF,
@@ -489,6 +490,43 @@ def _shadow(s: SimState, const: EngineConst, head: jax.Array):
     return S, E
 
 
+def _sched_attempt(s, const, cfg, j, can_try, shadow, extra, blocked, bf, backfill):
+    """One window-slot attempt: the shared body of both scheduler loops.
+
+    Returns the updated (s, shadow, extra, blocked) carry. ``can_try`` gates
+    the attempt (the early-exit loop passes True: its cond already encodes
+    validity and the FCFS blocked latch); ``bf``/``backfill`` are the
+    static/traced spellings of the policy's backfill flag.
+    """
+    ok, s_new, _ = _try_allocate(s, const, cfg, _clamp_job(j), shadow, extra)
+    take = can_try & ok
+    s = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(take, b, a), s, s_new
+    )
+    newly_blocked = can_try & ~ok
+    if bf is False:  # FCFS: shadow/extra stay (-1, 0) == head-phase
+        return s, shadow, extra, blocked | newly_blocked
+
+    # compute (S, E) at the first blocked EASY head; cond skips the
+    # O(N log N) sort on the (common) unblocked iterations
+    need_shadow = newly_blocked & (shadow < 0)
+    if bf is None:
+        need_shadow = need_shadow & backfill
+    S, E = jax.lax.cond(
+        need_shadow,
+        lambda s_: _shadow(s_, const, _clamp_job(j)),
+        lambda s_: (jnp.asarray(-1, I32), jnp.asarray(0, I32)),
+        s,
+    )
+    shadow = jnp.where(need_shadow, S, shadow)
+    extra = jnp.where(need_shadow, E, extra)
+    # backfill consumed part of the extra pool
+    extra = jnp.where(
+        take & (shadow >= 0), extra - s.job_res[_clamp_job(j)], extra
+    )
+    return s, shadow, extra, blocked | newly_blocked
+
+
 def _scheduler_pass(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
     """Rule 4 under the traced ``const.policy.backfill`` flag.
 
@@ -500,50 +538,60 @@ def _scheduler_pass(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimSt
     one program, bit-exact with the former per-base compiles. A concrete
     ``backfill`` (the specialized single-config path) traces only the live
     behaviour — FCFS drops the O(N log N) shadow machinery entirely.
+
+    Loop shape (core/SEMANTICS.md §Hot loop): under ``cfg.fused_events`` the
+    window scan is a ``while_loop`` that exits at the end of the dense
+    prefix (``_queue_window`` packs real jobs first, then -1 padding) — and,
+    for FCFS, at the first blocked head — so an empty or short queue pays
+    per-batch cost proportional to the *live* queue, not the static W. The
+    legacy ``fori_loop`` attempts every slot; both are bit-exact (a -1 slot
+    or a latched-blocked FCFS attempt never changes state).
     """
     window = _queue_window(s, cfg.window)
     backfill = const.policy.backfill
     bf = static_bool(backfill)
+    W = cfg.window
+    shadow0 = jnp.asarray(-1, I32)
+    extra0 = jnp.asarray(0, I32)
+
+    if cfg.fused_events:
+        def cond(carry):
+            _, k, shadow, extra, blocked = carry
+            j = window[jnp.minimum(k, W - 1)]
+            valid = (k < W) & (j >= 0)
+            if bf is True:  # EASY: blocked never gates an attempt
+                return valid
+            if bf is False:  # FCFS: stop at the first blocked head
+                return valid & ~blocked
+            return valid & (backfill | ~blocked)
+
+        def wbody(carry):
+            s, k, shadow, extra, blocked = carry
+            j = window[jnp.minimum(k, W - 1)]
+            s, shadow, extra, blocked = _sched_attempt(
+                s, const, cfg, j, True, shadow, extra, blocked, bf, backfill
+            )
+            return s, k + 1, shadow, extra, blocked
+
+        s, _, _, _, _ = jax.lax.while_loop(
+            cond,
+            wbody,
+            (s, jnp.asarray(0, I32), shadow0, extra0, jnp.bool_(False)),
+        )
+        return s
 
     def body(k, carry):
         s, shadow, extra, blocked = carry
         j = window[k]
         valid = j >= 0
-
         # specialized EASY: blocked never gates an attempt (backfill | ...)
         can_try = valid if bf else valid & (backfill | ~blocked)
-        ok, s_new, _ = _try_allocate(s, const, cfg, _clamp_job(j), shadow, extra)
-        take = can_try & ok
-        s = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(take, b, a), s, s_new
+        return _sched_attempt(
+            s, const, cfg, j, can_try, shadow, extra, blocked, bf, backfill
         )
-        newly_blocked = can_try & ~ok
-        if bf is False:  # FCFS: shadow/extra stay (-1, 0) == head-phase
-            return s, shadow, extra, blocked | newly_blocked
 
-        # compute (S, E) at the first blocked EASY head; cond skips the
-        # O(N log N) sort on the (common) unblocked iterations
-        need_shadow = newly_blocked & (shadow < 0)
-        if bf is None:
-            need_shadow = need_shadow & backfill
-        S, E = jax.lax.cond(
-            need_shadow,
-            lambda s_: _shadow(s_, const, _clamp_job(j)),
-            lambda s_: (jnp.asarray(-1, I32), jnp.asarray(0, I32)),
-            s,
-        )
-        shadow = jnp.where(need_shadow, S, shadow)
-        extra = jnp.where(need_shadow, E, extra)
-        # backfill consumed part of the extra pool
-        extra = jnp.where(
-            take & (shadow >= 0), extra - s.job_res[_clamp_job(j)], extra
-        )
-        return s, shadow, extra, blocked | newly_blocked
-
-    shadow0 = jnp.asarray(-1, I32)
-    extra0 = jnp.asarray(0, I32)
     s, _, _, _ = jax.lax.fori_loop(
-        0, cfg.window, body, (s, shadow0, extra0, jnp.bool_(False))
+        0, W, body, (s, shadow0, extra0, jnp.bool_(False))
     )
     return s
 
@@ -654,26 +702,19 @@ def process_batch(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimStat
 # time advance
 # ---------------------------------------------------------------------------
 
-def next_time(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
-    """Earliest strictly-future event time (INF when none).
+def _time_candidates(s: SimState, const: EngineConst):
+    """Non-transition next-event candidates: (arrivals, finishes, policy).
 
-    Base candidates (arrivals, finishes, transition completions) plus the
-    policy-axis candidates, gated by the traced flags: idle-timeout expiries
-    (``sleep_enabled``) and the periodic RL decision tick (``rl_enabled``).
-    Policy candidates may be <= t; they are clamped out here so an
-    expired-but-guard-blocked candidate can never wedge the clock. With a
-    traced flag off (or its interval at INF) a candidate evaluates to
-    >= INF and never fires — the superset program needs no static gating;
-    a concrete-off flag (specialized path) drops its candidate from the
-    trace, which is the same minimum.
+    Policy candidates (idle-timeout expiries under ``sleep_enabled``, the
+    periodic RL tick under ``rl_enabled``) may be <= t; :func:`next_time`
+    clamps them strictly-future. Shared by :func:`next_time` and the fused
+    :func:`event_horizon` so the two spellings cannot drift.
     """
     t = s.t
     waiting_future = (s.job_status == WAITING) & (s.job_subtime > t)
     arr = jnp.min(jnp.where(waiting_future, s.job_subtime, INF))
     running = s.job_status == RUNNING
     fin = jnp.min(jnp.where(running & (s.job_finish > t), s.job_finish, INF))
-    trans = (s.node_state == SWITCHING_ON) | (s.node_state == SWITCHING_OFF)
-    tr = jnp.min(jnp.where(trans & (s.node_until > t), s.node_until, INF))
     pp = const.policy
     policy_cands = []
     if static_bool(pp.sleep_enabled) is not False:
@@ -686,20 +727,52 @@ def next_time(s: SimState, const: EngineConst, cfg: EngineConfig) -> jax.Array:
         policy_cands.append(
             jnp.where(pp.rl_enabled, t + const.rl_interval, INF)
         )
-    cands = [arr, fin, tr] + [jnp.where(c > t, c, INF) for c in policy_cands]
+    return arr, fin, policy_cands
+
+
+def _next_transition(s: SimState) -> jax.Array:
+    trans = (s.node_state == SWITCHING_ON) | (s.node_state == SWITCHING_OFF)
+    return jnp.min(jnp.where(trans & (s.node_until > s.t), s.node_until, INF))
+
+
+def next_time(
+    s: SimState,
+    const: EngineConst,
+    cfg: EngineConfig,
+    tr: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Earliest strictly-future event time (INF when none).
+
+    Base candidates (arrivals, finishes, transition completions) plus the
+    policy-axis candidates, gated by the traced flags: idle-timeout expiries
+    (``sleep_enabled``) and the periodic RL decision tick (``rl_enabled``).
+    Policy candidates may be <= t; they are clamped out here so an
+    expired-but-guard-blocked candidate can never wedge the clock. With a
+    traced flag off (or its interval at INF) a candidate evaluates to
+    >= INF and never fires — the superset program needs no static gating;
+    a concrete-off flag (specialized path) drops its candidate from the
+    trace, which is the same minimum.
+
+    ``tr`` is an optional precomputed transition-completion minimum (the
+    fused event pass already has it); i32 min is exact, so passing it is
+    bit-identical to recomputing.
+    """
+    if tr is None:
+        tr = _next_transition(s)
+    arr, fin, policy_cands = _time_candidates(s, const)
+    cands = [arr, fin, tr] + [jnp.where(c > s.t, c, INF) for c in policy_cands]
     return functools.reduce(jnp.minimum, cands).astype(I32)
 
 
-def accrue_energy(s: SimState, t_next: jax.Array, const: EngineConst) -> SimState:
-    dt = jnp.maximum(t_next - s.t, 0).astype(jnp.float32)
-    # per-node draw scattered into the [G, 5] group x state energy ledger;
-    # under DVFS an ACTIVE node draws its group's current-mode watts (§DVFS)
+def _node_power_draw(s: SimState, const: EngineConst) -> jax.Array:
+    """f32[N] instantaneous per-node draw — the single spelling shared by
+    :func:`accrue_energy` and the fused event pass. Under DVFS an ACTIVE
+    node draws its group's current-mode watts (§DVFS)."""
     node_power = jnp.take_along_axis(
         const.power, s.node_state[:, None], axis=1
     )[:, 0]
     dvfs_on = const.policy.dvfs_enabled
-    dvfs_b = static_bool(dvfs_on)
-    if dvfs_b is not False:
+    if static_bool(dvfs_on) is not False:
         node_mode = s.dvfs_mode[const.group_id]
         active = s.node_state == ACTIVE
         node_power = jnp.where(
@@ -707,24 +780,174 @@ def accrue_energy(s: SimState, t_next: jax.Array, const: EngineConst) -> SimStat
             const.dvfs_watts[const.group_id, node_mode],
             node_power,
         )
-    delta = (
-        jnp.zeros_like(s.energy)
-        .at[const.group_id, s.node_state]
-        .add(node_power)
-        * dt
+    return node_power
+
+
+class EventAux(NamedTuple):
+    """Byproducts of the fused event pass, consumed by :func:`accrue_energy`
+    and the quiet-batch dispatch (core/SEMANTICS.md §Hot loop). Exactly one
+    of ``node_power`` (fused-XLA path, bit-exact) / ``draw`` (Pallas-kernel
+    path, per-(group, state) watts) is set; the other is None (an empty
+    pytree subtree, so the while-loop carry structure stays static)."""
+
+    node_power: Optional[jax.Array]  # f32[N] per-node draw (XLA path)
+    draw: Optional[jax.Array]  # f32[G, 5] per-state draw (kernel path)
+    quiet: jax.Array  # bool: next batch is transitions/expiries only
+
+
+def _fused_kernel_on(cfg: EngineConfig) -> bool:
+    """Resolve ``cfg.fused_kernel`` (None = auto: Pallas on TPU only)."""
+    if cfg.fused_kernel is not None:
+        return bool(cfg.fused_kernel)
+    return jax.default_backend() == "tpu"
+
+
+def _quiet_enabled(const: EngineConst, cfg: EngineConfig) -> bool:
+    """Static gate for quiet-event batching: only when the rules a quiet
+    batch skips are *statically* absent. RL commands / an in-graph
+    controller / DVFS can change state on any batch (pending commands, the
+    pressure ladder at mode boundaries), so any of them disables the quiet
+    path at trace time; traced (sweep) flags disable it too — a sweep's
+    lax.cond would run both branches under vmap anyway."""
+    pp = const.policy
+    return (
+        cfg.fused_events
+        and getattr(cfg.policy, "controller", None) is None
+        and static_bool(pp.rl_enabled) is False
+        and static_bool(pp.dvfs_enabled) is False
     )
-    e, c = _kahan_add(s.energy, s.energy_c, delta)
-    # DVFS ledgers: per-group mode residency and ACTIVE energy by mode
-    # (skipped under a concrete-off flag: accruing zero is the identity)
+
+
+def _quiet_batch(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
+    """Stripped batch for quiet events (§Hot loop): transition completions
+    and idle-timeout expiries only — no window scatter, no argsorts, no
+    shadow machinery.
+
+    Only dispatched when ``EventAux.quiet`` proved the full batch is a
+    no-op outside rules 2 and 6 (no finishes or arrivals at the new t, no
+    waiting-arrived or ALLOCATED jobs), and rule 6 degenerates to
+    "switch off every expired candidate": with an empty queue the IPM
+    demand cap ``max(avail - demand, 0) = avail >= n_cand`` and the no-cap
+    path allows N, so ``timeout_switch_off``'s k-longest-idle selection
+    selects every candidate — the argsort is dead. Rule 7 is a no-op for
+    the same reason (deficit = -avail <= 0). Bit-exact with
+    :func:`process_batch` on such batches; safe (pure no-op arithmetic) on
+    any state, as vmapped ``lax.cond`` runs both branches.
+    """
+    s = _complete_transitions(s, const)
+    pp = const.policy
+    if static_bool(pp.sleep_enabled) is not False:
+        cand = (
+            (s.node_job < 0)
+            & (s.node_state == IDLE)
+            & (s.t - s.node_idle_since >= const.timeout)
+        )
+        if static_bool(pp.sleep_enabled) is None:
+            cand = cand & pp.sleep_enabled
+        s = s._replace(
+            node_state=jnp.where(cand, SWITCHING_OFF, s.node_state),
+            node_until=jnp.where(cand, s.t + const.t_off, s.node_until),
+            n_switch_off=s.n_switch_off + jnp.sum(cand, dtype=I32),
+        )
+    return s._replace(n_batches=s.n_batches + 1)
+
+
+def event_horizon(
+    s: SimState, const: EngineConst, cfg: EngineConfig
+) -> Tuple[jax.Array, EventAux]:
+    """The fused event pass (§Hot loop): one read of the node arrays yields
+    the next-event time AND the power draw for the coming accrual interval
+    (plus the quiet-batch classification), where the legacy loop read them
+    twice per iteration (``next_time`` in cond + body, ``accrue_energy``
+    again).
+
+    Kernel routing: on TPU (or ``cfg.fused_kernel=True``) the
+    histogram + masked-min pair runs through the Pallas ``event_fuse``
+    kernel — gated to single-group platforms with DVFS statically off,
+    where ``const.power[0]`` IS the per-state table (make_const broadcasts
+    one row per group). The i32 transition min is exact either way; the
+    kernel's per-state f32 sums differ from the engine's scatter-add only
+    in reduction order, so the kernel path is schedule-bit-exact with
+    energy equal to rounding (energy never feeds back into scheduling).
+    The default CPU path computes the draw via :func:`_node_power_draw` —
+    the identical expression ``accrue_energy`` used to inline, so it is
+    bit-exact, and the fusion win is reuse, not rewriting.
+    """
+    pp = const.policy
+    G = s.energy.shape[0]
+    use_kernel = (
+        _fused_kernel_on(cfg)
+        and G == 1
+        and static_bool(pp.dvfs_enabled) is False
+    )
+    if use_kernel:
+        from repro.kernels import ops  # lazy: keep the engine importable alone
+
+        draw8, tr_v = ops.event_fuse_ledger(
+            s.node_state[None], s.node_until[None], s.t[None], const.power[0]
+        )
+        aux_power, aux_draw = None, draw8[:, :N_STATES]
+        tr = tr_v[0]
+    else:
+        aux_power, aux_draw = _node_power_draw(s, const), None
+        tr = _next_transition(s)
+    arr, fin, policy_cands = _time_candidates(s, const)
+    cands = [arr, fin, tr] + [jnp.where(c > s.t, c, INF) for c in policy_cands]
+    nt = functools.reduce(jnp.minimum, cands).astype(I32)
+    if _quiet_enabled(const, cfg):
+        busy = jnp.any(
+            ((s.job_status == WAITING) & (s.job_subtime <= s.t))
+            | (s.job_status == ALLOCATED)
+        )
+        quiet = (arr > nt) & (fin > nt) & ~busy
+    else:
+        quiet = jnp.asarray(False)
+    return nt, EventAux(node_power=aux_power, draw=aux_draw, quiet=quiet)
+
+
+def accrue_energy(
+    s: SimState,
+    t_next: jax.Array,
+    const: EngineConst,
+    aux: Optional[EventAux] = None,
+) -> SimState:
+    dt = jnp.maximum(t_next - s.t, 0).astype(jnp.float32)
+    dvfs_on = const.policy.dvfs_enabled
+    dvfs_b = static_bool(dvfs_on)
     mode_time, mode_energy = s.mode_time, s.mode_energy
-    if dvfs_b is not False:
-        G = s.energy.shape[0]
-        mode_time = s.mode_time.at[jnp.arange(G), s.dvfs_mode].add(
-            jnp.where(dvfs_on, dt, 0.0)
+    if aux is not None and aux.draw is not None:
+        # fused-kernel path: the per-(group, state) draw is already reduced
+        # on device; only reachable with DVFS statically off (§Hot loop), so
+        # the mode ledgers stay untouched by construction
+        assert dvfs_b is False
+        delta = aux.draw * dt
+    else:
+        # per-node draw scattered into the [G, 5] group x state ledger —
+        # reused from the fused event pass when available (identical
+        # expression, so carrying it is bit-exact)
+        if aux is not None and aux.node_power is not None:
+            node_power = aux.node_power
+        else:
+            node_power = _node_power_draw(s, const)
+        delta = (
+            jnp.zeros_like(s.energy)
+            .at[const.group_id, s.node_state]
+            .add(node_power)
+            * dt
         )
-        mode_energy = s.mode_energy.at[const.group_id, node_mode].add(
-            jnp.where(dvfs_on & active, node_power * dt, 0.0)
-        )
+        # DVFS ledgers: per-group mode residency and ACTIVE energy by mode
+        # (skipped under a concrete-off flag: accruing zero is the identity)
+        if dvfs_b is not False:
+            node_mode = s.dvfs_mode[const.group_id]
+            active = s.node_state == ACTIVE
+            G = s.energy.shape[0]
+            mode_time = s.mode_time.at[jnp.arange(G), s.dvfs_mode].add(
+                jnp.where(dvfs_on, dt, 0.0)
+            )
+            mode_energy = s.mode_energy.at[const.group_id, node_mode].add(
+                jnp.where(dvfs_on & active, node_power * dt, 0.0)
+            )
+    e, c = _kahan_add(s.energy, s.energy_c, delta)
     n_waiting = jnp.sum(
         ((s.job_status == WAITING) & (s.job_subtime <= s.t))
         | (s.job_status == ALLOCATED),
@@ -749,6 +972,27 @@ def default_batch_cap(n_jobs: int) -> int:
     return 20 * n_jobs + 10_000
 
 
+def trim_window(config: EngineConfig, n_jobs: int) -> EngineConfig:
+    """Shrink the static scheduler window to what the workload can fill.
+
+    The queue can never hold more than the workload's job count, so any
+    window slot past ``n_jobs`` is provably a -1-padding no-op in every
+    batch — ``_queue_window`` still scattered into it and the legacy
+    ``fori_loop`` still attempted it (core/SEMANTICS.md §Hot loop). A
+    tighter bound does NOT follow from ``job_subtime`` alone: on a
+    saturated cluster jobs pile up WAITING long past their submission, so
+    any submission-overlap prepass under-counts the queue; ``n_jobs`` is
+    the largest sound static bound. Bit-exact by construction; applied by
+    the :func:`simulate` / :func:`sweep` / RL-env drivers (the pydes twin
+    slices its window from a dynamic queue list, so trimming is a no-op
+    there).
+    """
+    W = max(1, min(config.window, n_jobs))
+    if W == config.window:
+        return config
+    return dataclasses.replace(config, window=W)
+
+
 def run_sim(
     s: SimState,
     const: EngineConst,
@@ -760,6 +1004,14 @@ def run_sim(
     ``truncated`` is set on the returned state when the batch cap stopped
     the run with future events still pending — metrics from such a state
     describe a partial simulation, not a finished one.
+
+    Under ``cfg.fused_events`` (the default; core/SEMANTICS.md §Hot loop)
+    each iteration runs ONE fused event pass (:func:`event_horizon`) whose
+    next-event time rides the loop carry — the legacy loop recomputed
+    ``next_time`` in both cond and body and re-read the node arrays again
+    in ``accrue_energy``. Quiet batches (pure transition completions /
+    timeout expiries) dispatch to the stripped :func:`_quiet_batch` instead
+    of the full scheduler pass. Bit-exact either way.
     """
     cap = max_batches or cfg.max_batches or default_batch_cap(
         int(s.job_status.shape[0])
@@ -767,19 +1019,47 @@ def run_sim(
 
     s = process_batch(s, const, cfg)
 
-    def cond(s):
-        nt = next_time(s, const, cfg)
+    if not cfg.fused_events:  # legacy loop: the benchmarkable baseline
+        def cond(s):
+            nt = next_time(s, const, cfg)
+            return (~all_done(s)) & (nt < INF) & (s.n_batches < cap)
+
+        def body(s):
+            nt = next_time(s, const, cfg)
+            s = accrue_energy(s, nt, const)
+            s = s._replace(t=nt)
+            return process_batch(s, const, cfg)
+
+        out = jax.lax.while_loop(cond, body, s)
+        # cap-hit detection: the loop would have continued but for n_batches
+        nt = next_time(out, const, cfg)
+        return out._replace(truncated=(~all_done(out)) & (nt < INF))
+
+    quiet_on = _quiet_enabled(const, cfg)
+    nt0, aux0 = event_horizon(s, const, cfg)
+
+    def cond(carry):
+        s, nt, _ = carry
         return (~all_done(s)) & (nt < INF) & (s.n_batches < cap)
 
-    def body(s):
-        nt = next_time(s, const, cfg)
-        s = accrue_energy(s, nt, const)
+    def body(carry):
+        s, nt, aux = carry
+        s = accrue_energy(s, nt, const, aux=aux)
         s = s._replace(t=nt)
-        return process_batch(s, const, cfg)
+        if quiet_on:
+            s = jax.lax.cond(
+                aux.quiet,
+                lambda s_: _quiet_batch(s_, const, cfg),
+                lambda s_: process_batch(s_, const, cfg),
+                s,
+            )
+        else:
+            s = process_batch(s, const, cfg)
+        nt, aux = event_horizon(s, const, cfg)
+        return s, nt, aux
 
-    out = jax.lax.while_loop(cond, body, s)
+    out, nt, _ = jax.lax.while_loop(cond, body, (s, nt0, aux0))
     # cap-hit detection: the loop would have continued but for n_batches
-    nt = next_time(out, const, cfg)
     return out._replace(truncated=(~all_done(out)) & (nt < INF))
 
 
@@ -857,6 +1137,9 @@ def _static_trace_key(platform, config, J, cap):
         # the controller-arity guard in _power_step reads policy.dvfs
         # statically, so it is trace structure alongside the controller
         getattr(config.policy, "dvfs", False),
+        # hot-loop structure (§Hot loop): the loop shape and the resolved
+        # kernel routing are trace structure
+        config.fused_events, _fused_kernel_on(config),
         platform.nb_nodes, platform.n_groups(), platform.n_dvfs_modes(),
         J, cap,
     )
@@ -897,6 +1180,7 @@ def simulate(
     count of the cached program (None on JAX versions without the
     introspection API) — the no-recompile guarantee for experiment layers.
     """
+    config = trim_window(config, len(workload))
     s = init_state(platform, workload, config, job_capacity=job_capacity)
     # specialized: the policy rides as concrete bools (no device scalars),
     # lifted out below as the closure constant of the cached program
@@ -1104,7 +1388,7 @@ def sweep(
     Figs. 4/5 six-scheduler comparison is one program, not six);
     per-scenario :class:`SimMetrics` come back in a :class:`SimBatch`.
     """
-    config = config or EngineConfig()
+    config = trim_window(config or EngineConfig(), len(workload))
     scenarios = list(scenarios)
     if not scenarios:
         raise ValueError("sweep needs at least one scenario")

@@ -131,28 +131,33 @@ def timeout_switch_off(s, const, ipm_cap, enabled=True):
         & (s.t - s.node_idle_since >= const.timeout)
         & enabled
     )
-    n_cand = jnp.sum(cand, dtype=I32)
-    avail = jnp.sum(
-        (s.node_job < 0)
-        & ((s.node_state == IDLE) | (s.node_state == SWITCHING_ON)),
-        dtype=I32,
-    )
     cap = static_bool(ipm_cap)
-    if cap is None:  # traced: evaluate both columns, select per scenario
-        allowed = jnp.where(
-            ipm_cap,
-            jnp.maximum(avail - queued_demand(s), 0),
-            jnp.asarray(s.node_state.shape[0], I32),
-        )
-    elif cap:
-        allowed = jnp.maximum(avail - queued_demand(s), 0)
+    if cap is False:
+        # uncapped (statically): k = min(n_cand, N) = n_cand, so the
+        # k-longest-idle selection is provably "every candidate" — the
+        # O(N log N) argsort is dead. Bit-exact with the capped spelling;
+        # this is the PSUS/PSAS hot path (core/SEMANTICS.md §Hot loop).
+        sel = cand
     else:
-        allowed = jnp.asarray(s.node_state.shape[0], I32)
-    k = jnp.minimum(n_cand, allowed)
-    key = jnp.where(cand, s.node_idle_since, INF)  # longest idle first
-    order = jnp.argsort(key, stable=True)
-    sel_sorted = jnp.arange(key.shape[0]) < k
-    sel = jnp.zeros_like(cand).at[order].set(sel_sorted) & cand
+        n_cand = jnp.sum(cand, dtype=I32)
+        avail = jnp.sum(
+            (s.node_job < 0)
+            & ((s.node_state == IDLE) | (s.node_state == SWITCHING_ON)),
+            dtype=I32,
+        )
+        if cap is None:  # traced: evaluate both columns, select per scenario
+            allowed = jnp.where(
+                ipm_cap,
+                jnp.maximum(avail - queued_demand(s), 0),
+                jnp.asarray(s.node_state.shape[0], I32),
+            )
+        else:
+            allowed = jnp.maximum(avail - queued_demand(s), 0)
+        k = jnp.minimum(n_cand, allowed)
+        key = jnp.where(cand, s.node_idle_since, INF)  # longest idle first
+        order = jnp.argsort(key, stable=True)
+        sel_sorted = jnp.arange(key.shape[0]) < k
+        sel = jnp.zeros_like(cand).at[order].set(sel_sorted) & cand
     return s._replace(
         node_state=jnp.where(sel, SWITCHING_OFF, s.node_state),
         node_until=jnp.where(sel, s.t + const.t_off, s.node_until),

@@ -23,10 +23,12 @@ from repro.core.engine import (
     SimState,
     accrue_energy,
     all_done,
+    event_horizon,
     init_state,
     make_const,
     next_time,
     process_batch,
+    trim_window,
 )
 from repro.core.policy import RLController, apply_dvfs, apply_rl_commands
 from repro.core.rl.actions import (
@@ -136,9 +138,16 @@ def env_step(
             terminate_overrun=cfg.engine.terminate_overrun, rl=True,
         )
 
-    nt = next_time(sim, const, cfg.engine)
+    # fused event pass (core/SEMANTICS.md §Hot loop): one read of the node
+    # arrays yields the next-event time and the draw the accrual reuses
+    if cfg.engine.fused_events:
+        nt, aux = event_horizon(sim, const, cfg.engine)
+    else:
+        nt, aux = next_time(sim, const, cfg.engine), None
     can_advance = (nt < INF_TIME) & ~all_done(sim)
-    sim_adv = accrue_energy(sim, jnp.where(can_advance, nt, sim.t), const)
+    sim_adv = accrue_energy(
+        sim, jnp.where(can_advance, nt, sim.t), const, aux=aux
+    )
     sim_adv = sim_adv._replace(t=jnp.where(can_advance, nt, sim.t))
     sim_adv = process_batch(sim_adv, const, cfg.engine)
     sim = jax.tree_util.tree_map(
@@ -205,6 +214,12 @@ class HPCGymEnv:
             )
         self.platform = platform
         self.workload = workload
+        # workload-derived window trim (§Hot loop): the queue can never
+        # exceed the job count, so the scheduler scan stops paying for
+        # slots the workload cannot fill — bit-exact
+        self.cfg = dataclasses.replace(
+            self.cfg, engine=trim_window(self.cfg.engine, len(workload))
+        )
         # the env's const is a closure constant of the jitted reset/step
         # (functools.partial below), so the policy flags specialize: the
         # rollout traces only the RLController rules (§Static specialization)

@@ -78,6 +78,16 @@ class EngineConfig:
     gantt_capacity: int = 0  # 0 -> auto
     max_batches: Optional[int] = None  # safety cap; None -> auto
     rl_decision_interval: Optional[int] = None  # RL: also wake every Δ seconds
+    # hot-loop structure (core/SEMANTICS.md §Hot loop). ``fused_events``
+    # selects the fused per-iteration event pass (one read of the node
+    # arrays for next-event time + power draw, carried across the while
+    # loop, with quiet-event batching and the early-exit scheduler scan);
+    # False restores the legacy loop — bit-exact either way, kept as a
+    # benchmarkable baseline. ``fused_kernel`` routes the fused pass
+    # through the Pallas ``event_fuse`` kernel (None = auto: TPU backend
+    # only; the XLA spelling is the right choice on CPU hosts).
+    fused_events: bool = True
+    fused_kernel: Optional[bool] = None
 
     NODE_ORDERS = ("id", "cheap", "idle-watts")
 

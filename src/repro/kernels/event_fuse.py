@@ -71,16 +71,48 @@ def _event_kernel(
     next_ref[...] = jnp.min(masked, axis=1, keepdims=True)
 
 
-def event_fuse(
-    node_state: jax.Array,  # [E, N] i32
-    node_until: jax.Array,  # [E, N] i32
-    t: jax.Array,  # [E] i32
-    power: jax.Array,  # [5] f32
-    *,
-    block_e: int = 8,
-    interpret: bool = False,
-) -> Tuple[jax.Array, jax.Array]:
-    """Fused (power_draw [E], next_transition [E]) over vmapped envs."""
+def _event_ledger_kernel(
+    state_ref,  # (bE, N) i32
+    until_ref,  # (bE, N) i32
+    t_ref,  # (bE, 1) i32
+    power_ref,  # (1, 8) f32
+    draw_ref,  # (bE, 8) f32 per-state power sums
+    next_ref,  # (bE, 1) i32
+):
+    """Ledger variant: per-STATE power sums instead of the scalar total.
+
+    The engine's energy accounting is a [G, 5] group x state ledger; on a
+    single-group platform the per-state column sums ARE the ledger row, so
+    this variant lets the fused pass feed ``accrue_energy`` directly. Same
+    one-read-per-row structure as :func:`_event_kernel`.
+    """
+    state = state_ref[...]
+    until = until_ref[...]
+    t = t_ref[...]  # (bE, 1)
+
+    # --- per-state histogram columns: sums[e, s] = n_s(e) * power[s] ---
+    cols = [
+        jnp.sum(
+            jnp.where(state == s, power_ref[0, s], 0.0),
+            axis=1, keepdims=True,
+        )
+        for s in range(N_STATES)
+    ]
+    zero = jnp.zeros_like(cols[0])
+    draw_ref[...] = jnp.concatenate(cols + [zero] * (8 - N_STATES), axis=1)
+
+    # --- fused masked min: next strictly-future transition completion ---
+    switching = jnp.logical_or(state == SWITCHING_ON, state == SWITCHING_OFF)
+    future = until > t  # (bE, N) broadcast over nodes
+    masked = jnp.where(
+        jnp.logical_and(switching, future), until, jnp.int32(INF_TIME)
+    )
+    next_ref[...] = jnp.min(masked, axis=1, keepdims=True)
+
+
+def _pad_inputs(node_state, node_until, t, power, block_e):
+    """Pad (E, N) operands to the kernel's tile grid; PAD_STATE rows/cols
+    have zero histogram weight and until=INF (masked out of the min)."""
     e, n = node_state.shape
     n_pad = pl.cdiv(n, LANES) * LANES
     e_pad = pl.cdiv(e, block_e) * block_e
@@ -95,7 +127,23 @@ def event_fuse(
         )
     t2 = jnp.pad(t[:, None], ((0, e_pad - e), (0, 0)))
     power8 = jnp.zeros((1, 8), jnp.float32).at[0, :N_STATES].set(power)
+    return node_state, node_until, t2, power8, e_pad, n_pad
 
+
+def event_fuse(
+    node_state: jax.Array,  # [E, N] i32
+    node_until: jax.Array,  # [E, N] i32
+    t: jax.Array,  # [E] i32
+    power: jax.Array,  # [5] f32
+    *,
+    block_e: int = 8,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused (power_draw [E], next_transition [E]) over vmapped envs."""
+    e, n = node_state.shape
+    node_state, node_until, t2, power8, e_pad, n_pad = _pad_inputs(
+        node_state, node_until, t, power, block_e
+    )
     grid = (e_pad // block_e,)
     draw, nxt = pl.pallas_call(
         _event_kernel,
@@ -120,3 +168,43 @@ def event_fuse(
         interpret=interpret,
     )(node_state, node_until, t2, power8)
     return draw[:e, 0], nxt[:e, 0]
+
+
+def event_fuse_ledger(
+    node_state: jax.Array,  # [E, N] i32
+    node_until: jax.Array,  # [E, N] i32
+    t: jax.Array,  # [E] i32
+    power: jax.Array,  # [5] f32
+    *,
+    block_e: int = 8,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused (per-state power sums [E, 8], next_transition [E])."""
+    e, n = node_state.shape
+    node_state, node_until, t2, power8, e_pad, n_pad = _pad_inputs(
+        node_state, node_until, t, power, block_e
+    )
+    grid = (e_pad // block_e,)
+    draw, nxt = pl.pallas_call(
+        _event_ledger_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_e, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_e, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e, 8), lambda i: (i, 0)),
+            pl.BlockSpec((block_e, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e_pad, 8), jnp.float32),
+            jax.ShapeDtypeStruct((e_pad, 1), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(node_state, node_until, t2, power8)
+    return draw[:e], nxt[:e, 0]

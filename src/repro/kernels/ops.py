@@ -13,14 +13,28 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.types import INF_TIME
 from repro.kernels import ref
+from repro.kernels.event_fuse import LANES
 from repro.kernels.event_fuse import event_fuse as _event_fuse_kernel
+from repro.kernels.event_fuse import event_fuse_ledger as _event_ledger_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+# a VMEM block is (block_e, N padded to 128 lanes) x two i32 operands; past
+# ~1M elements (≈8 MiB for the pair) the kernel can't tile the full node row
+# and the wrapper routes to the reference instead
+_EVENT_VMEM_ELEMS = 1 << 20
+
+
+def _event_untileable(e: int, n: int, block_e: int) -> bool:
+    n_pad = -(-n // LANES) * LANES
+    return block_e * n_pad > _EVENT_VMEM_ELEMS
 
 
 @functools.partial(
@@ -60,9 +74,49 @@ def event_fuse(
     node_state, node_until, t, power, *, block_e: int = 8,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Fused (power_draw, next_transition) over vmapped simulator envs."""
+    """Fused (power_draw, next_transition) over vmapped simulator envs.
+
+    Like ``flash_attention``/``ssd_scan``, shapes the kernel can't tile
+    fall back to the jnp reference — engine call sites never special-case.
+    Zero-size axes short-circuit (a min over zero nodes is INF, a sum is 0;
+    the reference's ``jnp.min`` would error on an empty axis).
+    """
     if interpret is None:
         interpret = _on_cpu()
+    e, n = node_state.shape
+    if e == 0 or n == 0:
+        return (
+            jnp.zeros((e,), jnp.float32),
+            jnp.full((e,), int(INF_TIME), jnp.int32),
+        )
+    if _event_untileable(e, n, block_e):
+        return ref.event_fuse_reference(node_state, node_until, t, power)
     return _event_fuse_kernel(
+        node_state, node_until, t, power, block_e=block_e, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def event_fuse_ledger(
+    node_state, node_until, t, power, *, block_e: int = 8,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused (per-state power sums [E, 8], next_transition [E]).
+
+    The engine's hot-loop spelling (core/SEMANTICS.md §Hot loop): on a
+    single-group platform the per-state sums are the [G=1, 5] energy-ledger
+    row. Same fallback contract as :func:`event_fuse`.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    e, n = node_state.shape
+    if e == 0 or n == 0:
+        return (
+            jnp.zeros((e, 8), jnp.float32),
+            jnp.full((e,), int(INF_TIME), jnp.int32),
+        )
+    if _event_untileable(e, n, block_e):
+        return ref.event_fuse_ledger_reference(node_state, node_until, t, power)
+    return _event_ledger_kernel(
         node_state, node_until, t, power, block_e=block_e, interpret=interpret
     )

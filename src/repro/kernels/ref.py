@@ -12,7 +12,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import INF_TIME, SWITCHING_OFF, SWITCHING_ON
+from repro.core.types import INF_TIME, N_STATES, SWITCHING_OFF, SWITCHING_ON
 
 
 def flash_attention_reference(
@@ -78,3 +78,23 @@ def event_fuse_reference(
     future = node_until > t[:, None]
     masked = jnp.where(switching & future, node_until, jnp.int32(INF_TIME))
     return draw.astype(jnp.float32), jnp.min(masked, axis=1)
+
+
+def event_fuse_ledger_reference(
+    node_state: jax.Array,  # [E, N] i32
+    node_until: jax.Array,  # [E, N] i32
+    t: jax.Array,  # [E] i32
+    power: jax.Array,  # [5] f32
+) -> Tuple[jax.Array, jax.Array]:
+    """(per-state power sums [E, 8] f32, next transition [E] i32).
+
+    ``sums[e, s] = count(state == s) * power[s]`` for the 5 live states;
+    columns 5..7 (including the kernel's PAD_STATE) are zero.
+    """
+    power8 = jnp.zeros(8, jnp.float32).at[:N_STATES].set(power)
+    onehot = node_state[:, :, None] == jnp.arange(8, dtype=node_state.dtype)
+    sums = jnp.sum(jnp.where(onehot, power8, 0.0), axis=1)
+    switching = (node_state == SWITCHING_ON) | (node_state == SWITCHING_OFF)
+    future = node_until > t[:, None]
+    masked = jnp.where(switching & future, node_until, jnp.int32(INF_TIME))
+    return sums.astype(jnp.float32), jnp.min(masked, axis=1)

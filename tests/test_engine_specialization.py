@@ -113,7 +113,10 @@ def test_sweep_cache_key_includes_controller_dvfs():
 
 
 def test_simulate_jit_cache_is_bounded():
-    wl = _wl(n_jobs=5, seed=0)
+    # n_jobs must exceed the window sweep below: trim_window collapses any
+    # window > n_jobs onto the same program, which would keep the cache
+    # from ever filling.
+    wl = _wl(n_jobs=engine._SIM_CACHE_SIZE + 4, seed=0)
     plat = PlatformSpec(nb_nodes=8)
     engine._SIM_FNS.clear()
     for w in range(engine._SIM_CACHE_SIZE + 3):

@@ -1,0 +1,189 @@
+"""Hot-loop restructure (core/SEMANTICS.md §Hot loop): the fused event pass,
+quiet-event batching, the early-exit scheduler scan, and the workload-derived
+window trim are all bit-exact with the legacy loop — the fused engine must be
+a pure performance change, never a semantic one."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.policy import RLController, from_label, scheduler_labels
+from repro.core.types import EngineConfig
+from repro.workloads.generator import GeneratorConfig, generate_workload
+from repro.workloads.platform import PlatformSpec, mixed_platform_example
+from repro.workloads.workload import workload_from_arrays
+
+SIX = [l for l in scheduler_labels() if "AlwaysOn" not in l]
+
+# every field a schedule/accounting divergence could show up in
+EXACT_FIELDS = (
+    "t", "job_start", "job_finish", "job_status", "job_eff",
+    "job_terminated", "node_state", "node_until", "n_batches", "n_allocs",
+    "n_starts", "n_completions", "n_switch_on", "n_switch_off",
+    "energy", "energy_c", "wait_integral", "truncated",
+)
+
+
+def _assert_states_equal(a, b, fields=EXACT_FIELDS):
+    for fld in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, fld)), np.asarray(getattr(b, fld)),
+            err_msg=f"fused/unfused diverged in SimState.{fld}",
+        )
+
+
+@pytest.mark.parametrize("label", SIX)
+def test_fused_bit_exact_all_labels(label):
+    """Fused loop == legacy loop, bit-for-bit, for all six schedulers."""
+    base, pol = from_label(label)
+    plat = PlatformSpec(nb_nodes=16)
+    wl = generate_workload(
+        GeneratorConfig(n_jobs=80, nb_res=16, seed=5, overrun_prob=0.2)
+    )
+    cfg = EngineConfig(
+        base=base, policy=pol, timeout=120, terminate_overrun=True
+    )
+    fused = engine.simulate(plat, wl, cfg)
+    legacy = engine.simulate(
+        plat, wl, dataclasses.replace(cfg, fused_events=False)
+    )
+    _assert_states_equal(fused, legacy)
+
+
+def test_fused_bit_exact_traced_sweep():
+    """The traced superset program (sweep) is fused too — same guarantee."""
+    plat = PlatformSpec(nb_nodes=16)
+    wl = generate_workload(GeneratorConfig(n_jobs=50, nb_res=16, seed=7))
+    cfg = EngineConfig(timeout=90)
+    fused = engine.sweep(plat, wl, SIX, cfg)
+    legacy = engine.sweep(
+        plat, wl, SIX, dataclasses.replace(cfg, fused_events=False)
+    )
+    _assert_states_equal(fused.states, legacy.states)
+
+
+def test_fused_bit_exact_heterogeneous():
+    """Multi-group platform: the kernel gate stays off (G > 1), the fused-XLA
+    path carries per-group ledgers bit-exactly."""
+    plat = mixed_platform_example(12)
+    wl = generate_workload(GeneratorConfig(n_jobs=40, nb_res=12, seed=2))
+    cfg = EngineConfig(timeout=100, node_order="cheap")
+    fused = engine.simulate(plat, wl, cfg)
+    legacy = engine.simulate(
+        plat, wl, dataclasses.replace(cfg, fused_events=False)
+    )
+    _assert_states_equal(fused, legacy)
+
+
+def test_quiet_batching_sleep_cycle_trace():
+    """A sleep-cycling trace (long gaps, every batch between bursts is pure
+    transition/expiry) exercises the quiet path and stays bit-exact."""
+    plat = PlatformSpec(nb_nodes=16, t_switch_on=40, t_switch_off=60)
+    wl = workload_from_arrays(
+        res=[4, 8, 4, 8, 4, 8],
+        subtime=[0, 700, 1400, 2100, 2800, 3500],
+        runtime=[50, 60, 50, 60, 50, 60],
+        nb_res=16,
+    )
+    cfg = EngineConfig(timeout=10)
+    fused = engine.simulate(plat, wl, cfg)
+    legacy = engine.simulate(
+        plat, wl, dataclasses.replace(cfg, fused_events=False)
+    )
+    _assert_states_equal(fused, legacy)
+    # the trace actually sleep-cycles (so quiet batches were on the path)
+    assert int(fused.n_switch_off) >= 8
+
+
+def test_quiet_gate_is_static():
+    """Quiet batching only arms when the skipped rules are statically absent:
+    specialized TimeoutSleep yes; RL / traced (sweep) flags no."""
+    plat = PlatformSpec(nb_nodes=4)
+    cfg = EngineConfig(timeout=60)
+    const = engine.make_const(plat, cfg, specialize=True)
+    assert engine._quiet_enabled(const, cfg)
+    # traced flags (the sweep spelling) keep the full batch
+    assert not engine._quiet_enabled(engine.make_const(plat, cfg), cfg)
+    cfg_rl = EngineConfig(policy=RLController())
+    const_rl = engine.make_const(plat, cfg_rl, specialize=True)
+    assert not engine._quiet_enabled(const_rl, cfg_rl)
+    # opting out of the fused loop opts out of quiet batching too
+    cfg_legacy = dataclasses.replace(cfg, fused_events=False)
+    assert not engine._quiet_enabled(
+        engine.make_const(plat, cfg_legacy, specialize=True), cfg_legacy
+    )
+
+
+# ------------------------------------------------------------- window trim
+
+def test_window_trim_bit_exact():
+    """cfg.window > n_jobs is trimmed (the queue can never fill those slots)
+    with bit-exact results vs an explicitly-sized window."""
+    plat = PlatformSpec(nb_nodes=16)
+    wl = generate_workload(GeneratorConfig(n_jobs=20, nb_res=16, seed=9))
+    wide = engine.simulate(plat, wl, EngineConfig(timeout=60, window=64))
+    tight = engine.simulate(plat, wl, EngineConfig(timeout=60, window=20))
+    _assert_states_equal(wide, tight)
+
+
+def test_trim_window_bounds():
+    cfg = EngineConfig(window=32)
+    assert engine.trim_window(cfg, 10).window == 10
+    assert engine.trim_window(cfg, 32).window == 32
+    # never widened, never below 1
+    assert engine.trim_window(cfg, 100).window == 32
+    assert engine.trim_window(cfg, 0).window == 1
+    # no-op trims return the config unchanged (jit-cache-key identity)
+    assert engine.trim_window(cfg, 100) is cfg
+
+
+def test_window_trim_shares_compiled_program():
+    """window=64 and window=48 trim to the same static W for a 20-job
+    workload, so simulate() reuses one cached program."""
+    plat = PlatformSpec(nb_nodes=8)
+    wl = generate_workload(GeneratorConfig(n_jobs=20, nb_res=8, seed=4))
+    engine._SIM_FNS.clear()
+    engine.simulate(plat, wl, EngineConfig(timeout=60, window=64))
+    n_after_first = len(engine._SIM_FNS)
+    engine.simulate(plat, wl, EngineConfig(timeout=60, window=48))
+    assert len(engine._SIM_FNS) == n_after_first
+
+
+# ------------------------------------------------------------- kernel path
+
+def test_fused_kernel_path_schedule_exact():
+    """Forcing the Pallas kernel route (fused_kernel=True; interpret on CPU)
+    keeps the schedule bit-exact — the i32 transition min is exact — and the
+    energy equal to rounding (the kernel's per-state sums differ from the
+    scatter-add only in f32 reduction order)."""
+    plat = PlatformSpec(nb_nodes=16)
+    wl = generate_workload(GeneratorConfig(n_jobs=30, nb_res=16, seed=11))
+    cfg = EngineConfig(timeout=60)
+    kern = engine.simulate(plat, wl, dataclasses.replace(cfg, fused_kernel=True))
+    xla = engine.simulate(plat, wl, dataclasses.replace(cfg, fused_kernel=False))
+    _assert_states_equal(
+        kern, xla,
+        fields=(
+            "t", "job_start", "job_finish", "job_status", "n_batches",
+            "n_allocs", "n_switch_on", "n_switch_off", "truncated",
+        ),
+    )
+    np.testing.assert_allclose(
+        np.asarray(kern.energy), np.asarray(xla.energy), rtol=1e-6
+    )
+
+
+def test_fused_flags_are_trace_structure():
+    """fused_events / resolved fused_kernel key the jit caches — flipping
+    either must not silently reuse a program with the other loop shape."""
+    plat = PlatformSpec(nb_nodes=8)
+    cfg = EngineConfig(timeout=60)
+    key_f = engine._static_trace_key(plat, cfg, 10, 100)
+    key_u = engine._static_trace_key(
+        plat, dataclasses.replace(cfg, fused_events=False), 10, 100
+    )
+    key_k = engine._static_trace_key(
+        plat, dataclasses.replace(cfg, fused_kernel=True), 10, 100
+    )
+    assert len({key_f, key_u, key_k}) == 3

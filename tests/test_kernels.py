@@ -159,3 +159,96 @@ def test_event_fuse_matches_engine_semantics():
     )
     want_draw = float(jnp.sum(table[s.node_state]))
     assert float(d[0]) == pytest.approx(want_draw, rel=1e-6)
+
+
+@pytest.mark.parametrize("e,n", [(1, 16), (8, 64), (37, 200), (64, 128)])
+def test_event_fuse_ledger_matches_reference(e, n):
+    state = jnp.asarray(RNG.integers(0, 5, (e, n)), jnp.int32)
+    until = jnp.asarray(RNG.integers(0, 100000, (e, n)), jnp.int32)
+    t = jnp.asarray(RNG.integers(0, 50000, (e,)), jnp.int32)
+    power = jnp.asarray([9.0, 190.0, 190.0, 190.0, 9.0], jnp.float32)
+    d, nx = ops.event_fuse_ledger(state, until, t, power, interpret=True)
+    d_ref, nx_ref = ref.event_fuse_ledger_reference(state, until, t, power)
+    assert d.shape == (e, 8)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_ref), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(nx), np.asarray(nx_ref))
+    # columns beyond the 5 live states (incl. PAD_STATE) must stay zero
+    np.testing.assert_array_equal(np.asarray(d[:, 5:]), 0.0)
+
+
+def test_event_fuse_pad_poisoning():
+    """Non-multiple-of-128 N and non-multiple-of-block_e E: the pad rows
+    (PAD_STATE, until=INF) must contribute 0 to every histogram column and
+    never win the min — for both the scalar and the ledger variant."""
+    e, n = 13, 131  # E % block_e != 0, N % LANES != 0
+    state = jnp.asarray(RNG.integers(0, 5, (e, n)), jnp.int32)
+    until = jnp.asarray(RNG.integers(0, 100000, (e, n)), jnp.int32)
+    t = jnp.asarray(RNG.integers(0, 50000, (e,)), jnp.int32)
+    power = jnp.asarray([9.0, 190.0, 190.0, 190.0, 9.0], jnp.float32)
+    d, nx = ops.event_fuse(state, until, t, power, block_e=8, interpret=True)
+    d_ref, nx_ref = ref.event_fuse_reference(state, until, t, power)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_ref), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(nx), np.asarray(nx_ref))
+    dl, nxl = ops.event_fuse_ledger(
+        state, until, t, power, block_e=8, interpret=True
+    )
+    dl_ref, nxl_ref = ref.event_fuse_ledger_reference(state, until, t, power)
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(dl_ref), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(nxl), np.asarray(nxl_ref))
+
+
+def test_event_fuse_no_transitions_is_inf():
+    """With no switching node anywhere, the masked min must be INF_TIME —
+    a poisoned pad column would instead leak a finite until."""
+    from repro.core.types import IDLE, INF_TIME
+
+    e, n = 5, 131
+    state = jnp.full((e, n), IDLE, jnp.int32)
+    until = jnp.asarray(RNG.integers(0, 1000, (e, n)), jnp.int32)
+    t = jnp.zeros((e,), jnp.int32)
+    power = jnp.asarray([9.0, 190.0, 190.0, 190.0, 9.0], jnp.float32)
+    _, nx = ops.event_fuse(state, until, t, power, interpret=True)
+    np.testing.assert_array_equal(np.asarray(nx), int(INF_TIME))
+    _, nxl = ops.event_fuse_ledger(state, until, t, power, interpret=True)
+    np.testing.assert_array_equal(np.asarray(nxl), int(INF_TIME))
+
+
+def test_event_fuse_zero_size_fallback():
+    """E == 0 and N == 0 short-circuit (jnp.min over an empty axis errors;
+    the contract is draw 0 / next INF)."""
+    from repro.core.types import INF_TIME
+
+    power = jnp.asarray([9.0, 190.0, 190.0, 190.0, 9.0], jnp.float32)
+    for e, n in [(0, 16), (4, 0), (0, 0)]:
+        state = jnp.zeros((e, n), jnp.int32)
+        until = jnp.zeros((e, n), jnp.int32)
+        t = jnp.zeros((e,), jnp.int32)
+        d, nx = ops.event_fuse(state, until, t, power, interpret=True)
+        assert d.shape == (e,) and nx.shape == (e,)
+        dl, nxl = ops.event_fuse_ledger(state, until, t, power, interpret=True)
+        assert dl.shape == (e, 8) and nxl.shape == (e,)
+        if e:
+            np.testing.assert_array_equal(np.asarray(d), 0.0)
+            np.testing.assert_array_equal(np.asarray(nx), int(INF_TIME))
+            np.testing.assert_array_equal(np.asarray(dl), 0.0)
+            np.testing.assert_array_equal(np.asarray(nxl), int(INF_TIME))
+
+
+def test_event_fuse_untileable_falls_back():
+    """A node row too wide to tile into VMEM routes to the jnp reference
+    (wrapper contract, like flash_attention's ragged fallback)."""
+    assert not ops._event_untileable(8, 4096, 8)
+    assert ops._event_untileable(2, 131073, 8)  # pads to 131200 lanes
+    e, n = 2, 131073
+    state = jnp.asarray(RNG.integers(0, 5, (e, n)), jnp.int32)
+    until = jnp.asarray(RNG.integers(0, 100000, (e, n)), jnp.int32)
+    t = jnp.asarray(RNG.integers(0, 50000, (e,)), jnp.int32)
+    power = jnp.asarray([9.0, 190.0, 190.0, 190.0, 9.0], jnp.float32)
+    d, nx = ops.event_fuse(state, until, t, power, interpret=True)
+    d_ref, nx_ref = ref.event_fuse_reference(state, until, t, power)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_ref), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(nx), np.asarray(nx_ref))
+    dl, nxl = ops.event_fuse_ledger(state, until, t, power, interpret=True)
+    dl_ref, nxl_ref = ref.event_fuse_ledger_reference(state, until, t, power)
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(dl_ref), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(nxl), np.asarray(nxl_ref))

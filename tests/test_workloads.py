@@ -100,6 +100,75 @@ def test_parse_swf(tmp_path):
     assert wl.jobs[1].reqtime == 400
 
 
+def test_parse_swf_large_trace(tmp_path):
+    """A synthetic >=10k-line SWF trace with the warts of real archive files:
+    comment headers, blank lines, ragged short lines, out-of-order job ids
+    and subtimes, unknown runtimes, zero-proc rows, and missing reqtimes.
+    The parse must round-trip through make_const/init_state untouched."""
+    n = 10_000
+    lines = [
+        "; SWF trace (synthetic)",
+        "; Version: 2.2",
+        "; MaxProcs: 320",
+        "; MaxRuntime: 86400",
+        "",
+    ]
+    # deterministic pseudo-random stream, no RNG state shared with other tests
+    def h(i, k):
+        return (i * 2654435761 + k * 40503) % 2**16
+
+    kept = 0
+    for i in range(n):
+        jid = n - i  # ids descending: parser must not assume sorted input
+        subtime = h(i, 1) % 50_000  # unsorted: .sorted_by_subtime() fixes
+        kind = i % 100
+        if kind == 0:
+            lines.append(f"{jid} {subtime} 0 17")  # ragged: < 9 fields, skip
+            continue
+        if kind == 1:
+            lines.append("")  # blank line, skip
+            continue
+        runtime = -1 if kind == 2 else 1 + h(i, 2) % 3600
+        procs = 0 if kind == 3 else 1 + h(i, 3) % 320
+        reqtime = -1 if kind == 4 else runtime + h(i, 4) % 600
+        lines.append(
+            f"{jid} {subtime} 10 {runtime} {procs} -1 -1 {procs} {reqtime}"
+            " -1 1 1 1 1 1 1 -1 -1"
+        )
+        if runtime >= 0 and procs > 0:
+            kept += 1
+    path = str(tmp_path / "big.swf")
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+
+    wl = parse_swf(path)
+    assert wl.nb_res == 320  # from the MaxProcs header, not the max res
+    assert len(wl) == kept
+    assert kept >= 9_000
+    subs = [j.subtime for j in wl.jobs]
+    assert subs == sorted(subs)
+    for j in wl.jobs:
+        assert 1 <= j.res <= 320
+        assert j.runtime >= 1
+        assert j.reqtime >= max(j.runtime, 1)  # missing reqtime backfilled
+
+    # round-trips through the engine's static workload arrays
+    plat = PlatformSpec(nb_nodes=wl.nb_res)
+    cfg = EngineConfig(timeout=60)
+    s0 = engine.init_state(plat, wl, cfg)
+    assert s0.job_res.shape == (len(wl),)
+    np.testing.assert_array_equal(
+        np.asarray(s0.job_subtime), np.asarray(subs, np.int32)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(s0.job_res), np.asarray([j.res for j in wl.jobs], np.int32)
+    )
+    # and a short slice actually simulates to completion
+    out = engine.simulate(plat, wl.tail(50), cfg)
+    assert not bool(out.truncated)
+    assert int(np.min(np.asarray(out.job_start))) >= 0
+
+
 def test_workload_tail_shifts_time():
     wl = generate_workload(GeneratorConfig(n_jobs=30, seed=5))
     t = wl.tail(10)
