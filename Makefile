@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all test-slow test-nightly bench-scale docs-check
+.PHONY: test test-all test-slow test-nightly bench-scale lint docs-check
 
 # tier-1 gate (what CI and the ROADMAP "Tier-1 verify" line run);
 # pytest.ini excludes the `slow` marker from this run
@@ -35,8 +35,14 @@ test-nightly: test-slow
 bench-scale:
 	$(PY) benchmarks/bench_scale.py --jobs 200 --nodes 512 --oracle-jobs 50 --hetero
 
-# documentation hygiene: dead links, stale file references, code-fence
-# balance, and fenced `python -m` commands over README / SEMANTICS /
-# experiments docs (also run as tests/test_docs.py in tier-1)
+# spars-lint: repo-invariant static analysis (core/SEMANTICS.md §Design
+# rules) — trace-key completeness, flag-gate discipline, oracle-twin
+# coverage, kernel-wrapper contract, tracer purity, metrics-row
+# consistency, docs hygiene (SL001-SL007). Exits non-zero on any unwaived
+# finding; also run in tier-1 via tests/test_lint.py.
+lint:
+	$(PY) tools/lint/spars_lint.py
+
+# legacy alias: the docs checker is now spars-lint pass SL007
 docs-check:
-	$(PY) tools/docs_check.py
+	$(PY) tools/lint/spars_lint.py --only SL007

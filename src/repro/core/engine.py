@@ -1013,6 +1013,8 @@ def run_sim(
     timeout expiries) dispatch to the stripped :func:`_quiet_batch` instead
     of the full scheduler pass. Bit-exact either way.
     """
+    # spars-lint: ignore[SL001] resolved into the jit key's explicit `cap`
+    # argument before lookup — never read inside the compiled body
     cap = max_batches or cfg.max_batches or default_batch_cap(
         int(s.job_status.shape[0])
     )

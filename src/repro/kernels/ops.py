@@ -48,6 +48,11 @@ def flash_attention(
     if interpret is None:
         interpret = _on_cpu()
     sq = q.shape[1]
+    # zero-size short-circuit: empty queries/keys produce zeros (softmax
+    # over zero keys is undefined); also keeps min(block_q, sq) below from
+    # dividing by zero
+    if 0 in q.shape or 0 in k.shape or 0 in v.shape:
+        return jnp.zeros(q.shape[:-1] + (v.shape[-1],), q.dtype)
     if sq % min(block_q, sq) != 0 or q.shape[2] % k.shape[2] != 0:
         return ref.flash_attention_reference(q, k, v, causal=causal, sm_scale=sm_scale)
     return _flash_kernel(
@@ -64,6 +69,15 @@ def ssd_scan(
     if interpret is None:
         interpret = _on_cpu()
     s = q.shape[1]
+    # zero-size short-circuit: an empty sequence leaves the recurrence at
+    # its h0 = zeros initial state; also keeps min(chunk, s) below from
+    # dividing by zero
+    if 0 in q.shape or 0 in v.shape:
+        b, _, h, dk = q.shape
+        return (
+            jnp.zeros(v.shape, v.dtype),
+            jnp.zeros((b, h, dk, v.shape[-1]), jnp.float32),
+        )
     if s % min(chunk, s) != 0:
         return ref.gla_reference(q, k, v, g)
     return _ssd_kernel(q, k, v, g, chunk=chunk, interpret=interpret)

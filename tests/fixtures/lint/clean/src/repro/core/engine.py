@@ -1,0 +1,23 @@
+"""Clean case: a miniature engine that satisfies every spars-lint rule —
+all jitted-scope config reads ride the trace key, no raw flag gates, no
+host effects in traced bodies."""
+
+
+def _static_trace_key(platform, config, J, cap):
+    return (config.window, config.terminate_overrun, J, cap)
+
+
+def _scheduler_pass(s, const, cfg):
+    width = cfg.window
+    return s, width
+
+
+def _start_jobs(s, const, cfg):
+    if cfg.terminate_overrun:
+        return s
+    return s
+
+
+def run_sim(s, const, cfg):
+    s, _ = _scheduler_pass(s, const, cfg)
+    return _start_jobs(s, const, cfg)

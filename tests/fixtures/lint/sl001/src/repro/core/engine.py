@@ -1,0 +1,17 @@
+"""Seeded SL001 violation: `cfg.shiny` is read inside the jitted scope
+(reachable from run_sim) but missing from _static_trace_key."""
+
+
+def _static_trace_key(platform, config, J, cap):
+    return (config.window, J, cap)
+
+
+def _scheduler_pass(s, const, cfg):
+    width = cfg.window
+    shiny = cfg.shiny
+    return s, width, shiny
+
+
+def run_sim(s, const, cfg):
+    s, _, _ = _scheduler_pass(s, const, cfg)
+    return s

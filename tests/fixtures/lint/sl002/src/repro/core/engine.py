@@ -1,0 +1,16 @@
+"""Seeded SL002 violation: a raw PolicyParams flag read in a gate position
+instead of routing through static_bool."""
+
+
+def _static_trace_key(platform, config, J, cap):
+    return (J, cap)
+
+
+def _power_step(s, const, pp):
+    if pp.sleep_enabled:
+        return s
+    return s
+
+
+def run_sim(s, const, cfg):
+    return _power_step(s, const, cfg)

@@ -1,0 +1,13 @@
+"""Seeded SL003 violation: an s-first engine rule with no PyDES twin."""
+
+
+def _static_trace_key(platform, config, J, cap):
+    return (J, cap)
+
+
+def frobnicate(s, const):
+    return s
+
+
+def run_sim(s, const, cfg):
+    return frobnicate(s, const)

@@ -1,0 +1,13 @@
+"""Seeded SL003 violation (oracle side): a PyDES method with no engine
+rule twin."""
+
+
+class PyDES:
+    def __init__(self):
+        pass
+
+    def run(self):
+        return None
+
+    def _unmatched_rule(self):
+        return None

@@ -1,0 +1,8 @@
+"""Seeded SL004 violation: a Pallas wrapper with no reference fallback and
+no zero-size short-circuit."""
+from repro.kernels import ref  # noqa: F401
+from repro.kernels.frob import frob as _frob_kernel
+
+
+def frob(x, *, block: int = 128):
+    return _frob_kernel(x, block=block)

@@ -1,0 +1,6 @@
+"""Reference module for the sl004 fixture — deliberately has no
+frob_reference, so the wrapper has nothing to fall back to."""
+
+
+def unrelated_reference(x):
+    return x

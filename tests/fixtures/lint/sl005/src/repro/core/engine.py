@@ -1,0 +1,18 @@
+"""Seeded SL005 violations: host numpy, a Python bool() on a traced value,
+and print() inside a jit-traced body."""
+import numpy as np
+
+
+def _static_trace_key(platform, config, J, cap):
+    return (J, cap)
+
+
+def accrue_energy(s, const, cfg):
+    total = np.sum(s.energy)
+    if bool(s.truncated):
+        print("truncated", total)
+    return s
+
+
+def run_sim(s, const, cfg):
+    return accrue_energy(s, const, cfg)

@@ -1,0 +1,10 @@
+"""Seeded SL006 violation: a SimMetrics field that never reaches row()."""
+from typing import NamedTuple
+
+
+class SimMetrics(NamedTuple):
+    total_energy_j: float
+    secret_debug: float
+
+    def row(self):
+        return {"total_energy_j": self.total_energy_j}

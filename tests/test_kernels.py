@@ -252,3 +252,30 @@ def test_event_fuse_untileable_falls_back():
     dl_ref, nxl_ref = ref.event_fuse_ledger_reference(state, until, t, power)
     np.testing.assert_allclose(np.asarray(dl), np.asarray(dl_ref), rtol=1e-6)
     np.testing.assert_array_equal(np.asarray(nxl), np.asarray(nxl_ref))
+
+
+def test_flash_attention_zero_size_short_circuit():
+    """Zero-length queries/keys return zeros instead of tripping the
+    `sq % min(block_q, sq)` tiling test with a ZeroDivisionError
+    (SL004 kernel contract)."""
+    for bq, bk in [(0, 16), (4, 0), (0, 0)]:
+        q = jnp.zeros((2, bq, 4, 8), jnp.float32)
+        k = jnp.zeros((2, bk, 4, 8), jnp.float32)
+        v = jnp.zeros((2, bk, 4, 8), jnp.float32)
+        out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+        assert out.shape == (2, bq, 4, 8) and out.dtype == q.dtype
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_ssd_scan_zero_size_short_circuit():
+    """An empty sequence returns (empty y, zeros h_final) — the recurrence
+    never leaves its h0 = zeros state (SL004 kernel contract)."""
+    b, h, dk, dv = 2, 3, 8, 4
+    q = jnp.zeros((b, 0, h, dk), jnp.float32)
+    k = jnp.zeros((b, 0, h, dk), jnp.float32)
+    v = jnp.zeros((b, 0, h, dv), jnp.float32)
+    g = jnp.zeros((b, 0, h), jnp.float32)
+    y, hT = ops.ssd_scan(q, k, v, g, interpret=True)
+    assert y.shape == (b, 0, h, dv) and y.dtype == v.dtype
+    assert hT.shape == (b, h, dk, dv) and hT.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(hT), 0.0)

@@ -1,125 +1,17 @@
-"""Documentation checker: dead links + code-fence hygiene (`make docs-check`).
-
-Scans the repo's markdown docs for
-
-1. unbalanced triple-backtick code fences,
-2. relative markdown links whose target file does not exist
-   (``[text](path)``; http(s)/mailto/anchor links are skipped),
-3. backtick-quoted repo paths that no longer exist (e.g. a doc naming
-   ``src/repro/core/policy.py`` after a rename),
-4. runnable command lines inside ``sh`` fences whose entry point is gone:
-   ``python -m <module>`` must resolve to a file under ``src/`` or the repo
-   root, ``python <path>.py`` must exist.
-
-Exit status is non-zero when any problem is found, so the nightly lane
-fails loudly instead of shipping rotten docs. Run directly or via
-``tests/test_docs.py`` (tier-1).
+"""Compatibility shim: the docs checker now lives in tools/lint/docs_pass.py
+as the SL007 pass of spars-lint (`make lint`). This entry point — and
+`make docs-check` — keep working for scripts and muscle memory.
 """
 from __future__ import annotations
 
 import os
-import re
 import sys
-from typing import List
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-DOCS = (
-    "README.md",
-    "ROADMAP.md",
-    "src/repro/core/SEMANTICS.md",
-    "src/repro/experiments/README.md",
-    "tests/README.md",
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "lint")
 )
 
-_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-_CODE_PATH = re.compile(r"`([A-Za-z0-9_./-]+\.(?:py|md|json|yml|yaml))`")
-_PY_MODULE = re.compile(r"python\s+-m\s+([A-Za-z0-9_.]+)")
-_PY_FILE = re.compile(r"python\s+([A-Za-z0-9_./-]+\.py)")
-
-
-def _exists(path: str, doc_dir: str) -> bool:
-    """A referenced path may be doc-relative, repo-root-relative, or the
-    repo's `core/...`-style shorthand rooted at src/repro."""
-    bases = (doc_dir, REPO, os.path.join(REPO, "src"),
-             os.path.join(REPO, "src", "repro"))
-    return any(os.path.exists(os.path.join(b, path)) for b in bases)
-
-
-def _local_package(module: str) -> bool:
-    """Only repo-local packages are checkable (pytest etc. are not)."""
-    top = module.split(".", 1)[0]
-    return any(
-        os.path.exists(os.path.join(REPO, root, top))
-        for root in ("src", ".")
-    )
-
-
-def _module_file(module: str) -> bool:
-    rel = module.replace(".", "/")
-    return any(
-        os.path.exists(os.path.join(REPO, root, p))
-        for root in ("src", ".")
-        for p in (f"{rel}.py", f"{rel}/__init__.py")
-    )
-
-
-def check_doc(path: str) -> List[str]:
-    problems: List[str] = []
-    full = os.path.join(REPO, path)
-    if not os.path.exists(full):
-        return [f"{path}: listed in docs_check.DOCS but missing"]
-    with open(full) as f:
-        text = f.read()
-    doc_dir = os.path.dirname(full)
-
-    if text.count("```") % 2:
-        problems.append(f"{path}: unbalanced ``` code fences")
-
-    fence_langs_and_bodies = re.findall(r"```(\w*)\n(.*?)```", text, re.S)
-    prose = re.sub(r"```.*?```", "", text, flags=re.S)
-
-    for target in _LINK.findall(prose):
-        if target.startswith(("http://", "https://", "mailto:", "#")):
-            continue
-        target = target.split("#", 1)[0]
-        if target and not _exists(target, doc_dir):
-            problems.append(f"{path}: dead link -> {target}")
-
-    for ref in _CODE_PATH.findall(prose):
-        if ref.startswith("out/"):
-            continue  # generated outputs need not exist in a clean checkout
-        if "/" in ref and not _exists(ref, doc_dir):
-            problems.append(f"{path}: stale file reference `{ref}`")
-
-    for lang, body in fence_langs_and_bodies:
-        if lang not in ("sh", "bash", "console", ""):
-            continue
-        for mod in _PY_MODULE.findall(body):
-            if _local_package(mod) and not _module_file(mod):
-                problems.append(
-                    f"{path}: fenced command references missing module "
-                    f"'python -m {mod}'"
-                )
-        for script in _PY_FILE.findall(body):
-            if not _exists(script, doc_dir):
-                problems.append(
-                    f"{path}: fenced command references missing file "
-                    f"'python {script}'"
-                )
-    return problems
-
-
-def main(docs=DOCS) -> List[str]:
-    problems: List[str] = []
-    for doc in docs:
-        problems.extend(check_doc(doc))
-    for p in problems:
-        print(f"docs-check: {p}", file=sys.stderr)
-    if not problems:
-        print(f"docs-check: {len(docs)} documents OK")
-    return problems
-
+from docs_pass import DOCS, REPO, check_doc, collect, main  # noqa: E402,F401
 
 if __name__ == "__main__":
     sys.exit(1 if main() else 0)

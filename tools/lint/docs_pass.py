@@ -1,0 +1,132 @@
+"""SL007 — documentation hygiene (the former ``tools/docs_check.py``).
+
+Scans the repo's markdown docs for
+
+1. unbalanced triple-backtick code fences,
+2. relative markdown links whose target file does not exist
+   (``[text](path)``; http(s)/mailto/anchor links are skipped),
+3. backtick-quoted repo paths that no longer exist (e.g. a doc naming
+   ``src/repro/core/policy.py`` after a rename),
+4. runnable command lines inside ``sh`` fences whose entry point is gone:
+   ``python -m <module>`` must resolve to a file under ``src/`` or the repo
+   root, ``python <path>.py`` must exist.
+
+Runs as one pass of the ``spars-lint`` driver (``make lint``); the legacy
+entry points — ``make docs-check``, ``python tools/docs_check.py``, and the
+tier-1 wrapper ``tests/test_docs.py`` — all route here.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List
+
+REPO = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+DOCS = (
+    "README.md",
+    "ROADMAP.md",
+    "src/repro/core/SEMANTICS.md",
+    "src/repro/experiments/README.md",
+    "tests/README.md",
+)
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_PATH = re.compile(r"`([A-Za-z0-9_./-]+\.(?:py|md|json|yml|yaml))`")
+_PY_MODULE = re.compile(r"python\s+-m\s+([A-Za-z0-9_.]+)")
+_PY_FILE = re.compile(r"python\s+([A-Za-z0-9_./-]+\.py)")
+
+
+def _exists(path: str, doc_dir: str, root: str) -> bool:
+    """A referenced path may be doc-relative, repo-root-relative, or the
+    repo's `core/...`-style shorthand rooted at src/repro."""
+    bases = (doc_dir, root, os.path.join(root, "src"),
+             os.path.join(root, "src", "repro"))
+    return any(os.path.exists(os.path.join(b, path)) for b in bases)
+
+
+def _local_package(module: str, root: str) -> bool:
+    """Only repo-local packages are checkable (pytest etc. are not)."""
+    top = module.split(".", 1)[0]
+    return any(
+        os.path.exists(os.path.join(root, r, top)) for r in ("src", ".")
+    )
+
+
+def _module_file(module: str, root: str) -> bool:
+    rel = module.replace(".", "/")
+    return any(
+        os.path.exists(os.path.join(root, r, p))
+        for r in ("src", ".")
+        for p in (f"{rel}.py", f"{rel}/__init__.py")
+    )
+
+
+def check_doc(path: str, root: str = REPO) -> List[str]:
+    problems: List[str] = []
+    full = os.path.join(root, path)
+    if not os.path.exists(full):
+        return [f"{path}: listed in docs_check.DOCS but missing"]
+    with open(full) as f:
+        text = f.read()
+    doc_dir = os.path.dirname(full)
+
+    if text.count("```") % 2:
+        problems.append(f"{path}: unbalanced ``` code fences")
+
+    fence_langs_and_bodies = re.findall(r"```(\w*)\n(.*?)```", text, re.S)
+    prose = re.sub(r"```.*?```", "", text, flags=re.S)
+
+    for target in _LINK.findall(prose):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = target.split("#", 1)[0]
+        if target and not _exists(target, doc_dir, root):
+            problems.append(f"{path}: dead link -> {target}")
+
+    for ref in _CODE_PATH.findall(prose):
+        if ref.startswith("out/"):
+            continue  # generated outputs need not exist in a clean checkout
+        if "/" in ref and not _exists(ref, doc_dir, root):
+            problems.append(f"{path}: stale file reference `{ref}`")
+
+    for lang, body in fence_langs_and_bodies:
+        if lang not in ("sh", "bash", "console", ""):
+            continue
+        for mod in _PY_MODULE.findall(body):
+            if _local_package(mod, root) and not _module_file(mod, root):
+                problems.append(
+                    f"{path}: fenced command references missing module "
+                    f"'python -m {mod}'"
+                )
+        for script in _PY_FILE.findall(body):
+            if not _exists(script, doc_dir, root):
+                problems.append(
+                    f"{path}: fenced command references missing file "
+                    f"'python {script}'"
+                )
+    return problems
+
+
+def collect(docs=DOCS, root: str = REPO) -> List[str]:
+    """All problems over ``docs``, silently (the spars-lint driver path)."""
+    problems: List[str] = []
+    for doc in docs:
+        problems.extend(check_doc(doc, root=root))
+    return problems
+
+
+def main(docs=DOCS, root: str = REPO) -> List[str]:
+    problems = collect(docs, root=root)
+    for p in problems:
+        print(f"docs-check: {p}", file=sys.stderr)
+    if not problems:
+        print(f"docs-check: {len(docs)} documents OK")
+    return problems
+
+
+if __name__ == "__main__":
+    sys.exit(1 if main() else 0)
