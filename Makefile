@@ -24,11 +24,16 @@ test-slow:
 # scale benchmark's own assertions (one compiled sweep program, the
 # statically specialized single run beating the traced superset single
 # run, and the fused hot loop not regressing vs the unfused specialized
-# run), so none of them can rot outside the tier-1 gate. Once the fused
-# run beats the sequential oracle at scale (ROADMAP), add
-# --assert-beat-oracle here to gate it.
+# run), so none of them can rot outside the tier-1 gate. The full-scale
+# step gates --assert-beat-oracle (the grouped-tables single run beating
+# the sequential oracle at 11 200 nodes — SEMANTICS §Group-indexed
+# tables; green since PR 8: 11.6s grouped vs 17.9s oracle), and
+# bench_curie asserts grouped == dense per scheduler label on the
+# replayed Curie trace.
 test-nightly: test-slow
 	$(PY) benchmarks/bench_scale.py --jobs 120 --nodes 256 --oracle-jobs 40 --hetero
+	$(PY) benchmarks/bench_scale.py --jobs 200 --nodes 11200 --oracle-jobs 50 --sweep 4 --assert-beat-oracle
+	$(PY) benchmarks/bench_curie.py
 
 # §3.1-scale benchmark; --hetero exercises the mixed-platform sweep
 # (asserts the sweep stays ONE compiled program)

@@ -1,0 +1,178 @@
+"""Curie-scale SWF trace replay benchmark (paper §3.1 + ROADMAP items 1-2).
+
+Replays a 10k-job Curie-class SWF trace (synthesized offline with the
+``cea_curie`` preset statistics; the real ``CEA-Curie-2011-2.1-cln.swf``
+drops into the same path when present) on the 11 200-node 3-group
+:func:`~repro.workloads.platform.curie_platform`, through the streaming
+reader and replay adaptation in :mod:`repro.workloads.traces`.
+
+Two phases:
+
+* **verify** — grouped-tables == dense bit-exact per scheduler label on a
+  scaled-down Curie platform (same 3-group structure), plus the same
+  assert at full scale for the timed config. Schedule fields must match
+  exactly; energy to f32 rounding (occ · power contraction vs per-node
+  scatter-add reduce in different orders).
+* **bench** — single-run wall time, grouped vs dense fused, on the full
+  11 200-node platform (the regime where ``BENCH_grid.json``'s
+  ``scale.single_run_fused_s`` baseline was recorded). The grouped run is
+  the O(N) → O(G) payoff: per-batch energy/event reductions over G = 3
+  groups and a sort-free hoisted allocation order instead of two O(N log N)
+  argsorts per attempt.
+
+``--full`` additionally times the complete 10k-job replay on the grouped
+path (minutes of wall time; the quick mode replays the trace head).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.core import engine
+from repro.core.policy import from_label, scheduler_labels
+from repro.core.types import EngineConfig
+from repro.workloads.platform import curie_platform
+from repro.workloads.traces import replay_workload, synthesize_curie_swf
+from repro.workloads.workload import Workload
+
+# schedule fields that must be bit-exact between the grouped and dense
+# paths (energy is compared separately, to rounding)
+EXACT_FIELDS = (
+    "job_status", "job_start", "job_finish", "t", "n_batches", "n_allocs",
+)
+
+
+def assert_grouped_matches_dense(s_grp, s_dense, where: str) -> None:
+    for f in EXACT_FIELDS:
+        a, b = getattr(s_grp, f, None), getattr(s_dense, f, None)
+        if a is None or b is None:
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"grouped != dense on {f!r} ({where})",
+        )
+    np.testing.assert_allclose(
+        np.asarray(s_grp.energy), np.asarray(s_dense.energy),
+        rtol=1e-6, err_msg=f"grouped energy drifted past rounding ({where})",
+    )
+
+
+def _timed_single(plat, wl: Workload, cfg: EngineConfig) -> tuple:
+    """(wall seconds of the cached program, final state): warm-up compile
+    first, then one timed run."""
+    out = engine.simulate(plat, wl, cfg)
+    jax.block_until_ready(out.energy)
+    t0 = time.perf_counter()
+    out = engine.simulate(plat, wl, cfg)
+    jax.block_until_ready(out.energy)
+    return time.perf_counter() - t0, out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=10_000,
+                    help="synthesized trace length (SWF lines)")
+    ap.add_argument("--nodes", type=int, default=11_200)
+    ap.add_argument("--bench-jobs", type=int, default=200,
+                    help="trace-head jobs for the timed full-scale runs "
+                         "(matches the regime of BENCH_grid.json's "
+                         "scale.single_run_fused_s baseline)")
+    ap.add_argument("--verify-jobs", type=int, default=120)
+    ap.add_argument("--verify-nodes", type=int, default=280,
+                    help="scaled-down Curie platform for the per-label "
+                         "grouped==dense sweep (same 3-group structure)")
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--swf", default=None,
+                    help="existing SWF trace to replay (default: synthesize "
+                         "a Curie-class trace)")
+    ap.add_argument("--full", action="store_true",
+                    help="also time the complete trace replay (grouped)")
+    args = ap.parse_args(argv)
+
+    # --- trace: synthesize (offline container) or replay a provided file ---
+    tmp = None
+    swf = args.swf
+    if swf is None:
+        tmp = tempfile.mkdtemp(prefix="bench_curie_")
+        swf = synthesize_curie_swf(
+            os.path.join(tmp, "curie.swf"), n_jobs=args.jobs
+        )
+    wl_full = replay_workload(swf, nb_nodes=args.nodes, oversize="clamp")
+    print(f"trace: {len(wl_full)} jobs on {args.nodes} nodes "
+          f"(max req {max(j.res for j in wl_full.jobs)} nodes) "
+          f"[{os.path.basename(swf)}]")
+
+    # --- verify: grouped == dense per label, scaled-down Curie platform ---
+    plat_v = curie_platform(args.verify_nodes)
+    wl_v = replay_workload(
+        swf, nb_nodes=args.verify_nodes, oversize="clamp",
+        max_jobs=args.verify_jobs,
+    )
+    labels = scheduler_labels()
+    for label in labels:
+        base, pol = from_label(label)
+        cfg = EngineConfig(
+            base=base, policy=pol, timeout=args.timeout, node_order="cheap"
+        )
+        s_dense = engine.simulate(plat_v, wl_v, cfg)
+        s_grp = engine.simulate(
+            plat_v, wl_v, dataclasses.replace(cfg, grouped_tables=True)
+        )
+        assert_grouped_matches_dense(
+            s_grp, s_dense, f"{label}, {args.verify_nodes} nodes"
+        )
+    print(f"verify: grouped == dense bit-exact for {len(labels)} labels "
+          f"x {args.verify_jobs} replayed jobs on {args.verify_nodes} nodes")
+
+    # --- bench: full-scale single runs on the trace head ---
+    wl_b = replay_workload(
+        swf, nb_nodes=args.nodes, oversize="clamp", max_jobs=args.bench_jobs
+    )
+    plat = curie_platform(args.nodes)
+    base, pol = from_label("EASY PSUS")
+    cfg_dense = EngineConfig(
+        base=base, policy=pol, timeout=args.timeout, fused_events=True
+    )
+    cfg_grp = dataclasses.replace(cfg_dense, grouped_tables=True)
+    cfg_grp_merge = dataclasses.replace(cfg_grp, merge_bursts=True)
+
+    t_dense, out_dense = _timed_single(plat, wl_b, cfg_dense)
+    t_grouped, out_grp = _timed_single(plat, wl_b, cfg_grp)
+    # the full-scale twin of the verify sweep — the timed programs
+    # themselves must agree before their times mean anything
+    assert_grouped_matches_dense(
+        out_grp, out_dense, f"EASY PSUS, {args.nodes} nodes"
+    )
+    t_merge, out_merge = _timed_single(plat, wl_b, cfg_grp_merge)
+
+    print(f"single_run_dense_fused_s={t_dense:.2f} "
+          f"(batches={int(out_dense.n_batches)})")
+    print(f"single_run_grouped_s={t_grouped:.2f} "
+          f"({t_dense / t_grouped:.1f}x vs dense fused)")
+    print(f"single_run_grouped_merge_s={t_merge:.2f} "
+          f"(merge_bursts on; batches={int(out_merge.n_batches)})")
+
+    result = dict(
+        trace_jobs=len(wl_full), bench_jobs=len(wl_b), nodes=args.nodes,
+        n_groups=plat.n_groups(), verify_labels=len(labels),
+        t_dense_fused=t_dense, t_grouped=t_grouped, t_grouped_merge=t_merge,
+    )
+
+    if args.full:
+        t_all, out_all = _timed_single(plat, wl_full, cfg_grp)
+        print(f"full_replay_grouped_s={t_all:.2f} "
+              f"({len(wl_full)} jobs, batches={int(out_all.n_batches)}, "
+              f"{len(wl_full) / t_all:.0f} jobs/s)")
+        result["t_full_replay_grouped"] = t_all
+        result["full_replay_jobs"] = len(wl_full)
+    return result
+
+
+if __name__ == "__main__":
+    main()

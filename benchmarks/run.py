@@ -17,8 +17,8 @@ import json
 import os
 import time
 
-SECTIONS = ("speedup", "energy_grid", "fig1", "scale", "rl", "dvfs",
-            "kernels", "roofline")
+SECTIONS = ("speedup", "energy_grid", "fig1", "scale", "curie", "rl",
+            "dvfs", "kernels", "roofline")
 
 
 def section(title):
@@ -39,6 +39,7 @@ def main() -> None:
     t0 = time.time()
 
     from benchmarks import (
+        bench_curie,
         bench_dvfs,
         bench_energy,
         bench_kernels,
@@ -129,8 +130,36 @@ def main() -> None:
             single_run_s=round(scale["t_jax"], 3),
             single_run_specialized_s=round(scale["t_jax_spec"], 3),
             single_run_fused_s=round(scale["t_jax_fused"], 3),
+            single_run_grouped_s=round(scale["t_jax_grouped"], 3),
             oracle_run_s=round(scale["t_oracle"], 3),
         )
+
+    if want("curie"):
+        section("Curie-scale SWF trace replay (group-indexed tables)")
+
+        def run_curie():
+            return bench_curie.main(
+                ["--jobs", "10000", "--verify-jobs",
+                 "120" if not args.full else "300"]
+                + (["--full"] if args.full else [])
+            )
+
+        curie, entry = timed("curie", run_curie)
+        entry.update(
+            trace_jobs=curie["trace_jobs"],
+            bench_jobs=curie["bench_jobs"],
+            nodes=curie["nodes"],
+            n_groups=curie["n_groups"],
+            verify_labels=curie["verify_labels"],
+            single_run_dense_fused_s=round(curie["t_dense_fused"], 3),
+            single_run_grouped_s=round(curie["t_grouped"], 3),
+            single_run_grouped_merge_s=round(curie["t_grouped_merge"], 3),
+        )
+        if "t_full_replay_grouped" in curie:
+            entry.update(
+                full_replay_grouped_s=round(curie["t_full_replay_grouped"], 3),
+                full_replay_jobs=curie["full_replay_jobs"],
+            )
 
     if want("rl"):
         section("RL workflow throughput")

@@ -58,9 +58,11 @@ from repro.core.policy import (
     effective_node_speed,
     from_label,
     ipm_wake,
+    pack_key,
     static_bool,
     timeout_switch_off,
 )
+from repro.core.tables import GroupTables, group_tables
 from repro.core.types import (
     ACTIVE,
     ALLOCATED,
@@ -107,6 +109,11 @@ class EngineConst(NamedTuple):
     dvfs_speed: jax.Array  # f32[G, M] node speed in mode m
     dvfs_watts: jax.Array  # f32[G, M] ACTIVE-state watts in mode m
     dvfs_n_modes: jax.Array  # i32[G] live modes per group (<= M; rest padding)
+    # group-indexed tables (§Group-indexed tables): per-group lowering of
+    # the per-node tables above, present iff ``config.grouped_tables``.
+    # Presence is pytree/trace structure (mirrored in _static_trace_key);
+    # the member arrays are traced operands like every other table.
+    tables: Optional[GroupTables] = None
 
 
 class SimState(NamedTuple):
@@ -155,6 +162,12 @@ class SimState(NamedTuple):
     # set by run_sim/run_sim_gantt when the batch/log cap stopped the run
     # before completion — metrics from a truncated state are partial
     truncated: jax.Array  # bool
+    # per-(group, state) node occupancy histogram (§Group-indexed tables):
+    # on the grouped-tables path this is refreshed at every energy accrual
+    # with the histogram of the interval just accrued (invariant:
+    # occ.sum(axis=1) == tables.count); the dense path leaves it at its
+    # initial value — it is a grouped-path cache, not dense-path state
+    occ: jax.Array  # i32[G, 5]
 
 
 class GanttLog(NamedTuple):
@@ -193,6 +206,10 @@ def make_const(
         speed = jnp.asarray(platform.node_speed(), jnp.float32)
         if config.node_order == "idle-watts":
             order_key = power[:, IDLE]
+        elif config.node_order == "pack":
+            # the pack key is dynamic queue state, recomputed once per
+            # scheduler pass (policy.pack_key); the static key is unused
+            order_key = jnp.zeros(N, jnp.float32)
         else:
             order_key = jnp.asarray(platform.node_order_key(), jnp.float32)
         group_id = jnp.asarray(platform.node_group_id(), I32)
@@ -208,6 +225,8 @@ def make_const(
         )
         if config.node_order == "idle-watts":
             key = np.float32(platform.power_idle)
+        elif config.node_order == "pack":
+            key = np.float32(0.0)  # dynamic key — see the hetero branch
         else:
             # same f32 expression as PlatformSpec.node_order_key()
             key = np.float32(platform.power_active) / np.float32(
@@ -235,6 +254,9 @@ def make_const(
         dvfs_speed=jnp.asarray(dvfs_speed, jnp.float32),
         dvfs_watts=jnp.asarray(dvfs_watts, jnp.float32),
         dvfs_n_modes=jnp.asarray(dvfs_n, I32),
+        tables=(
+            group_tables(platform, config) if config.grouped_tables else None
+        ),
     )
 
 
@@ -271,6 +293,12 @@ def init_state(
     exists = np.zeros(J, bool)
     exists[:n] = True
     G = platform.n_groups()
+    # every node starts in start_state, so the occupancy histogram starts
+    # as the per-group node counts in that state's column
+    occ0 = np.zeros((G, 5), np.int32)
+    occ0[:, start_state] = np.bincount(
+        platform.node_group_id(), minlength=G
+    ).astype(np.int32)
 
     return SimState(
         t=jnp.asarray(0, I32),
@@ -307,6 +335,7 @@ def init_state(
         mode_time=jnp.zeros((G, platform.n_dvfs_modes()), jnp.float32),
         mode_energy=jnp.zeros((G, platform.n_dvfs_modes()), jnp.float32),
         truncated=jnp.asarray(False),
+        occ=jnp.asarray(occ0),
     )
 
 
@@ -353,6 +382,43 @@ def _ready_times(s: SimState, const: EngineConst) -> jax.Array:
     if eager_b is None:
         return jnp.where(const.policy.eager_ready, eager, aware).astype(I32)
     return (eager if eager_b else aware).astype(I32)
+
+
+def _occupancy(s: SimState, const: EngineConst) -> jax.Array:
+    """i32[G, 5] per-(group, state) node histogram (§Group-indexed tables).
+
+    The one O(N) reduction of the grouped hot path — a single scatter-add
+    (or the Pallas ``event_fuse_occ`` kernel) replacing the per-node power
+    gather + [G, 5] scatter the dense path pays every accrual. Twin of the
+    oracle's ``_occupancy``.
+    """
+    G = s.energy.shape[0]
+    return (
+        jnp.zeros((G, N_STATES), I32)
+        .at[const.group_id, s.node_state]
+        .add(1)
+    )
+
+
+def _group_draw(s: SimState, occ: jax.Array, const: EngineConst) -> jax.Array:
+    """f32[G, 5] instantaneous draw from the occupancy histogram — the
+    grouped spelling of :func:`_node_power_draw` (``occ · power`` with the
+    ACTIVE column overridden by the group's current DVFS mode watts). The
+    single expression shared by the grouped fused pass and the grouped
+    legacy accrual, so the two loop shapes stay fully bit-exact."""
+    draw = occ.astype(jnp.float32) * const.tables.power
+    dvfs_on = const.policy.dvfs_enabled
+    if static_bool(dvfs_on) is not False:
+        G = s.energy.shape[0]
+        mode_w = const.dvfs_watts[jnp.arange(G), s.dvfs_mode]
+        draw = draw.at[:, ACTIVE].set(
+            jnp.where(
+                dvfs_on,
+                occ[:, ACTIVE].astype(jnp.float32) * mode_w,
+                draw[:, ACTIVE],
+            )
+        )
+    return draw
 
 
 def _kahan_add(energy, comp, delta):
@@ -408,7 +474,8 @@ def _queue_window(s: SimState, W: int) -> jax.Array:
     return window[:W]
 
 
-def _try_allocate(s, const, cfg, j, shadow, extra):
+def _try_allocate(s, const, cfg, j, shadow, extra,
+                  order=None, ready_f=None, okey=None):
     """Attempt to allocate job j. Returns (ok, new_state, ready_max).
 
     shadow < 0 means head-phase (no backfill constraint).
@@ -418,8 +485,10 @@ def _try_allocate(s, const, cfg, j, shadow, extra):
     ``order_key`` term is dropped, reproducing the homogeneous tie-breaking
     ``(ready, nid)``; with ``"cheap"`` the per-node ``const.order_key``
     (active watts per unit work, lower first) steers allocation onto
-    cheap/fast nodes, and with ``"idle-watts"`` the key is the node's idle
-    draw (prefer nodes that are cheapest to leave powered).
+    cheap/fast nodes, with ``"idle-watts"`` the key is the node's idle
+    draw (prefer nodes that are cheapest to leave powered), and with
+    ``"pack"`` it is the per-pass dynamic packing key (``okey``, from
+    :func:`repro.core.policy.pack_key`).
 
     The ready times come from the traced ``const.policy.eager_ready`` flag
     (see :func:`_ready_times`): under an eager policy every eligible node has
@@ -429,25 +498,57 @@ def _try_allocate(s, const, cfg, j, shadow, extra):
     of the ready-time table. (The pre-traced-axis engine special-cased the
     eager path to an O(N) cumsum; that specialization is the price of the
     one-compile policy grid, see SEMANTICS.md §Traced vs static.)
+
+    Grouped-tables path (§Group-indexed tables): ``order`` is the node
+    order hoisted out of the attempt loop by ``_scheduler_pass`` (the
+    per-pass sort — or the precomputed ``tables.perm``, zero sorts, when
+    the policy is statically eager). Selection is then a masked cumsum
+    over ``order`` — the first ``res_j`` *eligible* nodes in order — which
+    picks the same nodes as the dense per-attempt masked argsorts: the
+    sort keys of still-eligible nodes are loop-invariant within a pass
+    (allocation only reserves nodes or wakes SLEEP→SWITCHING_ON, both of
+    which make the node ineligible and, for the aware ready column, leave
+    its ready time t+t_on unchanged), a stable sort preserves the relative
+    order of the eligible subsequence, and the cumsum skips the
+    interleaved ineligible nodes the masked sort would have pushed to the
+    end. ``ready_f`` is the pass-hoisted ready-time vector (None under a
+    statically eager policy, where every chosen node is ready at ``t``);
+    ``ready_max`` agrees with the dense spelling wherever ``ok`` can be
+    True — the only place it is consumed.
     """
     eligible = s.node_job < 0
     res_j = s.job_res[j]
     n_elig = jnp.sum(eligible, dtype=I32)
-    ready = _ready_times(s, const)
-    key = jnp.where(eligible, ready, INF)
-    if cfg.node_order != "id":
-        # lexicographic (ready, order_key, nid): stable argsort by the
-        # secondary key first, then by ready over that permutation
-        perm1 = jnp.argsort(
-            jnp.where(eligible, const.order_key, jnp.inf), stable=True
-        )
-        order = perm1[jnp.argsort(key[perm1], stable=True)]
+    if order is not None:
+        es = eligible[order]
+        csum = jnp.cumsum(es.astype(I32))
+        sel_sorted = es & (csum <= res_j)
+        chosen = jnp.zeros_like(eligible).at[order].set(sel_sorted)
+        if ready_f is None:  # statically eager: chosen nodes are ready now
+            ready_max = s.t
+        else:
+            ready_max = jnp.max(
+                jnp.where(sel_sorted, ready_f[order], -1)
+            ).astype(I32)
     else:
-        order = jnp.argsort(key, stable=True)  # ties -> lowest node id
-    sorted_sel = jnp.arange(key.shape[0]) < res_j
-    ready_sorted = key[order]
-    ready_max = jnp.max(jnp.where(sorted_sel, ready_sorted, -1)).astype(I32)
-    chosen = jnp.zeros_like(eligible).at[order].set(sorted_sel) & eligible
+        ready = _ready_times(s, const)
+        key = jnp.where(eligible, ready, INF)
+        if cfg.node_order != "id":
+            # lexicographic (ready, order_key, nid): stable argsort by the
+            # secondary key first, then by ready over that permutation
+            k2 = const.order_key if okey is None else okey
+            perm1 = jnp.argsort(
+                jnp.where(eligible, k2, jnp.inf), stable=True
+            )
+            aorder = perm1[jnp.argsort(key[perm1], stable=True)]
+        else:
+            aorder = jnp.argsort(key, stable=True)  # ties -> lowest node id
+        sorted_sel = jnp.arange(key.shape[0]) < res_j
+        ready_sorted = key[aorder]
+        ready_max = jnp.max(
+            jnp.where(sorted_sel, ready_sorted, -1)
+        ).astype(I32)
+        chosen = jnp.zeros_like(eligible).at[aorder].set(sorted_sel) & eligible
     pred_completion = ready_max + s.job_reqtime[j]
     bf_ok = (shadow < 0) | (pred_completion <= shadow) | (res_j <= extra)
     ok = (n_elig >= res_j) & bf_ok
@@ -490,15 +591,21 @@ def _shadow(s: SimState, const: EngineConst, head: jax.Array):
     return S, E
 
 
-def _sched_attempt(s, const, cfg, j, can_try, shadow, extra, blocked, bf, backfill):
+def _sched_attempt(s, const, cfg, j, can_try, shadow, extra, blocked, bf, backfill,
+                   order=None, ready_f=None, okey=None):
     """One window-slot attempt: the shared body of both scheduler loops.
 
     Returns the updated (s, shadow, extra, blocked) carry. ``can_try`` gates
     the attempt (the early-exit loop passes True: its cond already encodes
     validity and the FCFS blocked latch); ``bf``/``backfill`` are the
-    static/traced spellings of the policy's backfill flag.
+    static/traced spellings of the policy's backfill flag;
+    ``order``/``ready_f``/``okey`` are the pass-hoisted allocation inputs
+    (see :func:`_try_allocate`), passed through untouched.
     """
-    ok, s_new, _ = _try_allocate(s, const, cfg, _clamp_job(j), shadow, extra)
+    ok, s_new, _ = _try_allocate(
+        s, const, cfg, _clamp_job(j), shadow, extra,
+        order=order, ready_f=ready_f, okey=okey,
+    )
     take = can_try & ok
     s = jax.tree_util.tree_map(
         lambda a, b: jnp.where(take, b, a), s, s_new
@@ -546,53 +653,109 @@ def _scheduler_pass(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimSt
     per-batch cost proportional to the *live* queue, not the static W. The
     legacy ``fori_loop`` attempts every slot; both are bit-exact (a -1 slot
     or a latched-blocked FCFS attempt never changes state).
+
+    Grouped tables (§Group-indexed tables): the allocation order is hoisted
+    out of the attempt loop — computed once per pass here (zero sorts under
+    a statically eager policy, where ``tables.perm`` IS the order) and
+    consumed by the cumsum selection in :func:`_try_allocate`. Sound
+    because the sort keys of still-eligible nodes are loop-invariant
+    within a pass (argument at :func:`_try_allocate`).
+
+    Burst merging (``cfg.merge_bursts``, §Hot loop): the pass repeats at
+    the same timestamp while it makes progress and arrived jobs are still
+    WAITING, so a burst of more than W newly-runnable jobs drains in ONE
+    batch — each repeat sees the next W of the queue (allocated jobs left
+    WAITING, so ``_queue_window`` advances) — instead of parking the
+    remainder until the next unrelated event. Terminates because
+    ``n_allocs`` strictly increases (bounded by J). Fused and legacy loop
+    shapes stay bit-exact per label (the repeat wraps both identically);
+    the oracle mirrors the same repeat rule.
     """
-    window = _queue_window(s, cfg.window)
     backfill = const.policy.backfill
     bf = static_bool(backfill)
     W = cfg.window
-    shadow0 = jnp.asarray(-1, I32)
-    extra0 = jnp.asarray(0, I32)
 
-    if cfg.fused_events:
-        def cond(carry):
-            _, k, shadow, extra, blocked = carry
-            j = window[jnp.minimum(k, W - 1)]
-            valid = (k < W) & (j >= 0)
-            if bf is True:  # EASY: blocked never gates an attempt
-                return valid
-            if bf is False:  # FCFS: stop at the first blocked head
-                return valid & ~blocked
-            return valid & (backfill | ~blocked)
+    def pass_inputs(s):
+        """Per-pass hoisted allocation inputs (order, ready_f, okey)."""
+        okey = pack_key(s, const) if cfg.node_order == "pack" else None
+        if not cfg.grouped_tables:
+            return None, None, okey
+        base = (
+            jnp.argsort(okey, stable=True)
+            if okey is not None
+            else const.tables.perm
+        )
+        if static_bool(const.policy.eager_ready) is True:
+            return base, None, okey  # every eligible node is ready at t
+        ready_f = _ready_times(s, const)
+        return base[jnp.argsort(ready_f[base], stable=True)], ready_f, okey
 
-        def wbody(carry):
-            s, k, shadow, extra, blocked = carry
-            j = window[jnp.minimum(k, W - 1)]
-            s, shadow, extra, blocked = _sched_attempt(
-                s, const, cfg, j, True, shadow, extra, blocked, bf, backfill
+    def run_pass(s):
+        window = _queue_window(s, W)
+        order, ready_f, okey = pass_inputs(s)
+        shadow0 = jnp.asarray(-1, I32)
+        extra0 = jnp.asarray(0, I32)
+
+        if cfg.fused_events:
+            def cond(carry):
+                _, k, shadow, extra, blocked = carry
+                j = window[jnp.minimum(k, W - 1)]
+                valid = (k < W) & (j >= 0)
+                if bf is True:  # EASY: blocked never gates an attempt
+                    return valid
+                if bf is False:  # FCFS: stop at the first blocked head
+                    return valid & ~blocked
+                return valid & (backfill | ~blocked)
+
+            def wbody(carry):
+                s, k, shadow, extra, blocked = carry
+                j = window[jnp.minimum(k, W - 1)]
+                s, shadow, extra, blocked = _sched_attempt(
+                    s, const, cfg, j, True, shadow, extra, blocked, bf,
+                    backfill, order=order, ready_f=ready_f, okey=okey,
+                )
+                return s, k + 1, shadow, extra, blocked
+
+            s, _, _, _, _ = jax.lax.while_loop(
+                cond,
+                wbody,
+                (s, jnp.asarray(0, I32), shadow0, extra0, jnp.bool_(False)),
             )
-            return s, k + 1, shadow, extra, blocked
+            return s
 
-        s, _, _, _, _ = jax.lax.while_loop(
-            cond,
-            wbody,
-            (s, jnp.asarray(0, I32), shadow0, extra0, jnp.bool_(False)),
+        def body(k, carry):
+            s, shadow, extra, blocked = carry
+            j = window[k]
+            valid = j >= 0
+            # specialized EASY: blocked never gates an attempt (backfill|..)
+            can_try = valid if bf else valid & (backfill | ~blocked)
+            return _sched_attempt(
+                s, const, cfg, j, can_try, shadow, extra, blocked, bf,
+                backfill, order=order, ready_f=ready_f, okey=okey,
+            )
+
+        s, _, _, _ = jax.lax.fori_loop(
+            0, W, body, (s, shadow0, extra0, jnp.bool_(False))
         )
         return s
 
-    def body(k, carry):
-        s, shadow, extra, blocked = carry
-        j = window[k]
-        valid = j >= 0
-        # specialized EASY: blocked never gates an attempt (backfill | ...)
-        can_try = valid if bf else valid & (backfill | ~blocked)
-        return _sched_attempt(
-            s, const, cfg, j, can_try, shadow, extra, blocked, bf, backfill
-        )
+    if not cfg.merge_bursts:
+        return run_pass(s)
 
-    s, _, _, _ = jax.lax.fori_loop(
-        0, W, body, (s, shadow0, extra0, jnp.bool_(False))
-    )
+    def mcond(carry):
+        _, go = carry
+        return go
+
+    def mbody(carry):
+        s, _ = carry
+        before = s.n_allocs
+        s = run_pass(s)
+        more = (s.n_allocs > before) & jnp.any(
+            (s.job_status == WAITING) & (s.job_subtime <= s.t)
+        )
+        return s, more
+
+    s, _ = jax.lax.while_loop(mcond, mbody, (s, jnp.bool_(True)))
     return s
 
 
@@ -786,12 +949,16 @@ def _node_power_draw(s: SimState, const: EngineConst) -> jax.Array:
 class EventAux(NamedTuple):
     """Byproducts of the fused event pass, consumed by :func:`accrue_energy`
     and the quiet-batch dispatch (core/SEMANTICS.md §Hot loop). Exactly one
-    of ``node_power`` (fused-XLA path, bit-exact) / ``draw`` (Pallas-kernel
-    path, per-(group, state) watts) is set; the other is None (an empty
-    pytree subtree, so the while-loop carry structure stays static)."""
+    of ``node_power`` (dense fused-XLA path, bit-exact) / ``draw``
+    (kernel or grouped path, per-(group, state) watts) is set; the other is
+    None (an empty pytree subtree, so the while-loop carry structure stays
+    static). ``occ`` accompanies ``draw`` on the grouped-tables path only
+    (§Group-indexed tables): the occupancy histogram the draw was contracted
+    from, stored back into ``SimState.occ`` at accrual."""
 
     node_power: Optional[jax.Array]  # f32[N] per-node draw (XLA path)
-    draw: Optional[jax.Array]  # f32[G, 5] per-state draw (kernel path)
+    draw: Optional[jax.Array]  # f32[G, 5] per-state draw (kernel/grouped)
+    occ: Optional[jax.Array]  # i32[G, 5] occupancy (grouped path only)
     quiet: jax.Array  # bool: next batch is transitions/expiries only
 
 
@@ -872,25 +1039,49 @@ def event_horizon(
     The default CPU path computes the draw via :func:`_node_power_draw` —
     the identical expression ``accrue_energy`` used to inline, so it is
     bit-exact, and the fusion win is reuse, not rewriting.
+
+    Grouped tables (§Group-indexed tables) lift the single-group kernel
+    gate: the pass reduces the node arrays to the [G, 5] occupancy
+    histogram (Pallas ``event_fuse_occ`` on TPU — counts are exact in f32
+    — or one XLA scatter-add) and contracts it with the [G, 5] group power
+    table via :func:`_group_draw`, DVFS included; every downstream consumer
+    is then G-sized.
     """
     pp = const.policy
     G = s.energy.shape[0]
-    use_kernel = (
-        _fused_kernel_on(cfg)
-        and G == 1
-        and static_bool(pp.dvfs_enabled) is False
-    )
-    if use_kernel:
-        from repro.kernels import ops  # lazy: keep the engine importable alone
+    aux_occ = None
+    if cfg.grouped_tables:
+        if _fused_kernel_on(cfg):
+            from repro.kernels import ops  # lazy: keep engine importable alone
 
-        draw8, tr_v = ops.event_fuse_ledger(
-            s.node_state[None], s.node_until[None], s.t[None], const.power[0]
-        )
-        aux_power, aux_draw = None, draw8[:, :N_STATES]
-        tr = tr_v[0]
+            occ8, tr_v = ops.event_fuse_occ(
+                s.node_state[None], s.node_until[None], s.t[None],
+                const.group_id, G,
+            )
+            aux_occ = occ8[0, :, :N_STATES].astype(I32)
+            tr = tr_v[0]
+        else:
+            aux_occ = _occupancy(s, const)
+            tr = _next_transition(s)
+        aux_power, aux_draw = None, _group_draw(s, aux_occ, const)
     else:
-        aux_power, aux_draw = _node_power_draw(s, const), None
-        tr = _next_transition(s)
+        use_kernel = (
+            _fused_kernel_on(cfg)
+            and G == 1
+            and static_bool(pp.dvfs_enabled) is False
+        )
+        if use_kernel:
+            from repro.kernels import ops  # lazy: keep engine importable alone
+
+            draw8, tr_v = ops.event_fuse_ledger(
+                s.node_state[None], s.node_until[None], s.t[None],
+                const.power[0],
+            )
+            aux_power, aux_draw = None, draw8[:, :N_STATES]
+            tr = tr_v[0]
+        else:
+            aux_power, aux_draw = _node_power_draw(s, const), None
+            tr = _next_transition(s)
     arr, fin, policy_cands = _time_candidates(s, const)
     cands = [arr, fin, tr] + [jnp.where(c > s.t, c, INF) for c in policy_cands]
     nt = functools.reduce(jnp.minimum, cands).astype(I32)
@@ -902,7 +1093,9 @@ def event_horizon(
         quiet = (arr > nt) & (fin > nt) & ~busy
     else:
         quiet = jnp.asarray(False)
-    return nt, EventAux(node_power=aux_power, draw=aux_draw, quiet=quiet)
+    return nt, EventAux(
+        node_power=aux_power, draw=aux_draw, occ=aux_occ, quiet=quiet
+    )
 
 
 def accrue_energy(
@@ -915,7 +1108,40 @@ def accrue_energy(
     dvfs_on = const.policy.dvfs_enabled
     dvfs_b = static_bool(dvfs_on)
     mode_time, mode_energy = s.mode_time, s.mode_energy
-    if aux is not None and aux.draw is not None:
+    occ_new = None
+    if aux is not None and aux.occ is not None:
+        # grouped fused path (§Group-indexed tables): the [G, 5] draw is
+        # already contracted from the occupancy histogram; the DVFS mode
+        # ledgers come from the same G-sized quantities (the draw's ACTIVE
+        # column is the group's current-mode watts by construction)
+        occ_new = aux.occ
+        delta = aux.draw * dt
+        if dvfs_b is not False:
+            G = s.energy.shape[0]
+            gi = jnp.arange(G)
+            mode_time = s.mode_time.at[gi, s.dvfs_mode].add(
+                jnp.where(dvfs_on, dt, 0.0)
+            )
+            mode_energy = s.mode_energy.at[gi, s.dvfs_mode].add(
+                jnp.where(dvfs_on, aux.draw[:, ACTIVE] * dt, 0.0)
+            )
+    elif const.tables is not None:
+        # grouped legacy loop: the identical expressions as the fused
+        # spelling above (_occupancy + _group_draw), so the two grouped
+        # loop shapes are fully bit-exact, energy included
+        occ_new = _occupancy(s, const)
+        draw = _group_draw(s, occ_new, const)
+        delta = draw * dt
+        if dvfs_b is not False:
+            G = s.energy.shape[0]
+            gi = jnp.arange(G)
+            mode_time = s.mode_time.at[gi, s.dvfs_mode].add(
+                jnp.where(dvfs_on, dt, 0.0)
+            )
+            mode_energy = s.mode_energy.at[gi, s.dvfs_mode].add(
+                jnp.where(dvfs_on, draw[:, ACTIVE] * dt, 0.0)
+            )
+    elif aux is not None and aux.draw is not None:
         # fused-kernel path: the per-(group, state) draw is already reduced
         # on device; only reachable with DVFS statically off (§Hot loop), so
         # the mode ledgers stay untouched by construction
@@ -957,6 +1183,7 @@ def accrue_energy(
     return s._replace(
         energy=e, energy_c=c, mode_time=mode_time, mode_energy=mode_energy,
         wait_integral=w, wait_c=wc,
+        occ=s.occ if occ_new is None else occ_new,
     )
 
 
@@ -1142,6 +1369,9 @@ def _static_trace_key(platform, config, J, cap):
         # hot-loop structure (§Hot loop): the loop shape and the resolved
         # kernel routing are trace structure
         config.fused_events, _fused_kernel_on(config),
+        # §Group-indexed tables: the grouped/dense path choice and the
+        # burst-merging pass-repeat loop are trace structure
+        config.grouped_tables, config.merge_bursts,
         platform.nb_nodes, platform.n_groups(), platform.n_dvfs_modes(),
         J, cap,
     )
@@ -1328,6 +1558,12 @@ def _scenario_const(
             t = sc.pop("timeout")
             t = int(INF_TIME) if t is None else int(t)
             const = const._replace(timeout=jnp.asarray(t, I32))
+        if "tables" in sc:
+            raise TypeError(
+                "sweep scenarios cannot override 'tables' directly — the "
+                "grouped tables are derived from the platform "
+                "(core/tables.py); pass a PlatformSpec scenario instead"
+            )
         unknown = sorted(k for k in sc if k not in EngineConst._fields)
         if unknown:
             raise TypeError(

@@ -182,6 +182,33 @@ def ipm_wake(s, const, enabled=True):
     )
 
 
+def pack_key(s, const):
+    """f32[N] queue-aware allocation key for ``node_order="pack"``.
+
+    Prefer groups with the FEWEST currently-idle unreserved nodes, so jobs
+    pack into nearly-full groups and lightly-used groups drain to empty —
+    whole-group sleepable under rule 6 (core/SEMANTICS.md §Node selection
+    order). Nodes that are idle-and-unreserved right now sort strictly
+    before every other eligible node (sleeping/transitioning nodes carry a
+    ``N + 1`` band offset), so packing never wakes a sleeping group while
+    idle capacity remains. Recomputed ONCE per scheduler pass and frozen
+    across the pass's attempts (the loop-invariance the grouped hoisted
+    order requires; the oracle's ``_pack_key`` freezes identically).
+    Exact in f32: values are integer counts plus one band offset,
+    <= 2N + 1 << 2**24. Twin of the oracle's ``_pack_key``.
+    """
+    G = s.energy.shape[0]
+    N = s.node_state.shape[0]
+    idle_unres = (s.node_job < 0) & (s.node_state == IDLE)
+    counts = (
+        jnp.zeros(G, jnp.float32)
+        .at[const.group_id]
+        .add(idle_unres.astype(jnp.float32))
+    )
+    band = jnp.where(idle_unres, jnp.float32(0), jnp.float32(N + 1))
+    return counts[const.group_id] + band
+
+
 def _select_longest_idle(cand, idle_since, k):
     """Boolean mask of the k longest-idle candidates (ties by node id)."""
     key = jnp.where(cand, idle_since, INF)

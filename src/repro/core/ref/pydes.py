@@ -95,10 +95,19 @@ class PyDES:
         self.speed = platform.node_speed()  # f32[N]
         if config.node_order == "idle-watts":
             self.okey = self.power[:, IDLE]  # f32[N] idle draw
+        elif config.node_order == "pack":
+            # dynamic packing key, recomputed per scheduler pass (twin of
+            # policy.pack_key); the static key is unused
+            self.okey = np.zeros(platform.nb_nodes, np.float32)
         else:
             self.okey = platform.node_order_key()  # f32[N]
+        self._pack: Optional[np.ndarray] = None  # frozen per-pass pack key
         self.gid = platform.node_group_id()  # i32[N]
         self.n_groups = platform.n_groups()
+        # per-group power rows for the grouped-tables accrual (groups are
+        # internally uniform by construction — core/tables.py validates the
+        # same invariant on the engine side)
+        self.group_power = [g.power_table() for g in platform.groups()]
         # runtime DVFS mode tables + state (core/SEMANTICS.md §DVFS)
         self.dvfs_speed, self.dvfs_watts, self.dvfs_n_modes = (
             platform.group_dvfs_tables()
@@ -170,9 +179,53 @@ class PyDES:
 
     def _sort_key(self, nd: _Node):
         """Allocation order (SEMANTICS.md §Heterogeneity): (ready, [key,] nid)."""
+        if self.cfg.node_order == "pack":
+            return (self._ready(nd), self._pack[nd.nid], nd.nid)
         if self.cfg.node_order != "id":
             return (self._ready(nd), self.okey[nd.nid], nd.nid)
         return (self._ready(nd), nd.nid)
+
+    def _pack_key(self) -> np.ndarray:
+        """f32[N] queue-aware packing key — twin of ``policy.pack_key``.
+
+        Fewest-idle groups first; currently-idle unreserved nodes sort
+        strictly before sleeping/transitioning ones (N + 1 band offset).
+        Frozen for the duration of one scheduler pass.
+        """
+        N = len(self.nodes)
+        counts = [0] * self.n_groups
+        for nd in self.nodes:
+            if nd.job < 0 and nd.state == IDLE:
+                counts[int(self.gid[nd.nid])] += 1
+        key = np.zeros(N, np.float32)
+        for nd in self.nodes:
+            band = 0 if (nd.job < 0 and nd.state == IDLE) else N + 1
+            key[nd.nid] = np.float32(counts[int(self.gid[nd.nid])] + band)
+        return key
+
+    def _occupancy(self) -> List[List[int]]:
+        """[G][5] per-(group, state) node histogram — twin of the engine's
+        ``_occupancy`` (core/SEMANTICS.md §Group-indexed tables)."""
+        occ = [[0] * 5 for _ in range(self.n_groups)]
+        for nd in self.nodes:
+            occ[int(self.gid[nd.nid])][nd.state] += 1
+        return occ
+
+    def _group_draw(self, occ: List[List[int]]) -> List[List[float]]:
+        """[G][5] occupancy-weighted watts (occ · power, DVFS-aware) —
+        twin of the engine's ``_group_draw``; f64 here vs the engine's f32
+        contraction, so parity is to rounding like the dense path."""
+        dvfs_on = self.pp.dvfs_enabled
+        draw = [[0.0] * 5 for _ in range(self.n_groups)]
+        for g in range(self.n_groups):
+            row = self.group_power[g]
+            for st in range(5):
+                w = float(row[st])
+                if dvfs_on and st == ACTIVE:
+                    # ACTIVE draw follows the group's DVFS mode (§DVFS)
+                    w = float(self.dvfs_watts[g, self.mode[g]])
+                draw[g][st] = w * occ[g][st]
+        return draw
 
     def _gantt_mark(self, nd: _Node) -> None:
         if not self.cfg.record_gantt:
@@ -235,26 +288,44 @@ class PyDES:
 
     # ---------- one scheduler pass (rule 4) ----------
     def _scheduler_pass(self) -> None:
-        self.counters["scheduling"] += 1
-        queue = [
-            j
-            for j in self.jobs
-            if j.status == WAITING and j.subtime <= self.t
-        ][: self.cfg.window]
-        shadow = extra = None
-        for j in queue:
-            if shadow is None:
-                ok = self._try_allocate(j, None, None)
-                if not ok:
-                    if not self.pp.backfill:  # FCFS: stop at first failure
+        # merge_bursts mirrors the engine's repeat rule exactly: re-run the
+        # pass at the same t while it allocated something AND arrived
+        # WAITING jobs remain, so a burst wider than the window W drains in
+        # one batch. Only the pass repeats — job starts (rule 5) still run
+        # once per batch, after it.
+        while True:
+            self.counters["scheduling"] += 1
+            if self.cfg.node_order == "pack":
+                self._pack = self._pack_key()  # frozen for this pass
+            queue = [
+                j
+                for j in self.jobs
+                if j.status == WAITING and j.subtime <= self.t
+            ][: self.cfg.window]
+            shadow = extra = None
+            n_alloc = 0
+            for j in queue:
+                if shadow is None:
+                    ok = self._try_allocate(j, None, None)
+                    if ok:
+                        n_alloc += 1
+                    elif not self.pp.backfill:  # FCFS: stop at first failure
                         break
-                    shadow, extra = self._shadow(j)
-            else:
-                if self._try_allocate(j, shadow, extra):
-                    # S stays fixed for the batch; backfilled job consumed
-                    # res of the extra nodes
-                    extra = max(0, extra - j.res)
-        return
+                    else:
+                        shadow, extra = self._shadow(j)
+                else:
+                    if self._try_allocate(j, shadow, extra):
+                        # S stays fixed for the batch; backfilled job
+                        # consumed res of the extra nodes
+                        n_alloc += 1
+                        extra = max(0, extra - j.res)
+            if not self.cfg.merge_bursts or n_alloc == 0:
+                return
+            if not any(
+                j.status == WAITING and j.subtime <= self.t
+                for j in self.jobs
+            ):
+                return
 
     # ---------- job starts (rule 5) ----------
     def _start_jobs(self) -> None:
@@ -461,14 +532,24 @@ class PyDES:
         if dt <= 0:
             return
         dvfs_on = self.pp.dvfs_enabled
-        for nd in self.nodes:
-            g = int(self.gid[nd.nid])
-            draw = float(self.power[nd.nid, nd.state])
-            if dvfs_on and nd.state == ACTIVE:
-                # ACTIVE draw follows the group's current DVFS mode (§DVFS)
-                draw = float(self.dvfs_watts[g, self.mode[g]])
-                self.mode_energy[g][self.mode[g]] += draw * dt
-            self.energy_by_group[g][nd.state] += draw * dt
+        if self.cfg.grouped_tables:
+            # grouped accrual — the contraction occ[G, 5] · power[G, 5]
+            # instead of the dense per-node sum
+            draw = self._group_draw(self._occupancy())
+            for g in range(self.n_groups):
+                for st in range(5):
+                    self.energy_by_group[g][st] += draw[g][st] * dt
+                if dvfs_on:
+                    self.mode_energy[g][self.mode[g]] += draw[g][ACTIVE] * dt
+        else:
+            for nd in self.nodes:
+                g = int(self.gid[nd.nid])
+                draw = float(self.power[nd.nid, nd.state])
+                if dvfs_on and nd.state == ACTIVE:
+                    # ACTIVE draw follows the group's DVFS mode (§DVFS)
+                    draw = float(self.dvfs_watts[g, self.mode[g]])
+                    self.mode_energy[g][self.mode[g]] += draw * dt
+                self.energy_by_group[g][nd.state] += draw * dt
         if dvfs_on:
             for g in range(self.n_groups):
                 self.mode_time[g][self.mode[g]] += dt

@@ -1,0 +1,132 @@
+"""Group-indexed platform tables (core/SEMANTICS.md §Group-indexed tables).
+
+At CEA-Curie scale (11,200 nodes) the engine's dense per-node tables
+(``power[N, 5]``, ``speed[N]``, ``t_on/t_off[N]``) make every event batch
+pay O(N) — and the per-attempt allocation argsorts pay O(N log N) — even
+though a real platform has only G ~ dozens of *distinct* node kinds.
+:class:`GroupTables` lowers a :class:`~repro.workloads.platform.PlatformSpec`
+to per-group arrays so the hot reductions scale with G instead:
+
+- energy accrual becomes the contraction ``occ[G, 5] · power[G, 5]`` over
+  the per-(group, state) occupancy histogram carried in ``SimState.occ``,
+- allocation hoists its node order out of the per-attempt loop — one
+  (often zero) argsort per scheduler pass instead of two per attempt
+  (the order-hoisting argument is spelled out in
+  ``engine._scheduler_pass``) — selecting nodes by a masked cumsum,
+- the DVFS mode tables are *already* group-indexed in ``EngineConst``
+  (``dvfs_speed/dvfs_watts[G, M]``); ``GroupTables`` completes the set.
+
+The dense path stays in the engine verbatim as the bit-exact baseline;
+``EngineConfig.grouped_tables`` (static, part of ``_static_trace_key``)
+selects between them. Every ``GroupTables`` member is a *traced operand*
+(platform sweeps vmap; only G itself is a shape).
+
+Groups must be internally uniform for the lowering to be exact —
+:func:`group_tables` verifies this on the host and refuses a platform
+whose per-node tables vary within a group (possible via the per-node JSON
+schema) rather than silently averaging.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import ACTIVE, IDLE
+from repro.workloads.platform import PlatformSpec
+
+__all__ = ["GroupTables", "group_tables"]
+
+
+class GroupTables(NamedTuple):
+    """Per-group platform tables + the static allocation order.
+
+    ``perm`` is the one per-*node* member: the host-precomputed stable
+    argsort of ``(order_key, nid)`` (identity for ``node_order="id"`` and
+    the dynamic ``"pack"`` key). Under a statically-eager policy every
+    eligible node is ready at ``t``, so ``perm`` IS the allocation order
+    and the scheduler pass runs sort-free; transition-aware/traced
+    policies re-sort ``perm`` by ready time once per pass.
+    """
+
+    count: jax.Array  # i32[G] nodes per group
+    start: jax.Array  # i32[G] first node id of group (ids contiguous)
+    power: jax.Array  # f32[G, 5] per-state watts
+    t_on: jax.Array  # i32[G] switch-on delay (s)
+    t_off: jax.Array  # i32[G] switch-off delay (s)
+    speed: jax.Array  # f32[G] compute speed
+    order_key: jax.Array  # f32[G] allocation preference (lower first)
+    perm: jax.Array  # i32[N] static node order by (order_key, nid)
+
+
+def _uniform_rows(name: str, table: np.ndarray, gid: np.ndarray, G: int):
+    """First row of each group, verifying the table is constant per group."""
+    starts = np.searchsorted(gid, np.arange(G))
+    rep = table[starts]
+    if not np.array_equal(table, rep[gid]):
+        raise ValueError(
+            f"grouped tables need per-group-uniform platforms, but "
+            f"{name!r} varies within a node group (per-node JSON platforms "
+            "with intra-group variation must use the dense path: "
+            "EngineConfig(grouped_tables=False))"
+        )
+    return rep
+
+
+def group_tables(platform: PlatformSpec, config) -> GroupTables:
+    """Lower ``platform`` to :class:`GroupTables` (host-side numpy).
+
+    ``config`` contributes only ``node_order`` — the spelling of the
+    static allocation key, matching ``engine.make_const``'s dense
+    ``order_key``: ``"idle-watts"`` keys on idle draw, ``"cheap"`` on
+    active watts per unit work, and ``"id"``/``"pack"`` carry no static
+    key (identity ``perm``; ``"pack"``'s key is per-pass dynamic state).
+    """
+    N = platform.nb_nodes
+    G = platform.n_groups()
+    gid = np.asarray(platform.node_group_id(), np.int32)
+    counts = np.bincount(gid, minlength=G).astype(np.int32)
+    starts = np.concatenate(([0], np.cumsum(counts)[:-1])).astype(np.int32)
+    if platform.node_groups:
+        power = _uniform_rows(
+            "power", np.asarray(platform.node_power_table(), np.float32),
+            gid, G,
+        )
+        t_on = _uniform_rows(
+            "t_on", np.asarray(platform.node_t_switch_on(), np.int32), gid, G
+        )
+        t_off = _uniform_rows(
+            "t_off", np.asarray(platform.node_t_switch_off(), np.int32),
+            gid, G,
+        )
+        speed = _uniform_rows(
+            "speed", np.asarray(platform.node_speed(), np.float32), gid, G
+        )
+    else:
+        power = np.asarray(platform.power_table(), np.float32)[None, :]
+        t_on = np.asarray([platform.t_switch_on], np.int32)
+        t_off = np.asarray([platform.t_switch_off], np.int32)
+        speed = np.asarray([platform.speed()], np.float32)
+    # the same f32 key expressions as engine.make_const's dense order_key
+    if config.node_order == "idle-watts":
+        okey_g = power[:, IDLE].astype(np.float32)
+    else:
+        okey_g = (power[:, ACTIVE] / speed).astype(np.float32)
+    if config.node_order in ("id", "pack"):
+        # no static key: identity order (ties by node id); "pack"'s
+        # fewest-idle key is dynamic state, re-keyed per scheduler pass
+        perm = np.arange(N, dtype=np.int32)
+    else:
+        perm = np.argsort(okey_g[gid], kind="stable").astype(np.int32)
+    return GroupTables(
+        count=jnp.asarray(counts),
+        start=jnp.asarray(starts),
+        power=jnp.asarray(power),
+        t_on=jnp.asarray(t_on),
+        t_off=jnp.asarray(t_off),
+        speed=jnp.asarray(speed),
+        order_key=jnp.asarray(okey_g),
+        perm=jnp.asarray(perm),
+    )

@@ -73,6 +73,10 @@ class EngineConfig:
     #   "id"         — (ready, nid): the homogeneous tie-breaking, O(N) path
     #   "cheap"      — (ready, order_key, nid): active watts per unit work
     #   "idle-watts" — (ready, idle_watts, nid): cheapest-to-leave-idle first
+    #   "pack"       — (ready, idle_in_group, nid): queue-aware packing —
+    #                  prefer groups with the fewest idle nodes so sparsely
+    #                  used groups drain and become whole-group sleepable;
+    #                  the key is recomputed once per scheduler pass
     node_order: str = "id"
     record_gantt: bool = False
     gantt_capacity: int = 0  # 0 -> auto
@@ -88,8 +92,27 @@ class EngineConfig:
     # only; the XLA spelling is the right choice on CPU hosts).
     fused_events: bool = True
     fused_kernel: Optional[bool] = None
+    # group-indexed tables (core/SEMANTICS.md §Group-indexed tables):
+    # lower the platform to per-group arrays (core/tables.py) and carry a
+    # [G, 5] occupancy histogram in SimState so energy accrual and the
+    # fused event pass do O(G) work instead of O(N), and the scheduler
+    # pass hoists its node order out of the per-attempt loop. Schedule
+    # bit-exact vs the dense path; energy agrees to f32 rounding (count x
+    # power contraction vs per-node scatter-add). False keeps the dense
+    # per-node path — the bit-exact baseline.
+    grouped_tables: bool = False
+    # merge same-timestamp arrival bursts (§Hot loop): when one timestamp
+    # carries more newly-runnable jobs than the window W, repeat the
+    # scheduler pass at the same t while it makes progress (and arrived
+    # WAITING jobs remain) so the whole burst is scheduled in one batch.
+    # Fused and legacy loops are bit-exact per label with the flag on, and
+    # the oracle mirrors the same repeat rule. Vs merge_bursts=False the
+    # *schedule itself* can differ (improve): without the merge, next_time
+    # is strictly future, so the burst's tail past W waits for the next
+    # unrelated event before it is even scanned.
+    merge_bursts: bool = False
 
-    NODE_ORDERS = ("id", "cheap", "idle-watts")
+    NODE_ORDERS = ("id", "cheap", "idle-watts", "pack")
 
     def __post_init__(self):
         if self.node_order not in self.NODE_ORDERS:

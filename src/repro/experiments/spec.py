@@ -46,6 +46,11 @@ def check_workload_keys(spec: Mapping) -> None:
     check_unknown_keys(spec, known, "workload spec")
 
 
+_KNOWN_SWF_KEYS = {
+    "swf", "nb_nodes", "procs_per_node", "oversize", "max_jobs", "rebase",
+}
+
+
 def resolve_workload(spec, replication: int = 0) -> Workload:
     """Workload from a declarative spec.
 
@@ -53,16 +58,44 @@ def resolve_workload(spec, replication: int = 0) -> Workload:
     * ``{"preset": <name>, ...GeneratorConfig overrides}`` — preset with
       overrides (e.g. ``n_jobs``),
     * ``{...GeneratorConfig fields}`` — a full generator config,
+    * ``"swf:<path>"`` — SWF trace replay with the default adaptation
+      (``traces.replay_workload``: platform sized from the trace header,
+      submit times rebased to 0),
+    * ``{"swf": <path>, ...replay_workload kwargs}`` — replay with
+      explicit ``nb_nodes``/``procs_per_node``/``oversize``/``max_jobs``/
+      ``rebase``,
     * ``"profiles"`` — the model-training job-profile workload,
     * a path to a workload JSON file, or an in-memory :class:`Workload`.
 
     ``replication`` offsets the generator seed (replication r uses
-    ``seed + r``); file-backed and in-memory workloads reject r > 0 —
-    there is nothing to vary.
+    ``seed + r``); file-backed, trace-replay, and in-memory workloads
+    reject r > 0 — there is nothing to vary.
     """
     gcfg = None
     if isinstance(spec, str) and spec.startswith("preset:"):
         gcfg = PRESETS[spec.split(":", 1)[1]]
+    elif isinstance(spec, str) and spec.startswith("swf:"):
+        if replication:
+            raise ValueError(
+                f"workload spec {spec!r} is a trace replay; replications "
+                "require a preset/generator spec (the seed is the "
+                "replicate axis)"
+            )
+        from repro.workloads.traces import replay_workload
+
+        return replay_workload(spec.split(":", 1)[1])
+    elif isinstance(spec, Mapping) and "swf" in spec:
+        if replication:
+            raise ValueError(
+                f"workload spec {spec!r} is a trace replay; replications "
+                "require a preset/generator spec (the seed is the "
+                "replicate axis)"
+            )
+        check_unknown_keys(spec, _KNOWN_SWF_KEYS, "swf workload spec")
+        from repro.workloads.traces import replay_workload
+
+        kw = dict(spec)
+        return replay_workload(kw.pop("swf"), **kw)
     elif isinstance(spec, Mapping):
         check_workload_keys(spec)
         over = dict(spec)
@@ -132,9 +165,13 @@ class Experiment:
     timeouts: Tuple[Optional[int], ...] = (None,)
     platforms: Tuple = ()  # optional named platform axis ((name, spec), ...)
     rl: Optional[dict] = None  # {"checkpoint": dir, "decision_interval": s}
-    node_order: str = "id"  # "id" | "cheap" | "idle-watts" (static)
+    node_order: str = "id"  # "id" | "cheap" | "idle-watts" | "pack"
     terminate_overrun: bool = False
     window: int = 32  # scheduler scan window (static)
+    # static engine-structure knobs (core/SEMANTICS.md §Group-indexed
+    # tables, §Hot loop) — shared by the whole grid like node_order/window
+    grouped_tables: bool = False
+    merge_bursts: bool = False
     replications: int = 1  # generator-seed replicates (seed, seed+1, ...)
     out: Optional[str] = None  # output dir for metrics.json / rows.csv
 
@@ -152,7 +189,13 @@ class Experiment:
         for label in self.schedulers:
             from_label(label)  # fail fast on unknown labels
         if isinstance(self.workload, Mapping):
-            check_workload_keys(self.workload)  # fail fast on typo'd keys
+            # fail fast on typo'd keys (swf replay specs have their own set)
+            if "swf" in self.workload:
+                check_unknown_keys(
+                    self.workload, _KNOWN_SWF_KEYS, "swf workload spec"
+                )
+            else:
+                check_workload_keys(self.workload)
         if self.rl is not None:
             check_unknown_keys(self.rl, _KNOWN_RL_KEYS, "experiment rl")
 
@@ -204,6 +247,8 @@ class Experiment:
             node_order=self.node_order,
             terminate_overrun=self.terminate_overrun,
             window=self.window,
+            grouped_tables=self.grouped_tables,
+            merge_bursts=self.merge_bursts,
         )
 
     # ---- JSON round-trip ----

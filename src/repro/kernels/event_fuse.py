@@ -110,6 +110,50 @@ def _event_ledger_kernel(
     next_ref[...] = jnp.min(masked, axis=1, keepdims=True)
 
 
+def _event_occ_kernel(
+    state_ref,  # (bE, N) i32
+    until_ref,  # (bE, N) i32
+    t_ref,  # (bE, 1) i32
+    gid_ref,  # (1, N) i32 node-group index
+    occ_ref,  # (bE, G*8) f32 per-(group, state) node counts
+    next_ref,  # (bE, 1) i32
+):
+    """Grouped-ledger variant: per-(group, state) occupancy counts.
+
+    The grouped-tables engine path (core/SEMANTICS.md §Group-indexed
+    tables) accrues energy as the contraction ``occ[G, 5] · power[G, 5]``,
+    so the fused pass emits the raw occupancy histogram instead of power
+    sums — the watts contraction (which is mode-dependent under DVFS)
+    stays in the engine. Group and state are fused into one comparison
+    key ``gid * 8 + state`` so each (g, s) cell costs one compare + one
+    row sum; padding columns carry ``gid=0, state=PAD_STATE`` and land in
+    cell (0, 7), which the wrapper slices off. Same one-read-per-row
+    structure and masked next-transition min as :func:`_event_kernel`.
+    """
+    state = state_ref[...]
+    until = until_ref[...]
+    t = t_ref[...]  # (bE, 1)
+    comb = gid_ref[...] * 8 + state  # (bE, N) via broadcast
+
+    n_cells = occ_ref.shape[1]  # G*8, static
+    cols = [
+        jnp.sum(
+            jnp.where(comb == c, 1.0, 0.0).astype(jnp.float32),
+            axis=1, keepdims=True,
+        )
+        for c in range(n_cells)
+    ]
+    occ_ref[...] = jnp.concatenate(cols, axis=1)
+
+    # --- fused masked min: next strictly-future transition completion ---
+    switching = jnp.logical_or(state == SWITCHING_ON, state == SWITCHING_OFF)
+    future = until > t  # (bE, N) broadcast over nodes
+    masked = jnp.where(
+        jnp.logical_and(switching, future), until, jnp.int32(INF_TIME)
+    )
+    next_ref[...] = jnp.min(masked, axis=1, keepdims=True)
+
+
 def _pad_inputs(node_state, node_until, t, power, block_e):
     """Pad (E, N) operands to the kernel's tile grid; PAD_STATE rows/cols
     have zero histogram weight and until=INF (masked out of the min)."""
@@ -168,6 +212,65 @@ def event_fuse(
         interpret=interpret,
     )(node_state, node_until, t2, power8)
     return draw[:e, 0], nxt[:e, 0]
+
+
+def event_fuse_occ(
+    node_state: jax.Array,  # [E, N] i32
+    node_until: jax.Array,  # [E, N] i32
+    t: jax.Array,  # [E] i32
+    group_id: jax.Array,  # [N] i32
+    n_groups: int,
+    *,
+    block_e: int = 8,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused (occupancy [E, G, 8] f32, next_transition [E]) — grouped path.
+
+    Live states occupy columns 0..4 of each group row; columns 5..7 are
+    zero (PAD_STATE contamination from lane padding lands in cell
+    ``(0, 7)`` and is zeroed below, matching the jnp reference).
+    """
+    e, n = node_state.shape
+    n_pad = pl.cdiv(n, LANES) * LANES
+    e_pad = pl.cdiv(e, block_e) * block_e
+    if n_pad != n or e_pad != e:
+        node_state = jnp.pad(
+            node_state, ((0, e_pad - e), (0, n_pad - n)),
+            constant_values=PAD_STATE,
+        )
+        node_until = jnp.pad(
+            node_until, ((0, e_pad - e), (0, n_pad - n)),
+            constant_values=int(INF_TIME),
+        )
+    t2 = jnp.pad(t[:, None], ((0, e_pad - e), (0, 0)))
+    gid2 = jnp.pad(group_id[None, :], ((0, 0), (0, n_pad - n)))
+    grid = (e_pad // block_e,)
+    occ, nxt = pl.pallas_call(
+        _event_occ_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_e, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_e, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e, n_groups * 8), lambda i: (i, 0)),
+            pl.BlockSpec((block_e, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e_pad, n_groups * 8), jnp.float32),
+            jax.ShapeDtypeStruct((e_pad, 1), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(node_state, node_until, t2, gid2)
+    occ = occ[:e].reshape(e, n_groups, 8)
+    if n_pad != n:  # pad lanes counted into the dead cell (0, PAD_STATE)
+        occ = occ.at[:, 0, PAD_STATE].set(0.0)
+    return occ, nxt[:e, 0]
 
 
 def event_fuse_ledger(

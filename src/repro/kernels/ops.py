@@ -18,6 +18,7 @@ from repro.kernels import ref
 from repro.kernels.event_fuse import LANES
 from repro.kernels.event_fuse import event_fuse as _event_fuse_kernel
 from repro.kernels.event_fuse import event_fuse_ledger as _event_ledger_kernel
+from repro.kernels.event_fuse import event_fuse_occ as _event_occ_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
 
@@ -107,6 +108,39 @@ def event_fuse(
         return ref.event_fuse_reference(node_state, node_until, t, power)
     return _event_fuse_kernel(
         node_state, node_until, t, power, block_e=block_e, interpret=interpret
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_groups", "block_e", "interpret")
+)
+def event_fuse_occ(
+    node_state, node_until, t, group_id, n_groups, *, block_e: int = 8,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused (occupancy counts [E, G, 8], next_transition [E]).
+
+    The grouped-tables hot-loop spelling (core/SEMANTICS.md §Group-indexed
+    tables): the [E, G, 8] histogram feeds ``accrue_energy``'s
+    ``occ · power`` contraction directly (live states in columns 0..4),
+    lifting the ledger variant's single-group restriction. Same fallback
+    contract as :func:`event_fuse`.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    e, n = node_state.shape
+    if e == 0 or n == 0:
+        return (
+            jnp.zeros((e, n_groups, 8), jnp.float32),
+            jnp.full((e,), int(INF_TIME), jnp.int32),
+        )
+    if _event_untileable(e, n, block_e):
+        return ref.event_fuse_occ_reference(
+            node_state, node_until, t, group_id, n_groups
+        )
+    return _event_occ_kernel(
+        node_state, node_until, t, group_id, n_groups,
+        block_e=block_e, interpret=interpret,
     )
 
 

@@ -80,6 +80,30 @@ def event_fuse_reference(
     return draw.astype(jnp.float32), jnp.min(masked, axis=1)
 
 
+def event_fuse_occ_reference(
+    node_state: jax.Array,  # [E, N] i32
+    node_until: jax.Array,  # [E, N] i32
+    t: jax.Array,  # [E] i32
+    group_id: jax.Array,  # [N] i32
+    n_groups: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """(occupancy counts [E, G, 8] f32, next transition [E] i32).
+
+    ``occ[e, g, s] = count(group == g and state == s)`` for the 5 live
+    states; columns 5..7 of each group row are zero.
+    """
+    comb = group_id[None, :] * 8 + node_state  # [E, N]
+    onehot = comb[:, :, None] == jnp.arange(
+        n_groups * 8, dtype=node_state.dtype
+    )
+    occ = jnp.sum(onehot.astype(jnp.float32), axis=1)
+    switching = (node_state == SWITCHING_ON) | (node_state == SWITCHING_OFF)
+    future = node_until > t[:, None]
+    masked = jnp.where(switching & future, node_until, jnp.int32(INF_TIME))
+    e = node_state.shape[0]
+    return occ.reshape(e, n_groups, 8), jnp.min(masked, axis=1)
+
+
 def event_fuse_ledger_reference(
     node_state: jax.Array,  # [E, N] i32
     node_until: jax.Array,  # [E, N] i32

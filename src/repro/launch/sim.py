@@ -54,7 +54,7 @@ from repro.experiments import (
 # single-run config keys (the experiment layer validates its own spec)
 _KNOWN_KEYS = {
     "workload", "platform", "scheduler", "timeout", "terminate_overrun",
-    "node_order", "rl", "gantt", "out",
+    "node_order", "rl", "gantt", "out", "grouped_tables", "merge_bursts",
 }
 _KNOWN_RL_KEYS = {"checkpoint", "decision_interval"}
 
@@ -204,6 +204,8 @@ def run(config: Dict[str, Any]) -> Dict[str, Any]:
         record_gantt=bool(config.get("gantt", True)),
         node_order=node_order,
         rl_decision_interval=rl_interval,
+        grouped_tables=bool(config.get("grouped_tables", False)),
+        merge_bursts=bool(config.get("merge_bursts", False)),
     )
     out_dir = config.get("out", "out/sim")
     os.makedirs(out_dir, exist_ok=True)

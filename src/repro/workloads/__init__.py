@@ -6,21 +6,26 @@ from the Parallel Workloads Archive are parsed by :mod:`repro.workloads.workload
 from repro.workloads.platform import (
     PlatformSpec,
     DEFAULT_PLATFORM,
+    curie_platform,
     load_platform,
     make_platform,
 )
 from repro.workloads.workload import Job, Workload, load_workload, parse_swf
 from repro.workloads.generator import generate_workload, PRESETS
+from repro.workloads.traces import read_swf, replay_workload
 
 __all__ = [
     "PlatformSpec",
     "DEFAULT_PLATFORM",
+    "curie_platform",
     "load_platform",
     "make_platform",
     "Job",
     "Workload",
     "load_workload",
     "parse_swf",
+    "read_swf",
+    "replay_workload",
     "generate_workload",
     "PRESETS",
 ]

@@ -617,5 +617,42 @@ def dvfs_platform_example(nb_nodes: int = 16) -> PlatformSpec:
     )
 
 
+def curie_platform(nb_nodes: int = 11_200) -> PlatformSpec:
+    """CEA Curie-class 3-group platform preset (the paper's large-scale
+    benchmark machine: 11 200 nodes).
+
+    Mirrors Curie's real partition structure — thin (the bulk), hybrid
+    (accelerated, faster and hotter), large (fat memory nodes) — with
+    paper-Table-3-class power numbers scaled per partition. Group counts
+    split ~82/16/2 percent and always sum to ``nb_nodes``, so smaller
+    verify-scale instances keep all three groups (minimum 3 nodes).
+    G = 3 regardless of N is exactly the regime the group-indexed tables
+    (core/SEMANTICS.md §Group-indexed tables) are built for.
+    """
+    if nb_nodes < 3:
+        raise ValueError(
+            f"curie_platform needs >= 3 nodes (one per partition), "
+            f"got {nb_nodes}"
+        )
+    thin = max(1, (nb_nodes * 82) // 100)
+    hybrid = max(1, (nb_nodes * 16) // 100)
+    if thin + hybrid >= nb_nodes:
+        thin, hybrid = nb_nodes - 2, 1
+    large = nb_nodes - thin - hybrid
+    return platform_from_groups(
+        (
+            NodeGroup(count=thin, name="thin"),
+            NodeGroup(count=hybrid, name="hybrid", power_active=280.0,
+                      power_idle=220.0, power_sleep=11.0,
+                      power_switch_on=280.0, power_switch_off=11.0,
+                      t_switch_on=20 * 60, t_switch_off=30 * 60, speed=1.6),
+            NodeGroup(count=large, name="large", power_active=420.0,
+                      power_idle=330.0, power_sleep=18.0,
+                      power_switch_on=420.0, power_switch_off=18.0,
+                      t_switch_on=45 * 60, t_switch_off=60 * 60, speed=1.2),
+        )
+    )
+
+
 # Paper Table 3 (power model); node count chosen per workload trace.
 DEFAULT_PLATFORM = PlatformSpec(nb_nodes=128)

@@ -111,51 +111,72 @@ def load_workload(path_or_obj) -> Workload:
     return Workload(nb_res=nb_res, jobs=jobs).sorted_by_subtime()
 
 
-def parse_swf(path: str, max_jobs: Optional[int] = None) -> Workload:
-    """Parse a Standard Workload Format trace (Parallel Workloads Archive).
+def swf_header_maxprocs(line: str) -> Optional[int]:
+    """MaxProcs value of an SWF header comment line, if it carries one."""
+    if line.startswith(";") and "MaxProcs" in line:
+        try:
+            return int(line.split(":")[-1])
+        except ValueError:
+            return None
+    return None
+
+
+def swf_line_job(line: str) -> Optional[Job]:
+    """Parse one SWF data line into a :class:`Job`, or None if the line is
+    blank, a comment, ragged, or a dropped record.
 
     SWF fields used: 1 job id, 2 submit time, 4 run time, 5 allocated procs,
     8 requested procs, 9 requested time. Jobs with unknown (-1) runtime or
     zero resources are dropped, matching common SWF-cleaning practice.
+    This is the ONE cleaning rule — :func:`parse_swf` and the streaming
+    reader in :mod:`repro.workloads.traces` both go through it, so the two
+    readers can never drift.
+    """
+    line = line.strip()
+    if not line or line.startswith(";"):
+        return None
+    parts = line.split()
+    if len(parts) < 9:
+        return None
+    jid = int(parts[0])
+    subtime = int(float(parts[1]))
+    runtime = int(float(parts[3]))
+    alloc = int(parts[4])
+    req_procs = int(parts[7])
+    reqtime = int(float(parts[8]))
+    res = req_procs if req_procs > 0 else alloc
+    if runtime < 0 or res <= 0:
+        return None
+    if reqtime <= 0:
+        reqtime = max(runtime, 1)
+    return Job(
+        job_id=jid,
+        res=res,
+        subtime=subtime,
+        reqtime=max(reqtime, runtime, 1),
+        runtime=max(runtime, 1),
+    )
+
+
+def parse_swf(path: str, max_jobs: Optional[int] = None) -> Workload:
+    """Parse a Standard Workload Format trace (Parallel Workloads Archive).
+
+    Cleaning rules live in :func:`swf_line_job`. For Curie-scale traces the
+    chunked streaming reader :func:`repro.workloads.traces.read_swf` parses
+    the same format without holding every raw line.
     """
     jobs: List[Job] = []
     nb_res = 0
     with open(path) as f:
         for line in f:
-            line = line.strip()
-            if not line:
+            mp = swf_header_maxprocs(line.strip())
+            if mp is not None:
+                nb_res = mp
                 continue
-            if line.startswith(";"):
-                # header comments may carry MaxProcs
-                if "MaxProcs" in line:
-                    try:
-                        nb_res = int(line.split(":")[-1])
-                    except ValueError:
-                        pass
+            job = swf_line_job(line)
+            if job is None:
                 continue
-            parts = line.split()
-            if len(parts) < 9:
-                continue
-            jid = int(parts[0])
-            subtime = int(float(parts[1]))
-            runtime = int(float(parts[3]))
-            alloc = int(parts[4])
-            req_procs = int(parts[7])
-            reqtime = int(float(parts[8]))
-            res = req_procs if req_procs > 0 else alloc
-            if runtime < 0 or res <= 0:
-                continue
-            if reqtime <= 0:
-                reqtime = max(runtime, 1)
-            jobs.append(
-                Job(
-                    job_id=jid,
-                    res=res,
-                    subtime=subtime,
-                    reqtime=max(reqtime, runtime, 1),
-                    runtime=max(runtime, 1),
-                )
-            )
+            jobs.append(job)
             if max_jobs is not None and len(jobs) >= max_jobs:
                 break
     if nb_res == 0:

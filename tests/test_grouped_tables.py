@@ -1,0 +1,355 @@
+"""Group-indexed tables (core/SEMANTICS.md §Group-indexed tables): the
+grouped path must be a pure performance change — schedules bit-exact with
+the dense path for every scheduler, energy to f32 rounding — together with
+the two structure knobs that share its static trace key: the burst-merging
+scheduler repeat (``merge_bursts``) and the queue-aware ``"pack"`` node
+order, both mirrored in the sequential oracle."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.metrics import metrics_from_state, schedule_table
+from repro.core.policy import from_label, scheduler_labels
+from repro.core.ref.pydes import run_pydes
+from repro.core.tables import _uniform_rows, group_tables
+from repro.core.types import EngineConfig
+from repro.workloads.generator import GeneratorConfig, generate_workload
+from repro.workloads.platform import (
+    PlatformSpec,
+    curie_platform,
+    dvfs_platform_example,
+    mixed_platform_example,
+)
+from repro.workloads.workload import workload_from_arrays
+
+SIX = [l for l in scheduler_labels() if "AlwaysOn" not in l]
+DVFS_LABELS = [
+    l for l in scheduler_labels(include_dvfs=True)
+    if l not in scheduler_labels()
+]
+
+# grouped vs dense: every schedule/accounting field must be bit-exact;
+# energy is compared separately (the [G, 5] occ · power contraction sums
+# in a different order than the dense per-node reduce — f32 rounding)
+SCHEDULE_FIELDS = (
+    "t", "job_start", "job_finish", "job_status", "job_eff",
+    "job_terminated", "node_state", "node_until", "n_batches", "n_allocs",
+    "n_starts", "n_completions", "n_switch_on", "n_switch_off", "truncated",
+)
+
+
+def _assert_grouped_matches_dense(grp, dense):
+    for fld in SCHEDULE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(grp, fld)), np.asarray(getattr(dense, fld)),
+            err_msg=f"grouped/dense diverged in SimState.{fld}",
+        )
+    np.testing.assert_allclose(
+        np.asarray(grp.energy), np.asarray(dense.energy), rtol=1e-6,
+        err_msg="grouped energy drifted past f32 rounding",
+    )
+
+
+# ------------------------------------------------- grouped == dense == oracle
+
+@pytest.mark.parametrize("label", SIX)
+def test_grouped_bit_exact_all_labels(label):
+    """Grouped == dense == sequential oracle on a 3-group mixed platform."""
+    base, pol = from_label(label)
+    plat = mixed_platform_example(12)
+    wl = generate_workload(
+        GeneratorConfig(n_jobs=40, nb_res=12, seed=5, overrun_prob=0.2)
+    )
+    cfg = EngineConfig(
+        base=base, policy=pol, timeout=120, terminate_overrun=True,
+        node_order="cheap",
+    )
+    dense = engine.simulate(plat, wl, cfg)
+    grp = engine.simulate(
+        plat, wl, dataclasses.replace(cfg, grouped_tables=True)
+    )
+    _assert_grouped_matches_dense(grp, dense)
+
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(grp), des.schedule_table())
+    m_grp = metrics_from_state(grp, plat)
+    assert m_grp.total_energy_j == pytest.approx(
+        m_ref.total_energy_j, rel=1e-5
+    )
+
+
+@pytest.mark.parametrize("label", DVFS_LABELS)
+def test_grouped_bit_exact_dvfs(label):
+    """DVFS labels: the grouped ACTIVE-row override (per-mode watts) keeps
+    the mode-resolved draw identical to the dense gather."""
+    base, pol = from_label(label)
+    plat = dvfs_platform_example(12)
+    wl = generate_workload(GeneratorConfig(n_jobs=40, nb_res=12, seed=3))
+    cfg = EngineConfig(
+        base=base, policy=pol, timeout=90, node_order="cheap"
+    )
+    dense = engine.simulate(plat, wl, cfg)
+    grp = engine.simulate(
+        plat, wl, dataclasses.replace(cfg, grouped_tables=True)
+    )
+    _assert_grouped_matches_dense(grp, dense)
+
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(grp), des.schedule_table())
+    m_grp = metrics_from_state(grp, plat)
+    assert m_grp.total_energy_j == pytest.approx(
+        m_ref.total_energy_j, rel=1e-5
+    )
+
+
+def test_grouped_bit_exact_traced_sweep():
+    """The traced superset program (sweep) honors grouped_tables too."""
+    plat = mixed_platform_example(12)
+    wl = generate_workload(GeneratorConfig(n_jobs=40, nb_res=12, seed=7))
+    cfg = EngineConfig(timeout=90, node_order="cheap")
+    dense = engine.sweep(plat, wl, SIX, cfg)
+    grp = engine.sweep(
+        plat, wl, SIX, dataclasses.replace(cfg, grouped_tables=True)
+    )
+    _assert_grouped_matches_dense(grp.states, dense.states)
+
+
+def test_grouped_bit_exact_curie_platform():
+    """The benchmark platform itself (scaled down): 3 Curie groups with
+    distinct watts/delays/speeds."""
+    plat = curie_platform(30)
+    wl = generate_workload(GeneratorConfig(n_jobs=40, nb_res=30, seed=11))
+    cfg = EngineConfig(
+        base=from_label("EASY PSUS")[0], policy=from_label("EASY PSUS")[1],
+        timeout=120, node_order="cheap",
+    )
+    dense = engine.simulate(plat, wl, cfg)
+    grp = engine.simulate(
+        plat, wl, dataclasses.replace(cfg, grouped_tables=True)
+    )
+    _assert_grouped_matches_dense(grp, dense)
+
+
+def test_grouped_kernel_route_matches_xla():
+    """cfg.fused_kernel=True routes the grouped event pass through the
+    Pallas occ kernel (interpret on CPU) — same schedule and energy as the
+    grouped XLA spelling."""
+    plat = mixed_platform_example(12)
+    wl = generate_workload(GeneratorConfig(n_jobs=40, nb_res=12, seed=2))
+    cfg = EngineConfig(
+        timeout=100, node_order="cheap", grouped_tables=True,
+    )
+    xla = engine.simulate(
+        plat, wl, dataclasses.replace(cfg, fused_kernel=False)
+    )
+    kern = engine.simulate(
+        plat, wl, dataclasses.replace(cfg, fused_kernel=True)
+    )
+    _assert_grouped_matches_dense(kern, xla)
+
+
+# ----------------------------------------------------------- table lowering
+
+def test_grouped_occ_invariant():
+    """The running [G, 5] occupancy ledger partitions the nodes: each
+    group's row sums to its node count, at init and at the final state."""
+    plat = mixed_platform_example(12)
+    wl = generate_workload(GeneratorConfig(n_jobs=40, nb_res=12, seed=5))
+    cfg = EngineConfig(timeout=100, node_order="cheap", grouped_tables=True)
+    tabs = group_tables(plat, cfg)
+    s0 = engine.init_state(plat, wl, cfg)
+    s = engine.simulate(plat, wl, cfg)
+    for state in (s0, s):
+        np.testing.assert_array_equal(
+            np.asarray(state.occ).sum(axis=1), np.asarray(tabs.count)
+        )
+
+
+def test_group_tables_lowering():
+    """Homogeneous platform lowers to one group; the mixed platform keeps
+    its distinct per-group rows; node_order='id' leaves perm = identity."""
+    cfg = EngineConfig(node_order="id")
+    plat_h = PlatformSpec(nb_nodes=8)
+    t_h = group_tables(plat_h, cfg)
+    assert t_h.count.shape == (1,) and int(t_h.count[0]) == 8
+    np.testing.assert_array_equal(np.asarray(t_h.perm), np.arange(8))
+
+    plat_m = mixed_platform_example(12)
+    t_m = group_tables(plat_m, cfg)
+    G = plat_m.n_groups()
+    assert t_m.power.shape == (G, 5)
+    assert int(np.asarray(t_m.count).sum()) == 12
+    # groups are genuinely heterogeneous — the [G] tables carry it
+    assert len({float(x) for x in np.asarray(t_m.power)[:, 3]}) > 1
+
+    # "cheap" orders whole groups by active watts: perm must list every
+    # node of a cheaper group before any node of a dearer one
+    t_c = group_tables(plat_m, EngineConfig(node_order="cheap"))
+    gid = np.repeat(np.arange(G), np.asarray(t_c.count))
+    key = np.asarray(t_c.order_key)[gid[np.asarray(t_c.perm)]]
+    assert np.all(np.diff(key) >= 0)
+
+
+def test_uniform_rows_rejects_intra_group_variation():
+    """Per-node tables that vary within a group cannot be lowered — the
+    builder must refuse loudly, steering to the dense path."""
+    gid = np.asarray([0, 0, 1], np.int32)
+    bad = np.asarray([[1.0], [2.0], [3.0]], np.float32)
+    with pytest.raises(ValueError, match="varies within a node group"):
+        _uniform_rows("watts", bad, gid, 2)
+    ok = np.asarray([[1.0], [1.0], [3.0]], np.float32)
+    np.testing.assert_array_equal(
+        _uniform_rows("watts", ok, gid, 2), [[1.0], [3.0]]
+    )
+
+
+def test_grouped_static_trace_key():
+    """grouped_tables and merge_bursts are trace structure: flipping either
+    must change the jit-cache key (else a program compiled for one path
+    would silently serve the other)."""
+    plat = PlatformSpec(nb_nodes=8)
+    cfg = EngineConfig()
+    key = engine._static_trace_key(plat, cfg, 10, 64)
+    key_g = engine._static_trace_key(
+        plat, dataclasses.replace(cfg, grouped_tables=True), 10, 64
+    )
+    key_m = engine._static_trace_key(
+        plat, dataclasses.replace(cfg, merge_bursts=True), 10, 64
+    )
+    assert len({key, key_g, key_m}) == 3
+
+
+def test_sweep_rejects_tables_scenario_override():
+    """Grouped tables are derived from the platform — a raw 'tables'
+    scenario override would desync them from group_id/power."""
+    plat = mixed_platform_example(12)
+    wl = generate_workload(GeneratorConfig(n_jobs=10, nb_res=12, seed=1))
+    cfg = EngineConfig(timeout=60, grouped_tables=True)
+    tabs = group_tables(plat, cfg)
+    with pytest.raises(TypeError, match="cannot override 'tables'"):
+        engine.sweep(plat, wl, [{"tables": tabs}], cfg)
+
+
+# ------------------------------------------------------------- merge bursts
+
+def _burst_workload(n_jobs=100, runtime=30):
+    res = np.ones(n_jobs, np.int64)
+    subtime = np.zeros(n_jobs, np.int64)
+    run = np.full(n_jobs, runtime, np.int64)
+    return workload_from_arrays(res, subtime, run, nb_res=n_jobs)
+
+
+def test_merge_bursts_drains_burst_in_one_batch():
+    """A same-timestamp burst wider than the scan window W starts entirely
+    at t=0 under merge_bursts (the pass repeats until quiescent); without
+    the merge the tail past W waits for the next unrelated event."""
+    plat = PlatformSpec(nb_nodes=100)
+    wl = _burst_workload(100)
+    cfg = EngineConfig(timeout=300, window=32)
+    merged = engine.simulate(
+        plat, wl, dataclasses.replace(cfg, merge_bursts=True)
+    )
+    plain = engine.simulate(plat, wl, cfg)
+    np.testing.assert_array_equal(np.asarray(merged.job_start), 0)
+    assert int(np.asarray(plain.job_start).max()) > 0
+    assert int(merged.n_batches) < int(plain.n_batches)
+
+
+def test_merge_bursts_fused_bit_exact():
+    """With the flag on, the fused and legacy loops run the same repeated
+    pass — bit-exact, energy included (both dense)."""
+    plat = mixed_platform_example(12)
+    wl = generate_workload(GeneratorConfig(n_jobs=60, nb_res=12, seed=4))
+    cfg = EngineConfig(timeout=100, node_order="cheap", merge_bursts=True)
+    fused = engine.simulate(plat, wl, cfg)
+    legacy = engine.simulate(
+        plat, wl, dataclasses.replace(cfg, fused_events=False)
+    )
+    for fld in SCHEDULE_FIELDS + ("energy", "energy_c"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fused, fld)), np.asarray(getattr(legacy, fld)),
+            err_msg=f"fused/legacy diverged in SimState.{fld} (merge_bursts)",
+        )
+
+
+@pytest.mark.parametrize("label", ["EASY PSUS", "FCFS PSAS+IPM"])
+def test_merge_bursts_oracle_parity(label):
+    """The oracle repeats only the scheduler pass under the same condition
+    (allocations made AND eligible jobs remain) — schedules must agree."""
+    base, pol = from_label(label)
+    plat = PlatformSpec(nb_nodes=100)
+    wl = _burst_workload(100)
+    cfg = EngineConfig(
+        base=base, policy=pol, timeout=300, window=32, merge_bursts=True
+    )
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, plat)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+
+
+def test_merge_bursts_grouped_combination():
+    """Both knobs on at once (the bench_curie configuration)."""
+    plat = curie_platform(30)
+    wl = generate_workload(GeneratorConfig(n_jobs=40, nb_res=30, seed=6))
+    cfg = EngineConfig(timeout=120, node_order="cheap", merge_bursts=True)
+    dense = engine.simulate(plat, wl, cfg)
+    grp = engine.simulate(
+        plat, wl, dataclasses.replace(cfg, grouped_tables=True)
+    )
+    _assert_grouped_matches_dense(grp, dense)
+
+
+# ---------------------------------------------------------------- pack order
+
+@pytest.mark.parametrize("label", ["EASY PSUS", "FCFS PSAS", "EASY PSAS+IPM"])
+def test_pack_order_oracle_parity(label):
+    """node_order='pack' (fill draining groups first) is mirrored in the
+    sequential oracle: same frozen per-pass key, same schedules."""
+    base, pol = from_label(label)
+    plat = mixed_platform_example(12)
+    wl = generate_workload(
+        GeneratorConfig(n_jobs=60, nb_res=12, seed=8, overrun_prob=0.2)
+    )
+    cfg = EngineConfig(
+        base=base, policy=pol, timeout=120, terminate_overrun=True,
+        node_order="pack",
+    )
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, plat)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+
+
+def test_pack_order_grouped_matches_dense():
+    """pack is a traced per-pass key, so it works on both paths — and they
+    must still agree bit-exactly."""
+    plat = mixed_platform_example(12)
+    wl = generate_workload(GeneratorConfig(n_jobs=40, nb_res=12, seed=9))
+    cfg = EngineConfig(timeout=100, node_order="pack")
+    dense = engine.simulate(plat, wl, cfg)
+    grp = engine.simulate(
+        plat, wl, dataclasses.replace(cfg, grouped_tables=True)
+    )
+    _assert_grouped_matches_dense(grp, dense)
+
+
+def test_pack_prefers_idle_over_waking_sleepers():
+    """The pack band: as long as idle-unreserved capacity exists anywhere,
+    packing must not wake sleeping nodes (the band term dominates the
+    within-band count key)."""
+    plat = PlatformSpec(nb_nodes=8)
+    # two 1-node jobs, well apart: after the first completes and its node
+    # suspends (timeout 5), the second must reuse the still-idle pool, not
+    # power the sleeper back on
+    res = np.asarray([4, 1], np.int64)
+    subtime = np.asarray([0, 200], np.int64)
+    run = np.asarray([10, 10], np.int64)
+    wl = workload_from_arrays(res, subtime, run, nb_res=8)
+    cfg = EngineConfig(timeout=5, node_order="pack")
+    s = engine.simulate(plat, wl, cfg)
+    assert int(s.n_switch_on) == 0

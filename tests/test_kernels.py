@@ -254,6 +254,87 @@ def test_event_fuse_untileable_falls_back():
     np.testing.assert_array_equal(np.asarray(nxl), np.asarray(nxl_ref))
 
 
+@pytest.mark.parametrize("e,n,g", [(1, 16, 1), (8, 64, 3), (37, 200, 5),
+                                   (64, 128, 2)])
+def test_event_fuse_occ_matches_reference(e, n, g):
+    state = jnp.asarray(RNG.integers(0, 5, (e, n)), jnp.int32)
+    until = jnp.asarray(RNG.integers(0, 100000, (e, n)), jnp.int32)
+    t = jnp.asarray(RNG.integers(0, 50000, (e,)), jnp.int32)
+    gid = jnp.asarray(RNG.integers(0, g, (n,)), jnp.int32)
+    occ, nx = ops.event_fuse_occ(state, until, t, gid, g, interpret=True)
+    occ_ref, nx_ref = ref.event_fuse_occ_reference(state, until, t, gid, g)
+    assert occ.shape == (e, g, 8)
+    np.testing.assert_array_equal(np.asarray(occ), np.asarray(occ_ref))
+    np.testing.assert_array_equal(np.asarray(nx), np.asarray(nx_ref))
+    # every node lands in exactly one (group, state) cell...
+    np.testing.assert_array_equal(np.asarray(occ.sum(axis=(1, 2))), float(n))
+    # ...and never in the dead columns (incl. PAD_STATE = 7)
+    np.testing.assert_array_equal(np.asarray(occ[:, :, 5:]), 0.0)
+
+
+def test_event_fuse_occ_pad_poisoning():
+    """Pad rows get gid 0 / PAD_STATE, so they land in the dead cell
+    (0, 7) — which is sliced off by the dead-column contract, never
+    inflating a live group-0 count; pad untils must not win the min."""
+    e, n, g = 13, 131, 3  # E % block_e != 0, N % LANES != 0
+    state = jnp.asarray(RNG.integers(0, 5, (e, n)), jnp.int32)
+    until = jnp.asarray(RNG.integers(0, 100000, (e, n)), jnp.int32)
+    t = jnp.asarray(RNG.integers(0, 50000, (e,)), jnp.int32)
+    gid = jnp.asarray(RNG.integers(0, g, (n,)), jnp.int32)
+    occ, nx = ops.event_fuse_occ(
+        state, until, t, gid, g, block_e=8, interpret=True
+    )
+    occ_ref, nx_ref = ref.event_fuse_occ_reference(state, until, t, gid, g)
+    np.testing.assert_array_equal(np.asarray(occ), np.asarray(occ_ref))
+    np.testing.assert_array_equal(np.asarray(nx), np.asarray(nx_ref))
+    np.testing.assert_array_equal(np.asarray(occ[:, :, 5:]), 0.0)
+
+
+def test_event_fuse_occ_matches_engine_occupancy():
+    """The [G, 5] slice of the kernel histogram == the engine's dense
+    scatter-add `_occupancy` on a real mixed-platform state."""
+    from repro.core import engine
+    from repro.core.types import BasePolicy, EngineConfig, PSMVariant
+    from repro.workloads.generator import GeneratorConfig, generate_workload
+    from repro.workloads.platform import mixed_platform_example
+
+    plat = mixed_platform_example(12)
+    wl = generate_workload(GeneratorConfig(n_jobs=20, nb_res=12, seed=9))
+    cfg = EngineConfig(base=BasePolicy.EASY, psm=PSMVariant.PSUS, timeout=60)
+    const = engine.make_const(plat, cfg)
+    s = engine.init_state(plat, wl, cfg)
+    s = engine.process_batch(s, const, cfg)
+    for _ in range(6):
+        nt = engine.next_time(s, const, cfg)
+        if int(nt) >= 2**30:
+            break
+        s = engine.process_batch(s._replace(t=nt), const, cfg)
+    g = plat.n_groups()
+    occ, _ = ops.event_fuse_occ(
+        s.node_state[None], s.node_until[None], s.t[None],
+        const.group_id, g, interpret=True,
+    )
+    want = engine._occupancy(s, const)
+    np.testing.assert_array_equal(
+        np.asarray(occ[0, :, :5]).astype(np.int32), np.asarray(want)
+    )
+
+
+def test_event_fuse_occ_zero_size_fallback():
+    from repro.core.types import INF_TIME
+
+    for e, n in [(0, 16), (4, 0), (0, 0)]:
+        state = jnp.zeros((e, n), jnp.int32)
+        until = jnp.zeros((e, n), jnp.int32)
+        t = jnp.zeros((e,), jnp.int32)
+        gid = jnp.zeros((n,), jnp.int32)
+        occ, nx = ops.event_fuse_occ(state, until, t, gid, 3, interpret=True)
+        assert occ.shape == (e, 3, 8) and nx.shape == (e,)
+        if e:
+            np.testing.assert_array_equal(np.asarray(occ), 0.0)
+            np.testing.assert_array_equal(np.asarray(nx), int(INF_TIME))
+
+
 def test_flash_attention_zero_size_short_circuit():
     """Zero-length queries/keys return zeros instead of tripping the
     `sq % min(block_q, sq)` tiling test with a ZeroDivisionError

@@ -1,0 +1,244 @@
+"""SWF trace replay (workloads/traces.py): the streaming reader must be a
+drop-in parse_swf twin on real-archive warts (both go through the one
+shared cleaning rule), and the replay adaptations (rebase, proc→node
+mapping, oversize policies) must compose into engine-ready workloads."""
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.types import EngineConfig
+from repro.workloads.generator import GeneratorConfig, generate_workload
+from repro.workloads.platform import PlatformSpec
+from repro.workloads.traces import (
+    OVERSIZE_POLICIES,
+    iter_swf_chunks,
+    map_procs_to_nodes,
+    read_swf,
+    rebase_submit_times,
+    replay_workload,
+    synthesize_curie_swf,
+    write_swf,
+)
+from repro.workloads.workload import Workload, parse_swf, workload_from_arrays
+
+
+def _ragged_swf(path: str, n: int = 2_000) -> None:
+    """The PR 6 warts fixture, scaled down: comment headers, blank lines,
+    ragged short lines, descending job ids, unsorted subtimes, unknown
+    runtimes, zero-proc rows, missing reqtimes."""
+    lines = [
+        "; SWF trace (synthetic)",
+        "; MaxProcs: 320",
+        "",
+    ]
+
+    def h(i, k):
+        return (i * 2654435761 + k * 40503) % 2**16
+
+    for i in range(n):
+        jid = n - i
+        subtime = h(i, 1) % 50_000
+        kind = i % 100
+        if kind == 0:
+            lines.append(f"{jid} {subtime} 0 17")  # ragged, skip
+            continue
+        if kind == 1:
+            lines.append("")
+            continue
+        runtime = -1 if kind == 2 else 1 + h(i, 2) % 3600
+        procs = 0 if kind == 3 else 1 + h(i, 3) % 320
+        reqtime = -1 if kind == 4 else runtime + h(i, 4) % 600
+        lines.append(
+            f"{jid} {subtime} 10 {runtime} {procs} -1 -1 {procs} {reqtime}"
+            " -1 1 1 1 1 1 1 -1 -1"
+        )
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+
+
+# ------------------------------------------------------------ reader parity
+
+@pytest.mark.parametrize("chunk_jobs", [7, 512, 100_000])
+def test_read_swf_matches_parse_swf(tmp_path, chunk_jobs):
+    """The streaming reader == the one-shot parser on the ragged fixture,
+    for chunk sizes below, at, and above the trace length."""
+    path = str(tmp_path / "warts.swf")
+    _ragged_swf(path)
+    ref = parse_swf(path)
+    got = read_swf(path, chunk_jobs=chunk_jobs)
+    assert got.nb_res == ref.nb_res == 320
+    assert got.jobs == ref.jobs
+
+
+def test_read_swf_max_jobs_prefix(tmp_path):
+    """max_jobs keeps the first K *kept* records (cleaning applied), not
+    the first K lines — and they are a subset of the full parse."""
+    path = str(tmp_path / "warts.swf")
+    _ragged_swf(path)
+    got = read_swf(path, max_jobs=100)
+    assert len(got) == 100
+    assert set(got.jobs) <= set(parse_swf(path).jobs)
+
+
+def test_iter_swf_chunks_shapes(tmp_path):
+    path = str(tmp_path / "warts.swf")
+    _ragged_swf(path, n=500)
+    chunks = list(iter_swf_chunks(path, chunk_jobs=64))
+    # MaxProcs rides on the FIRST chunk only (streaming cannot wait for EOF)
+    assert chunks[0]["max_procs"] == 320
+    assert all("max_procs" not in c for c in chunks[1:])
+    sizes = [len(c["job_id"]) for c in chunks]
+    assert all(s == 64 for s in sizes[:-1]) and 0 < sizes[-1] <= 64
+    assert sum(sizes) == len(parse_swf(path))
+    for c in chunks:
+        for k in ("job_id", "res", "subtime", "reqtime", "runtime"):
+            assert c[k].dtype == np.int64
+
+
+def test_iter_swf_chunks_empty_trace(tmp_path):
+    """A header-only trace still yields one (empty) chunk with MaxProcs."""
+    path = str(tmp_path / "empty.swf")
+    with open(path, "w") as f:
+        f.write("; MaxProcs: 64\n")
+    chunks = list(iter_swf_chunks(path))
+    assert len(chunks) == 1
+    assert chunks[0]["max_procs"] == 64
+    assert len(chunks[0]["job_id"]) == 0
+    with pytest.raises(ValueError, match="chunk_jobs"):
+        list(iter_swf_chunks(path, chunk_jobs=0))
+
+
+# ------------------------------------------------------------- adaptations
+
+def test_rebase_submit_times():
+    wl = workload_from_arrays(
+        np.asarray([1, 1, 1], np.int64),
+        np.asarray([1000, 1000, 1500], np.int64),
+        np.asarray([10, 10, 10], np.int64),
+        nb_res=4,
+    )
+    out = rebase_submit_times(wl)
+    assert [j.subtime for j in out.jobs] == [0, 0, 500]
+    # already-rebased workloads pass through untouched
+    assert rebase_submit_times(out) is out
+
+
+def test_map_procs_to_nodes_policies():
+    wl = workload_from_arrays(
+        np.asarray([3, 8, 20], np.int64),
+        np.asarray([0, 0, 0], np.int64),
+        np.asarray([10, 10, 10], np.int64),
+        nb_res=32,
+    )
+    # ceil(procs / procs_per_node), nb_res becomes the node count
+    out = map_procs_to_nodes(wl, nb_nodes=10, procs_per_node=2)
+    assert out.nb_res == 10
+    assert [j.res for j in out.jobs] == [2, 4, 10]
+
+    clamped = map_procs_to_nodes(wl, nb_nodes=10, oversize="clamp")
+    assert [j.res for j in clamped.jobs] == [3, 8, 10]
+    dropped = map_procs_to_nodes(wl, nb_nodes=10, oversize="drop")
+    assert [j.res for j in dropped.jobs] == [3, 8]
+    with pytest.raises(ValueError, match="oversize='clamp' or 'drop'"):
+        map_procs_to_nodes(wl, nb_nodes=10, oversize="error")
+    with pytest.raises(ValueError, match="oversize must be one of"):
+        map_procs_to_nodes(wl, nb_nodes=10, oversize="truncate")
+    assert OVERSIZE_POLICIES == ("clamp", "drop", "error")
+
+
+def test_write_swf_round_trip(tmp_path):
+    """write_swf → read_swf is the identity on the modeled fields."""
+    wl = generate_workload(GeneratorConfig(n_jobs=200, nb_res=64, seed=13))
+    path = str(tmp_path / "rt.swf")
+    write_swf(wl, path)
+    back = read_swf(path)
+    assert back.nb_res == wl.nb_res
+    want = wl.sorted_by_subtime()
+    assert len(back) == len(want)
+    for a, b in zip(back.jobs, want.jobs):
+        assert (a.job_id, a.res, a.subtime, a.runtime, a.reqtime) == (
+            b.job_id, b.res, b.subtime, b.runtime, b.reqtime
+        )
+
+
+def test_replay_workload_end_to_end(tmp_path):
+    """parse → map → rebase composition on the ragged fixture, simulated
+    to completion on a small platform (the oversize clamp is exercised —
+    the fixture has jobs up to 320 procs)."""
+    path = str(tmp_path / "warts.swf")
+    _ragged_swf(path, n=500)
+    wl = replay_workload(path, nb_nodes=16, oversize="clamp", max_jobs=40)
+    assert wl.nb_res == 16
+    assert min(j.subtime for j in wl.jobs) == 0
+    assert max(j.res for j in wl.jobs) <= 16
+    subs = [j.subtime for j in wl.jobs]
+    assert subs == sorted(subs)
+
+    s = engine.simulate(PlatformSpec(nb_nodes=16), wl, EngineConfig(timeout=60))
+    assert int(np.asarray(s.n_completions)) == len(wl)
+
+
+def test_replay_workload_platform_from_header(tmp_path):
+    """nb_nodes=None sizes the platform from MaxProcs / procs_per_node."""
+    path = str(tmp_path / "warts.swf")
+    _ragged_swf(path, n=300)
+    wl = replay_workload(path, procs_per_node=4)
+    assert wl.nb_res == 80  # ceil(320 / 4)
+
+
+def test_synthesize_curie_swf_deterministic(tmp_path):
+    p1 = synthesize_curie_swf(str(tmp_path / "a.swf"), n_jobs=50)
+    p2 = synthesize_curie_swf(str(tmp_path / "b.swf"), n_jobs=50)
+    with open(p1) as f1, open(p2) as f2:
+        assert f1.read() == f2.read()
+    wl = replay_workload(p1, nb_nodes=11_200)
+    assert len(wl) == 50 and wl.nb_res == 11_200
+
+
+# --------------------------------------------------------- experiment specs
+
+def test_resolve_workload_swf_specs(tmp_path):
+    from repro.experiments.spec import resolve_workload
+
+    path = str(tmp_path / "warts.swf")
+    _ragged_swf(path, n=300)
+    a = resolve_workload(f"swf:{path}")
+    assert a.nb_res == 320
+    b = resolve_workload(
+        {"swf": path, "nb_nodes": 16, "max_jobs": 20, "oversize": "clamp"}
+    )
+    assert b.nb_res == 16 and len(b) == 20
+    # replay is not seeded: the replicate axis must refuse
+    with pytest.raises(ValueError, match="replications"):
+        resolve_workload(f"swf:{path}", replication=1)
+    with pytest.raises(ValueError, match="replications"):
+        resolve_workload({"swf": path}, replication=2)
+    with pytest.raises(ValueError, match="unknown swf workload spec key"):
+        resolve_workload({"swf": path, "nb_node": 16})
+
+
+def test_experiment_swf_spec_runs(tmp_path):
+    """A declarative swf experiment round-trips through JSON and runs the
+    grid (grouped tables on) end to end."""
+    from repro import experiments
+
+    path = str(tmp_path / "warts.swf")
+    _ragged_swf(path, n=300)
+    exp = experiments.Experiment(
+        name="swf_replay",
+        workload={"swf": path, "nb_nodes": 16, "max_jobs": 30},
+        platform=16,
+        schedulers=("EASY PSUS",),
+        timeouts=(60,),
+        grouped_tables=True,
+    )
+    exp2 = experiments.Experiment.from_json(exp.to_json())
+    assert exp2 == exp
+    result = experiments.run(exp)
+    assert len(result.rows) == 1
+    assert result.rows[0]["n_jobs"] == 30
+    with pytest.raises(ValueError, match="unknown swf workload spec key"):
+        experiments.Experiment(
+            name="typo", workload={"swf": path, "overside": "clamp"},
+            platform=16,
+        )
