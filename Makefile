@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all test-slow test-nightly bench-scale lint docs-check
+.PHONY: test test-all test-slow test-nightly fuzz bench-scale lint docs-check
 
 # tier-1 gate (what CI and the ROADMAP "Tier-1 verify" line run);
 # pytest.ini excludes the `slow` marker from this run
@@ -30,10 +30,17 @@ test-slow:
 # tables; green since PR 8: 11.6s grouped vs 17.9s oracle), and
 # bench_curie asserts grouped == dense per scheduler label on the
 # replayed Curie trace.
-test-nightly: test-slow
+test-nightly: test-slow fuzz
 	$(PY) benchmarks/bench_scale.py --jobs 120 --nodes 256 --oracle-jobs 40 --hetero
 	$(PY) benchmarks/bench_scale.py --jobs 200 --nodes 11200 --oracle-jobs 50 --sweep 4 --assert-beat-oracle
 	$(PY) benchmarks/bench_curie.py
+	$(PY) benchmarks/bench_forecast.py
+
+# the differential policy-fuzz lane at nightly depth (tier-1 runs the
+# bounded 20-case default via the plain pytest gate); SPARS_FUZZ_CASES
+# scales the seeded corpus / hypothesis example budget
+fuzz:
+	SPARS_FUZZ_CASES=200 $(PY) -m pytest tests/test_policy_fuzz.py -q
 
 # §3.1-scale benchmark; --hetero exercises the mixed-platform sweep
 # (asserts the sweep stays ONE compiled program)

@@ -1,0 +1,150 @@
+"""Forecast-policy grid benchmark (core/SEMANTICS.md §Forecast).
+
+Reactive TimeoutSleep vs the same stack with rule 10's EWMA forecast
+(``+Forecast``) vs a group-targeted RL controller (``RL:groups``,
+random-init checkpoint — the plumbing/throughput comparison, not a trained
+agent), replayed on the head of a Curie-class SWF trace through the
+experiments layer: scheduler x forecast-horizon as ONE compiled program.
+
+Asserts the two §Forecast contracts on the produced rows:
+
+* one-compile — the whole grid (reactive + forecast horizons + RL) stays a
+  single vmapped XLA program (``ExperimentResult.n_compiles == 1``);
+* zero-knowledge identity — the ``horizon=0`` forecast row is bit-exact
+  with its reactive base row (rule 10 off vs on-but-inert, same label).
+
+Reports per-row energy / mean wait and sweep wall time for the
+``forecast`` section of ``BENCH_grid.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_forecast --jobs 200
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+from repro.workloads.platform import curie_platform
+from repro.workloads.traces import synthesize_curie_swf
+
+SCHEDULERS = ("EASY PSUS", "EASY PSUS+Forecast", "EASY RL:groups")
+
+
+def _random_init_checkpoint(directory: str, n_groups: int) -> str:
+    """A group-targeted policy checkpoint with freshly initialized weights
+    (the benchmark compares policy-stack plumbing, not trained quality)."""
+    import jax
+
+    from repro.core.rl.actions import action_space_size
+    from repro.core.rl.features import feature_size
+    from repro.core.rl.networks import policy_init
+    from repro.training.checkpoint import save_policy
+
+    obs = feature_size("compact")
+    n_actions = action_space_size("group_target_fraction", 9, n_groups)
+    params = policy_init(jax.random.PRNGKey(0), obs, n_actions)
+    save_policy(
+        directory, params, obs_size=obs, n_actions=n_actions,
+        feature="compact", action="group_target_fraction", n_levels=9,
+        grouped=True, n_groups=n_groups,
+    )
+    return directory
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=200,
+                    help="trace-head jobs replayed for every grid point")
+    ap.add_argument("--nodes", type=int, default=280,
+                    help="scaled-down Curie platform (3-group structure, "
+                         "same regime as bench_curie's verify phase)")
+    ap.add_argument("--trace", type=int, default=2000,
+                    help="synthesized trace length (SWF lines)")
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--horizon", type=int, default=1800,
+                    help="non-trivial forecast horizon for the grid axis "
+                         "(crossed with the horizon=0 identity point)")
+    ap.add_argument("--swf", default=None,
+                    help="existing SWF trace to replay (default: synthesize "
+                         "a Curie-class trace)")
+    args = ap.parse_args(argv)
+
+    from repro import experiments
+
+    plat = curie_platform(args.nodes)
+    tmp = tempfile.mkdtemp(prefix="bench_forecast_")
+    swf = args.swf or synthesize_curie_swf(
+        os.path.join(tmp, "curie.swf"), n_jobs=args.trace
+    )
+    ckpt = _random_init_checkpoint(
+        os.path.join(tmp, "policy"), plat.n_groups()
+    )
+    exp = experiments.Experiment(
+        name="forecast_bench",
+        workload={"swf": swf, "nb_nodes": args.nodes, "oversize": "clamp",
+                  "max_jobs": args.jobs},
+        platform=args.nodes,  # superseded by the injected Curie platform
+        schedulers=SCHEDULERS,
+        timeouts=(args.timeout,),
+        forecasts=(0, args.horizon),
+        rl={"checkpoint": ckpt, "decision_interval": args.timeout},
+        node_order="cheap",
+    )
+
+    experiments.run(exp, platform=plat)  # warm-up: compile once
+    t0 = time.perf_counter()
+    result = experiments.run(exp, platform=plat)
+    wall = time.perf_counter() - t0
+    assert result.n_compiles in (None, 1), (
+        f"the forecast grid recompiled: {result.n_compiles} programs"
+    )
+
+    # zero-knowledge identity: per label, the horizon=0 row == the row of
+    # the same label with rule 10 contributing nothing else — for the
+    # reactive scheduler the forecast axis is inert outright, so both of
+    # its rows must agree; for the forecast stack the h=0 row must match
+    # the reactive base row bit-exactly (§Forecast)
+    def row(scheduler, forecast):
+        (r,) = [
+            r for r in result.rows
+            if r["scheduler"] == scheduler and r["forecast"] == forecast
+        ]
+        return r
+
+    for fc in (0, args.horizon):
+        r = row("EASY PSUS", fc)
+        assert r["total_energy_kwh"] == row("EASY PSUS", 0)["total_energy_kwh"]
+        assert r["mean_wait_s"] == row("EASY PSUS", 0)["mean_wait_s"]
+    h0, base = row("EASY PSUS+Forecast", 0), row("EASY PSUS", 0)
+    assert h0["total_energy_kwh"] == base["total_energy_kwh"], (
+        "horizon=0 forecast row diverged from its reactive base"
+    )
+    assert h0["mean_wait_s"] == base["mean_wait_s"]
+
+    rows = [
+        {
+            "scheduler": r["scheduler"],
+            "forecast": r["forecast"],
+            "total_energy_kwh": round(r["total_energy_kwh"], 3),
+            "mean_wait_s": round(r["mean_wait_s"], 1),
+        }
+        for r in result.rows
+    ]
+    out = {
+        "n_compiles": result.n_compiles,
+        "grid_k": len(result.rows),
+        "nodes": args.nodes,
+        "bench_jobs": args.jobs,
+        "wall_s": round(wall, 3),
+        "jobs_per_s": round(len(result.rows) * args.jobs / wall, 1)
+        if wall else None,
+        "rows": rows,
+    }
+    print(json.dumps(out, indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,7 @@ import os
 import time
 
 SECTIONS = ("speedup", "energy_grid", "fig1", "scale", "curie", "rl",
-            "dvfs", "kernels", "roofline")
+            "dvfs", "forecast", "kernels", "roofline")
 
 
 def section(title):
@@ -42,6 +42,7 @@ def main() -> None:
         bench_curie,
         bench_dvfs,
         bench_energy,
+        bench_forecast,
         bench_kernels,
         bench_rl,
         bench_roofline,
@@ -185,6 +186,25 @@ def main() -> None:
             n_compiles=dvfs.get("n_compiles"),
             grid_k=dvfs.get("grid_k"),
             jobs_per_s=dvfs.get("jobs_per_s"),
+        )
+
+    if want("forecast"):
+        section("Rule 10: reactive vs +Forecast vs RL:groups (Curie head)")
+        fc_jobs = 200 if args.full else 120
+        fc_nodes = 280 if args.full else 120
+        fc, entry = timed(
+            "forecast",
+            lambda: bench_forecast.main(
+                ["--jobs", str(fc_jobs), "--nodes", str(fc_nodes),
+                 "--trace", "2000" if args.full else "600"]
+            ),
+        )
+        entry.update(
+            n_compiles=fc.get("n_compiles"),
+            grid_k=fc.get("grid_k"),
+            nodes=fc.get("nodes"),
+            bench_jobs=fc.get("bench_jobs"),
+            jobs_per_s=fc.get("jobs_per_s"),
         )
 
     if want("kernels"):

@@ -54,6 +54,7 @@ from repro.core.policy import (
     PowerPolicy,
     alloc_min_speed,
     apply_dvfs,
+    apply_forecast,
     apply_rl_commands,
     effective_node_speed,
     from_label,
@@ -109,6 +110,11 @@ class EngineConst(NamedTuple):
     dvfs_speed: jax.Array  # f32[G, M] node speed in mode m
     dvfs_watts: jax.Array  # f32[G, M] ACTIVE-state watts in mode m
     dvfs_n_modes: jax.Array  # i32[G] live modes per group (<= M; rest padding)
+    # rule 10 (§Forecast): EWMA predictor operands. Traced like timeout /
+    # rl_interval, so a forecast-horizon sweep vmaps through one program;
+    # whether the rule runs is the traced ``policy.forecast_enabled`` flag.
+    forecast_horizon: jax.Array  # i32 look-ahead seconds (0 = no pressure)
+    forecast_alpha: jax.Array  # f32 EWMA smoothing weight in [0, 1]
     # group-indexed tables (§Group-indexed tables): per-group lowering of
     # the per-node tables above, present iff ``config.grouped_tables``.
     # Presence is pytree/trace structure (mirrored in _static_trace_key);
@@ -168,6 +174,13 @@ class SimState(NamedTuple):
     # occ.sum(axis=1) == tables.count); the dense path leaves it at its
     # initial value — it is a grouped-path cache, not dense-path state
     occ: jax.Array  # i32[G, 5]
+    # rule 10 (§Forecast) EWMA predictor state, updated by apply_forecast
+    # only where the forecast flag is on — all four stay at their inits
+    # (and contribute nothing) under every other stack
+    fc_gap: jax.Array  # f32 smoothed inter-arrival gap (init INF_TIME)
+    fc_res: jax.Array  # f32 smoothed nodes asked per arrival (init 0)
+    fc_last_arr: jax.Array  # i32 time of the last observed arrival burst
+    fc_prev_t: jax.Array  # i32 previous predictor update time (init -1)
 
 
 class GanttLog(NamedTuple):
@@ -235,6 +248,15 @@ def make_const(
         order_key = jnp.broadcast_to(jnp.asarray(key, jnp.float32), (N,))
         group_id = jnp.zeros(N, I32)
     dvfs_speed, dvfs_watts, dvfs_n = platform.group_dvfs_tables()
+    # rule 10 operands: EngineConfig wins for the horizon; a Forecast
+    # policy's horizon/alpha fields are the fallback defaults (the enable
+    # flag itself rides the policy axis — core/SEMANTICS.md §Forecast)
+    horizon = config.forecast_horizon
+    if horizon is None:
+        horizon = getattr(config.policy, "horizon", None) or 0
+    alpha = getattr(config.policy, "alpha", None)
+    if alpha is None:
+        alpha = config.forecast_alpha
     return EngineConst(
         power=power,
         t_on=t_on,
@@ -254,6 +276,8 @@ def make_const(
         dvfs_speed=jnp.asarray(dvfs_speed, jnp.float32),
         dvfs_watts=jnp.asarray(dvfs_watts, jnp.float32),
         dvfs_n_modes=jnp.asarray(dvfs_n, I32),
+        forecast_horizon=jnp.asarray(int(horizon), I32),
+        forecast_alpha=jnp.asarray(float(alpha), jnp.float32),
         tables=(
             group_tables(platform, config) if config.grouped_tables else None
         ),
@@ -336,6 +360,10 @@ def init_state(
         mode_energy=jnp.zeros((G, platform.n_dvfs_modes()), jnp.float32),
         truncated=jnp.asarray(False),
         occ=jnp.asarray(occ0),
+        fc_gap=jnp.asarray(float(INF_TIME), jnp.float32),
+        fc_res=jnp.zeros((), jnp.float32),
+        fc_last_arr=jnp.asarray(0, I32),
+        fc_prev_t=jnp.asarray(-1, I32),
     )
 
 
@@ -800,7 +828,7 @@ def _start_jobs(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
 
 
 def _power_step(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
-    """Rules 6-9, flag-gated by the policy axis (``const.policy``).
+    """Rules 6-10, flag-gated by the policy axis (``const.policy``).
 
     With traced flags (sweeps) every rule is evaluated in every program; a
     scenario whose flag is off selects zero nodes, leaving state and
@@ -843,6 +871,11 @@ def _power_step(s: SimState, const: EngineConst, cfg: EngineConfig) -> SimState:
     if static_bool(pp.dvfs_enabled) is not False:
         s = apply_dvfs(s, const, terminate_overrun=cfg.terminate_overrun,
                        enabled=pp.dvfs_enabled, rl=pp.dvfs_rl)
+    if static_bool(pp.forecast_enabled) is not False:
+        s = apply_forecast(s, const,
+                           terminate_overrun=cfg.terminate_overrun,
+                           enabled=pp.forecast_enabled,
+                           dvfs_ramp=pp.forecast_dvfs)
     return s
 
 
@@ -890,6 +923,15 @@ def _time_candidates(s: SimState, const: EngineConst):
         policy_cands.append(
             jnp.where(pp.rl_enabled, t + const.rl_interval, INF)
         )
+    if static_bool(pp.forecast_enabled) is not False:
+        # rule 10 review tick: re-evaluate the forecast at most one horizon
+        # after the last batch, so proactive wake-ups are not gated on an
+        # unrelated event landing first. A zero horizon yields c == t,
+        # clamped out by next_time — no extra events, the identity case.
+        policy_cands.append(jnp.where(
+            pp.forecast_enabled & (const.forecast_horizon > 0),
+            t + const.forecast_horizon, INF,
+        ))
     return arr, fin, policy_cands
 
 
@@ -982,6 +1024,8 @@ def _quiet_enabled(const: EngineConst, cfg: EngineConfig) -> bool:
         and getattr(cfg.policy, "controller", None) is None
         and static_bool(pp.rl_enabled) is False
         and static_bool(pp.dvfs_enabled) is False
+        # rule 10's EWMA predictor must update on every batch, quiet or not
+        and static_bool(pp.forecast_enabled) is False
     )
 
 

@@ -16,7 +16,11 @@ program:
 * ``rl_enabled``    — rule 8 (agent power commands) is active,
 * ``rl_grouped``    — rule 8 selects within node groups,
 * ``dvfs_enabled``  — rule 9 (runtime per-group DVFS mode switching),
-* ``dvfs_rl``       — rule 9 modes come from agent commands, not the ladder.
+* ``dvfs_rl``       — rule 9 modes come from agent commands, not the ladder,
+* ``forecast_enabled`` — rule 10 (EWMA arrival-pressure forecast: proactive
+  node wake-up ahead of predicted demand),
+* ``forecast_dvfs`` — rule 10 also pre-ramps DVFS modes toward the
+  forecast-adjusted ladder (never below rule 9's current choice).
 
 Because the flags are traced operands (not static config), a whole
 scheduler x policy x timeout grid vmaps through ONE compiled program
@@ -78,6 +82,8 @@ class PolicyParams(NamedTuple):
     rl_grouped: Any  # rule 8 selects per node group
     dvfs_enabled: Any  # rule 9 active (runtime per-group DVFS switching)
     dvfs_rl: Any  # rule 9 modes from agent commands (else pressure ladder)
+    forecast_enabled: Any  # rule 10 active (EWMA forecast, proactive wake)
+    forecast_dvfs: Any  # rule 10 also pre-ramps DVFS modes (needs rule 9)
 
     def traced(self) -> "PolicyParams":
         """The jnp.bool_ spelling carried in EngineConst (vmap-stackable)."""
@@ -303,17 +309,9 @@ def alloc_min_speed(node_job, node_speed, n_jobs):
     )
 
 
-def apply_dvfs(s, const, terminate_overrun=False, enabled=True, rl=False):
-    """Rule 9: per-group DVFS mode selection + remaining-work rescale.
-
-    Mode selection (core/SEMANTICS.md §DVFS):
-
-    * heuristic ladder (``rl=False``): group g's mode index is the integer
-      ``min(n_modes[g] - 1, demand * n_modes[g] // N)`` where ``demand`` is
-      the cluster's queued resource demand — an empty queue idles every
-      group at its slowest mode, a saturated queue runs them at the fastest.
-    * agent-commanded (``rl=True``): the pending ``rl_mode_cmd`` vector
-      (i32[G], -1 = no change) is applied, clamped per group, then cleared.
+def apply_dvfs_modes(s, const, target, enabled, terminate_overrun=False):
+    """Install DVFS mode vector ``target`` (i32[G]) where ``enabled`` and
+    rescale remaining work — the shared tail of rules 9 and 10.
 
     Remaining-work rescale: every RUNNING, non-terminated job whose
     allocation's effective speed changed gets its remaining wall time
@@ -321,25 +319,10 @@ def apply_dvfs(s, const, terminate_overrun=False, enabled=True, rl=False):
     ``max(ceil((f32(finish - t) * old_speed) / new_speed), 1)``; under
     ``terminate_overrun`` the new finish is capped at ``start + reqtime``
     (walltime is a user clock, it never scales) and the job is marked
-    terminated when the cap bites. ``enabled``/``rl`` may be traced flags
-    (the engine's superset power step) or Python bools (the RL env).
+    terminated when the cap bites. Leaves ``rl_mode_cmd`` alone (rule 9
+    clears it at its own call site). Twin of the oracle's
+    ``_apply_dvfs_modes``.
     """
-    G, _ = const.dvfs_speed.shape
-    N = s.node_state.shape[0]
-    n_modes = const.dvfs_n_modes
-    rl_b = static_bool(rl)
-    if rl_b is not True:
-        ladder = jnp.minimum(n_modes - 1, (queued_demand(s) * n_modes) // N)
-    if rl_b is not False:
-        commanded = jnp.where(
-            s.rl_mode_cmd >= 0,
-            jnp.clip(s.rl_mode_cmd, 0, n_modes - 1),
-            s.dvfs_mode,
-        )
-    if rl_b is None:  # traced: both selectors, chosen per scenario
-        target = jnp.where(rl, commanded, ladder).astype(I32)
-    else:
-        target = (commanded if rl_b else ladder).astype(I32)
     mode = jnp.where(enabled, target, s.dvfs_mode)
 
     # effective per-node speed under the (possibly new) mode vector
@@ -362,12 +345,143 @@ def apply_dvfs(s, const, terminate_overrun=False, enabled=True, rl=False):
     finish = jnp.where(changed, new_finish, s.job_finish)
     return s._replace(
         dvfs_mode=mode,
-        rl_mode_cmd=jnp.where(enabled, jnp.full(G, -1, I32), s.rl_mode_cmd),
         job_speed=jnp.where(running & enabled, speed_min, s.job_speed),
         job_finish=finish,
         job_eff=jnp.where(changed, finish - s.job_start, s.job_eff),
         job_terminated=terminated,
     )
+
+
+def apply_dvfs(s, const, terminate_overrun=False, enabled=True, rl=False):
+    """Rule 9: per-group DVFS mode selection + remaining-work rescale.
+
+    Mode selection (core/SEMANTICS.md §DVFS):
+
+    * heuristic ladder (``rl=False``): group g's mode index is the integer
+      ``min(n_modes[g] - 1, demand * n_modes[g] // N)`` where ``demand`` is
+      the cluster's queued resource demand — an empty queue idles every
+      group at its slowest mode, a saturated queue runs them at the fastest.
+    * agent-commanded (``rl=True``): the pending ``rl_mode_cmd`` vector
+      (i32[G], -1 = no change) is applied, clamped per group, then cleared.
+
+    The mode install + remaining-work rescale is :func:`apply_dvfs_modes`
+    (shared with rule 10's pre-ramp). ``enabled``/``rl`` may be traced flags
+    (the engine's superset power step) or Python bools (the RL env).
+    """
+    G, _ = const.dvfs_speed.shape
+    N = s.node_state.shape[0]
+    n_modes = const.dvfs_n_modes
+    rl_b = static_bool(rl)
+    if rl_b is not True:
+        ladder = jnp.minimum(n_modes - 1, (queued_demand(s) * n_modes) // N)
+    if rl_b is not False:
+        commanded = jnp.where(
+            s.rl_mode_cmd >= 0,
+            jnp.clip(s.rl_mode_cmd, 0, n_modes - 1),
+            s.dvfs_mode,
+        )
+    if rl_b is None:  # traced: both selectors, chosen per scenario
+        target = jnp.where(rl, commanded, ladder).astype(I32)
+    else:
+        target = (commanded if rl_b else ladder).astype(I32)
+    s = apply_dvfs_modes(s, const, target, enabled, terminate_overrun)
+    return s._replace(
+        rl_mode_cmd=jnp.where(enabled, jnp.full(G, -1, I32), s.rl_mode_cmd),
+    )
+
+
+def forecast_pressure(s, const):
+    """i32 predicted extra node demand over the forecast horizon (rule 10).
+
+    The EWMA predictor state (``fc_gap``: smoothed inter-arrival gap,
+    ``fc_res``: smoothed nodes requested per arrival) extrapolates linearly:
+    ``horizon / gap`` arrivals expected within the horizon, each asking for
+    ``fc_res`` nodes — floored to an integer and clipped to the cluster
+    size. A zero horizon (or a predictor that never saw an arrival: ``gap``
+    still at its INF_TIME init) predicts zero. Twin of the oracle's
+    ``_forecast_pressure``.
+    """
+    gap = jnp.maximum(s.fc_gap, jnp.float32(1.0))
+    horizon = const.forecast_horizon.astype(jnp.float32)
+    pressure = (horizon / gap) * s.fc_res
+    # clip in f32 BEFORE the i32 cast: an extreme horizon/gap ratio must
+    # saturate at N, not wrap through integer overflow
+    N = s.node_state.shape[0]
+    return jnp.clip(jnp.floor(pressure), 0.0, jnp.float32(N)).astype(I32)
+
+
+def apply_forecast(s, const, terminate_overrun=False, enabled=True,
+                   dvfs_ramp=False):
+    """Rule 10: EWMA arrival-pressure forecast — proactive wake + DVFS ramp.
+
+    Predictor update (core/SEMANTICS.md §Forecast): arrivals with
+    ``fc_prev_t < subtime <= t`` are this batch's new-arrival burst; the
+    observed per-arrival gap ``(t - fc_last_arr) / n_new`` and per-arrival
+    resource ask feed strict-form EWMAs ``a*obs + (1-a)*ewma`` (no
+    first-observation seeding, so ``alpha=0`` provably freezes the init
+    values and the rule is a no-op).
+
+    Proactive wake: predicted pressure ``f_extra`` widens rule 7's deficit
+    — sleeping nodes are switched on (lowest id first) until unreserved
+    IDLE/SWITCHING_ON capacity covers ``queued_demand + f_extra``. Fires
+    only when ``f_extra > 0``, so a zero-horizon Forecast stack is
+    bit-exact with its reactive base rather than degenerating into IPM.
+
+    DVFS pre-ramp (``dvfs_ramp``, stacks with rule 9 composed): groups ramp
+    toward the forecast-adjusted ladder
+    ``min(n_modes - 1, (demand + f_extra) * n_modes // N)`` but never below
+    rule 9's current choice; the install + rescale is the shared
+    :func:`apply_dvfs_modes` contract. ``enabled``/``dvfs_ramp`` may be
+    traced flags or Python bools. Twin of the oracle's ``_apply_forecast``.
+    """
+    # --- predictor update (EWMA over this batch's arrival burst) ---
+    newly = (
+        s.job_exists & (s.job_subtime <= s.t) & (s.job_subtime > s.fc_prev_t)
+    )
+    n_new = jnp.sum(newly, dtype=I32)
+    denom = jnp.maximum(n_new, 1).astype(jnp.float32)
+    gap_obs = (s.t - s.fc_last_arr).astype(jnp.float32) / denom
+    res_obs = (
+        jnp.sum(jnp.where(newly, s.job_res, 0), dtype=I32).astype(jnp.float32)
+        / denom
+    )
+    a = const.forecast_alpha
+    one = jnp.float32(1.0)
+    upd = enabled & (n_new > 0)
+    s = s._replace(
+        fc_gap=jnp.where(upd, a * gap_obs + (one - a) * s.fc_gap, s.fc_gap),
+        fc_res=jnp.where(upd, a * res_obs + (one - a) * s.fc_res, s.fc_res),
+        fc_last_arr=jnp.where(upd, s.t, s.fc_last_arr),
+        fc_prev_t=jnp.where(enabled, s.t, s.fc_prev_t),
+    )
+
+    # --- proactive wake: cover predicted demand beyond current capacity ---
+    f_extra = forecast_pressure(s, const)
+    avail = jnp.sum(
+        (s.node_job < 0)
+        & ((s.node_state == IDLE) | (s.node_state == SWITCHING_ON)),
+        dtype=I32,
+    )
+    deficit = queued_demand(s) + f_extra - avail
+    cand = (s.node_job < 0) & (s.node_state == SLEEP)
+    sel = cand & (jnp.cumsum(cand) <= deficit) & (f_extra > 0) & enabled
+    s = s._replace(
+        node_state=jnp.where(sel, SWITCHING_ON, s.node_state),
+        node_until=jnp.where(sel, s.t + const.t_on, s.node_until),
+        n_switch_on=s.n_switch_on + jnp.sum(sel, dtype=I32),
+    )
+
+    # --- DVFS pre-ramp: never below rule 9's current mode ---
+    if static_bool(dvfs_ramp) is False:
+        return s
+    N = s.node_state.shape[0]
+    n_modes = const.dvfs_n_modes
+    fc_mode = jnp.minimum(
+        n_modes - 1, ((queued_demand(s) + f_extra) * n_modes) // N
+    )
+    target = jnp.maximum(s.dvfs_mode, fc_mode.astype(I32))
+    ramp_on = dvfs_ramp & enabled & (f_extra > 0)
+    return apply_dvfs_modes(s, const, target, ramp_on, terminate_overrun)
 
 
 # ---------------------------------------------------------------------------
@@ -386,10 +500,13 @@ class PowerPolicy:
 
     ``dvfs=True`` composes runtime per-group DVFS mode switching (rule 9,
     §DVFS) onto any stack: the queue-pressure ladder by default, agent
-    commands under :class:`RLController`.
+    commands under :class:`RLController`. ``forecast=True`` composes the
+    EWMA arrival-pressure forecaster (rule 10, §Forecast) the same way —
+    proactive wake-ups, plus DVFS pre-ramp when rule 9 is also on.
     """
 
     dvfs: bool = False
+    forecast: bool = False
 
     @property
     def eager_ready(self) -> bool:
@@ -405,6 +522,8 @@ class PowerPolicy:
             rl_grouped=False,
             dvfs_enabled=self.dvfs,
             dvfs_rl=False,
+            forecast_enabled=self.forecast,
+            forecast_dvfs=self.forecast and self.dvfs,
         )
 
     def params(self, base: BasePolicy = BasePolicy.EASY) -> PolicyParams:
@@ -420,7 +539,11 @@ class PowerPolicy:
 
     def psm_label(self) -> str:
         lbl = self._base_label()
-        return f"{lbl}+DVFS" if self.dvfs else lbl
+        if self.dvfs:
+            lbl += "+DVFS"
+        if self.forecast:
+            lbl += "+Forecast"
+        return lbl
 
 
 @dataclasses.dataclass(frozen=True)
@@ -439,7 +562,7 @@ class DVFS(PowerPolicy):
     dvfs: bool = True
 
     def psm_label(self) -> str:
-        return "DVFS"
+        return "DVFS+Forecast" if self.forecast else "DVFS"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -481,6 +604,30 @@ class IPM(TimeoutSleep):
 
 
 @dataclasses.dataclass(frozen=True)
+class Forecast(PowerPolicy):
+    """EWMA arrival-pressure forecaster (rule 10, §Forecast) as a
+    standalone stack: proactive wake-ups on otherwise always-on nodes.
+    Compose it onto a reactive stack with ``"<PSM>+Forecast"`` labels
+    (e.g. ``"EASY PSUS+Forecast"`` = ``TimeoutSleep(forecast=True)``),
+    exactly like ``"+DVFS"``.
+
+    ``horizon``/``alpha`` are *defaults* for the traced EngineConst
+    operands: ``EngineConfig.forecast_horizon``/``forecast_alpha`` win when
+    set, and horizon sweeps override per scenario (the numbers ride the
+    traced axis; only the ``forecast`` enable flag is policy structure,
+    mirroring how ``TimeoutSleep`` declares rule 6 while ``timeout``
+    carries the number).
+    """
+
+    forecast: bool = True
+    horizon: Optional[int] = None
+    alpha: Optional[float] = None
+
+    def psm_label(self) -> str:
+        return "DVFS+Forecast" if self.dvfs else "Forecast"
+
+
+@dataclasses.dataclass(frozen=True)
 class RLController(PowerPolicy):
     """Agent-controlled power commands (legacy PSM ``RL``).
 
@@ -513,9 +660,9 @@ class RLController(PowerPolicy):
 
     def psm_label(self) -> str:
         base = "RL:groups" if self.grouped else "RL"
-        if not self.dvfs:
-            return base
-        return "RL:dvfs" if not self.grouped else f"{base}+DVFS"
+        if self.dvfs:
+            base = "RL:dvfs" if not self.grouped else f"{base}+DVFS"
+        return f"{base}+Forecast" if self.forecast else base
 
 
 # ---------------------------------------------------------------------------
@@ -538,8 +685,8 @@ def policy_from_psm(psm: PSMVariant) -> PowerPolicy:
 
 def psm_of(policy: PowerPolicy) -> Optional[PSMVariant]:
     """Best-effort reverse map (None for policies with no legacy twin)."""
-    if getattr(policy, "dvfs", False):
-        return None  # runtime DVFS postdates the PSMVariant enum
+    if getattr(policy, "dvfs", False) or getattr(policy, "forecast", False):
+        return None  # runtime DVFS / forecast postdate the PSMVariant enum
     if isinstance(policy, RLController):
         return PSMVariant.RL
     if isinstance(policy, IPM):
@@ -565,6 +712,7 @@ _PSM_TOKENS = {
     "PSAS+IPM": IPM(),
     "ALWAYSON": AlwaysOn(),
     "DVFS": DVFS(),
+    "FORECAST": Forecast(),
     "RL": RLController(),
     "RL:GROUPS": RLController(grouped=True),
     "RL:DVFS": RLController(dvfs=True),
@@ -572,18 +720,21 @@ _PSM_TOKENS = {
 _CANONICAL_PSM = ("PSUS", "PSAS", "PSAS+IPM", "AlwaysOn")
 _CANONICAL_RL = ("RL", "RL:groups")
 _CANONICAL_DVFS = ("DVFS",)
+_CANONICAL_FORECAST = ("Forecast", "PSUS+Forecast")
 
 
 def _resolve_psm_token(token: str) -> Optional[PowerPolicy]:
     psm = _PSM_TOKENS.get(token)
     if psm is not None:
         return psm
-    # generic DVFS composition: "<PSM>+DVFS" turns rule 9 on over any
-    # registered stack ("PSUS+DVFS", "PSAS+IPM+DVFS", "RL:GROUPS+DVFS", ...)
-    if token.endswith("+DVFS"):
-        base = _PSM_TOKENS.get(token[: -len("+DVFS")])
-        if base is not None:
-            return dataclasses.replace(base, dvfs=True)
+    # generic rule composition: "<PSM>+DVFS" / "<PSM>+Forecast" turn rules
+    # 9 / 10 on over any registered stack, recursively so the suffixes
+    # stack in either order ("PSUS+DVFS+FORECAST", "PSAS+IPM+FORECAST+DVFS")
+    for suffix, field in (("+DVFS", "dvfs"), ("+FORECAST", "forecast")):
+        if token.endswith(suffix):
+            base = _resolve_psm_token(token[: -len(suffix)])
+            if base is not None:
+                return dataclasses.replace(base, **{field: True})
     return None
 
 
@@ -591,7 +742,8 @@ def from_label(label: str) -> Tuple[BasePolicy, PowerPolicy]:
     """Parse ``"<FCFS|EASY> <PSM>"`` into a (base, policy) pair.
 
     PSM tokens: PSUS | PSAS | PSAS(AutoOn) | PSAS+IPM | AlwaysOn | DVFS |
-    RL | RL:groups | RL:dvfs, plus ``<PSM>+DVFS`` for any of them
+    Forecast | RL | RL:groups | RL:dvfs, plus ``<PSM>+DVFS`` /
+    ``<PSM>+Forecast`` suffixes (stackable, either order) for any of them
     (case-insensitive).
     """
     parts = label.split()
@@ -599,22 +751,27 @@ def from_label(label: str) -> Tuple[BasePolicy, PowerPolicy]:
         psm = _resolve_psm_token(parts[1].upper())
         if psm is not None:
             return _BASE_TOKENS[parts[0].upper()], psm
-    known = scheduler_labels(include_rl=True, include_dvfs=True)
+    known = scheduler_labels(
+        include_rl=True, include_dvfs=True, include_forecast=True
+    )
     raise KeyError(
         f"unknown scheduler label {label!r}{did_you_mean(label, known)}; "
         f"expected one of {', '.join(known)} "
-        "(alias: 'PSAS(AutoOn)' for PSAS; '<PSM>+DVFS' composes rule 9 "
-        "onto any stack)"
+        "(alias: 'PSAS(AutoOn)' for PSAS; '<PSM>+DVFS' / '<PSM>+Forecast' "
+        "compose rules 9 / 10 onto any stack)"
     )
 
 
 def scheduler_labels(
-    include_rl: bool = False, include_dvfs: bool = False
+    include_rl: bool = False,
+    include_dvfs: bool = False,
+    include_forecast: bool = False,
 ) -> Tuple[str, ...]:
     """Canonical labels, in the order the paper's figures use."""
     psms = (
         _CANONICAL_PSM
         + (_CANONICAL_DVFS if include_dvfs else ())
+        + (_CANONICAL_FORECAST if include_forecast else ())
         + (_CANONICAL_RL if include_rl else ())
         + (("RL:dvfs",) if include_rl and include_dvfs else ())
     )

@@ -116,6 +116,22 @@ class PyDES:
         M = self.dvfs_speed.shape[1]
         self.mode_time = [[0.0] * M for _ in range(self.n_groups)]
         self.mode_energy = [[0.0] * M for _ in range(self.n_groups)]
+        # rule 10 (§Forecast) EWMA predictor operands + state; horizon/alpha
+        # resolution mirrors engine.make_const exactly (EngineConfig wins
+        # for the horizon; a Forecast policy's fields are the fallback
+        # defaults), and the inits mirror engine.init_state
+        horizon = config.forecast_horizon
+        if horizon is None:
+            horizon = getattr(config.policy, "horizon", None) or 0
+        alpha = getattr(config.policy, "alpha", None)
+        if alpha is None:
+            alpha = config.forecast_alpha
+        self.fc_horizon = int(horizon)
+        self.fc_alpha = np.float32(alpha)
+        self.fc_gap = np.float32(float(INF_TIME))
+        self.fc_res = np.float32(0.0)
+        self.fc_last_arr = 0
+        self.fc_prev_t = -1
 
         wl = workload.sorted_by_subtime()
         self.jobs: List[_Job] = []
@@ -455,26 +471,16 @@ class PyDES:
                 nd.until = self.t + float(self.t_off[nd.nid])
                 self._gantt_mark(nd)
 
-    def _apply_dvfs(self, mode_cmd=None) -> None:
-        """Rule 9 (§DVFS): per-group mode selection + remaining-work rescale.
+    def _apply_dvfs_modes(self, target: List[int]) -> None:
+        """Install a per-group mode vector + remaining-work rescale — the
+        shared tail of rules 9 and 10.
 
-        Concrete twin of ``policy.apply_dvfs``: the heuristic ladder uses
-        the identical integer expression, the rescale the identical float32
-        expression, so schedules stay bit-exact across engines.
+        Concrete twin of ``policy.apply_dvfs_modes``: the rescale uses the
+        identical float32 expression, so schedules stay bit-exact across
+        engines.
         """
-        N = len(self.nodes)
-        if self.pp.dvfs_rl:
-            if mode_cmd is not None:
-                for g, c in enumerate(np.asarray(mode_cmd).reshape(-1)):
-                    if c >= 0:
-                        self.mode[g] = int(
-                            min(max(int(c), 0), int(self.dvfs_n_modes[g]) - 1)
-                        )
-        else:
-            demand = self._queued_demand()
-            for g in range(self.n_groups):
-                m_g = int(self.dvfs_n_modes[g])
-                self.mode[g] = min(m_g - 1, (demand * m_g) // N)
+        for g in range(self.n_groups):
+            self.mode[g] = int(target[g])
         # rescale running, non-terminated jobs whose allocation speed changed
         for j in self.jobs:
             if j.status != RUNNING or j.terminated:
@@ -499,6 +505,106 @@ class PyDES:
             j.eff_runtime = int(j.finish - j.start)
             j.speed = speed_min
 
+    def _apply_dvfs(self, mode_cmd=None) -> None:
+        """Rule 9 (§DVFS): per-group mode selection; the mode install +
+        remaining-work rescale is the shared :meth:`_apply_dvfs_modes` tail.
+
+        Concrete twin of ``policy.apply_dvfs``: the heuristic ladder uses
+        the identical integer expression.
+        """
+        N = len(self.nodes)
+        if self.pp.dvfs_rl:
+            target = list(self.mode)
+            if mode_cmd is not None:
+                for g, c in enumerate(np.asarray(mode_cmd).reshape(-1)):
+                    if c >= 0:
+                        target[g] = int(
+                            min(max(int(c), 0), int(self.dvfs_n_modes[g]) - 1)
+                        )
+        else:
+            demand = self._queued_demand()
+            target = [
+                min(
+                    int(self.dvfs_n_modes[g]) - 1,
+                    (demand * int(self.dvfs_n_modes[g])) // N,
+                )
+                for g in range(self.n_groups)
+            ]
+        self._apply_dvfs_modes(target)
+
+    def _forecast_pressure(self) -> int:
+        """Predicted extra node demand over the horizon (rule 10) —
+        concrete twin of ``policy.forecast_pressure`` (identical float32
+        expressions, so both engines floor the same value)."""
+        gap = max(self.fc_gap, np.float32(1.0))
+        horizon = np.float32(self.fc_horizon)
+        pressure = (horizon / gap) * self.fc_res
+        N = len(self.nodes)
+        return int(
+            min(max(np.floor(pressure), np.float32(0.0)), np.float32(N))
+        )
+
+    def _apply_forecast(self) -> None:
+        """Rule 10 (§Forecast): EWMA predictor update, proactive wake, and
+        the optional DVFS pre-ramp.
+
+        Concrete twin of ``policy.apply_forecast``: the EWMA updates use the
+        identical float32 expressions (strict form ``a*obs + (1-a)*ewma``
+        from the same inits, so ``alpha=0`` freezes them and the rule is a
+        provable no-op), the wake selects lowest-id sleeping nodes exactly
+        like the engine's cumsum mask, and the pre-ramp never drops below
+        rule 9's current mode.
+        """
+        t = int(self.t)
+        # predictor update (EWMA over this batch's arrival burst)
+        newly = [j for j in self.jobs if self.fc_prev_t < j.subtime <= t]
+        if newly:
+            denom = np.float32(len(newly))
+            gap_obs = np.float32(t - self.fc_last_arr) / denom
+            res_obs = np.float32(sum(j.res for j in newly)) / denom
+            a = self.fc_alpha
+            one = np.float32(1.0)
+            self.fc_gap = a * gap_obs + (one - a) * self.fc_gap
+            self.fc_res = a * res_obs + (one - a) * self.fc_res
+            self.fc_last_arr = t
+        self.fc_prev_t = t
+        # proactive wake fires only on positive predicted pressure — a
+        # zero-horizon (or never-updated) predictor must leave the stack
+        # bit-exact with its reactive base, not degenerate into IPM
+        f_extra = self._forecast_pressure()
+        if f_extra <= 0:
+            return
+        avail = sum(
+            1
+            for nd in self.nodes
+            if nd.job < 0 and nd.state in (IDLE, SWITCHING_ON)
+        )
+        budget = self._queued_demand() + f_extra - avail
+        for nd in self.nodes:  # lowest id first (engine: cumsum <= deficit)
+            if budget <= 0:
+                break
+            if nd.job < 0 and nd.state == SLEEP:
+                nd.state = SWITCHING_ON
+                nd.until = self.t + float(self.t_on[nd.nid])
+                self._gantt_mark(nd)
+                budget -= 1
+        # DVFS pre-ramp: never below rule 9's current mode
+        if not self.pp.forecast_dvfs:
+            return
+        N = len(self.nodes)
+        demand = self._queued_demand() + f_extra
+        target = [
+            max(
+                self.mode[g],
+                min(
+                    int(self.dvfs_n_modes[g]) - 1,
+                    (demand * int(self.dvfs_n_modes[g])) // N,
+                ),
+            )
+            for g in range(self.n_groups)
+        ]
+        self._apply_dvfs_modes(target)
+
     # ---------- event machinery ----------
     def _next_time(self) -> float:
         self.counters["sim_advance"] += 1
@@ -521,6 +627,10 @@ class PyDES:
             )
         if self.pp.rl_enabled and self.cfg.rl_decision_interval:
             cand.append(self.t + self.cfg.rl_decision_interval)
+        if self.pp.forecast_enabled and self.fc_horizon > 0:
+            # rule 10 review tick (twin of the engine's _time_candidates):
+            # re-evaluate the forecast at most one horizon after each batch
+            cand.append(self.t + self.fc_horizon)
         # strictly future events only: an expired-but-guard-blocked timeout
         # otherwise wedges the clock (the guard is re-evaluated at every batch)
         nt = min((c for c in cand if c > self.t), default=INF)
@@ -574,7 +684,7 @@ class PyDES:
         # 4-5. schedule + start
         self._scheduler_pass()
         self._start_jobs()
-        # 6-9. power management: the same flag-gated rule sequence as the
+        # 6-10. power management: the same flag-gated rule sequence as the
         # engine's _power_step (a disabled rule selects no nodes there;
         # here it is simply skipped — identical state either way)
         if self.pp.sleep_enabled:
@@ -589,6 +699,8 @@ class PyDES:
             self._start_jobs()
         if self.pp.dvfs_enabled:
             self._apply_dvfs(mode_cmd)
+        if self.pp.forecast_enabled:
+            self._apply_forecast()
 
     def _complete(self, j: _Job) -> None:
         self.counters["job_lifecycle"] += 1

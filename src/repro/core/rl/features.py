@@ -195,11 +195,45 @@ def compact_dvfs_features(s: SimState, const: EngineConst) -> jnp.ndarray:
     )
 
 
+def forecast_features(s: SimState, const: EngineConst) -> jnp.ndarray:
+    """EWMA-predictor summary, ``f32[4]`` (core/SEMANTICS.md §Forecast).
+
+    Exposes rule 10's predictor state to the agent: smoothed inter-arrival
+    gap (log-hour normalized; the INF_TIME init reads as "never seen an
+    arrival"), smoothed per-arrival resource ask / N, the current predicted
+    extra-node pressure / N, and the configured horizon (log-hour). All
+    terms stay at their init-value constants when no Forecast policy runs,
+    so the block is harmless to stack onto non-forecast observations.
+    """
+    from repro.core.policy import forecast_pressure
+
+    N = s.node_state.shape[0]
+    fN = jnp.float32(N)
+    return jnp.stack(
+        [
+            _t_norm(s.fc_gap),
+            jnp.minimum(s.fc_res / fN, 4.0),
+            forecast_pressure(s, const).astype(jnp.float32) / fN,
+            _t_norm(const.forecast_horizon),
+        ]
+    )
+
+
+def compact_forecast_features(s: SimState, const: EngineConst) -> jnp.ndarray:
+    """compact_features + the forecast-predictor block (the observation for
+    RL stacks composed with rule 10: the agent sees the same arrival
+    pressure the proactive wake acts on)."""
+    return jnp.concatenate(
+        [compact_features(s, const), forecast_features(s, const)]
+    )
+
+
 FEATURE_EXTRACTORS = {
     "compact": compact_features,
     "queue_window": queue_window_features,
     "compact_groups": compact_group_features,
     "compact_dvfs": compact_dvfs_features,
+    "compact_forecast": compact_forecast_features,
 }
 
 
@@ -212,4 +246,6 @@ def feature_size(name: str, window: int = 8, n_groups: int = 1) -> int:
         return 20 + 6 * n_groups
     if name == "compact_dvfs":
         return 20 + 9 * n_groups
+    if name == "compact_forecast":
+        return 20 + 4
     raise KeyError(name)

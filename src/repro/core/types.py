@@ -111,6 +111,15 @@ class EngineConfig:
     # is strictly future, so the burst's tail past W waits for the next
     # unrelated event before it is even scanned.
     merge_bursts: bool = False
+    # rule 10 (core/SEMANTICS.md §Forecast): EWMA arrival-pressure predictor
+    # horizon in seconds. Like ``timeout``/``rl_decision_interval`` these
+    # lower to *traced* EngineConst operands, so a forecast-horizon sweep
+    # rides the one-compile grid; whether the rule runs at all is the
+    # policy stack's ``forecast`` flag (``"<PSM>+Forecast"`` labels).
+    # None lowers to 0 — an enabled Forecast with a zero horizon predicts
+    # zero pressure and is bit-exact with its reactive base.
+    forecast_horizon: Optional[int] = None
+    forecast_alpha: float = 0.25  # EWMA smoothing weight in [0, 1]
 
     NODE_ORDERS = ("id", "cheap", "idle-watts", "pack")
 
@@ -119,6 +128,14 @@ class EngineConfig:
             raise ValueError(
                 f"node_order must be one of {self.NODE_ORDERS}, "
                 f"got {self.node_order!r}"
+            )
+        if not 0.0 <= self.forecast_alpha <= 1.0:
+            raise ValueError(
+                f"forecast_alpha must be in [0, 1], got {self.forecast_alpha!r}"
+            )
+        if self.forecast_horizon is not None and self.forecast_horizon < 0:
+            raise ValueError(
+                f"forecast_horizon must be >= 0, got {self.forecast_horizon!r}"
             )
         from repro.core.policy import policy_from_psm, psm_of
 
@@ -134,6 +151,10 @@ class EngineConfig:
     @property
     def timeout_or_inf(self) -> int:
         return int(INF_TIME) if self.timeout is None else int(self.timeout)
+
+    @property
+    def forecast_horizon_or_zero(self) -> int:
+        return 0 if self.forecast_horizon is None else int(self.forecast_horizon)
 
     def label(self) -> str:
         base = "FCFS" if self.base == BasePolicy.FCFS else "EASY"

@@ -30,9 +30,9 @@ from repro.experiments.spec import Experiment, resolve_platform, resolve_workloa
 
 @dataclasses.dataclass(frozen=True)
 class ExperimentResult:
-    """Rows are scheduler-major x timeout [x platform] x replication, in
-    grid order (a ``platform`` column appears when the spec has a platform
-    axis).
+    """Rows are scheduler-major x timeout [x forecast] [x platform] x
+    replication, in grid order (``forecast`` / ``platform`` columns appear
+    when the spec has those axes).
 
     ``n_compiles`` is the compiled-program count of the grid's jitted
     driver (the one-compile guarantee: 1, or None on JAX versions without
@@ -56,6 +56,8 @@ class ExperimentResult:
                 "wasted_energy_kwh", "mean_wait_s", "utilization"]
         if any("platform" in r for r in self.rows):
             cols.insert(2, "platform")
+        if any("forecast" in r for r in self.rows):
+            cols.insert(2, "forecast")
         lines = [" ".join(f"{c:>18s}" for c in cols)]
         for r in self.rows:
             cells = []
@@ -146,7 +148,11 @@ def _run_single(plat, wl, scenario, cfg):
         pol = cfg.policy
     plat_i = scenario.get("platform", plat)
     cfg_i = dataclasses.replace(
-        cfg, base=base, policy=pol, timeout=scenario["timeout"]
+        cfg,
+        base=base,
+        policy=pol,
+        timeout=scenario["timeout"],
+        forecast_horizon=scenario.get("forecast_horizon", cfg.forecast_horizon),
     )
     state, n = engine.simulate(plat_i, wl, cfg_i, return_compiles=True)
     return metrics_from_state(state, plat_i), n
@@ -186,10 +192,17 @@ def run(
     # scenarios); the declarative grid keeps the names for the rows table
     grid = experiment.grid()
     axis = {name: resolve_platform(spec) for name, spec in experiment.platforms}
-    scenarios = [
-        {**sc, "platform": axis[sc["platform"]]} if "platform" in sc else sc
-        for sc in grid
-    ]
+    scenarios = []
+    for sc in grid:
+        sc = dict(sc)
+        if "platform" in sc:
+            sc["platform"] = axis[sc["platform"]]
+        if "forecast" in sc:
+            # the declarative forecast axis lowers to the traced
+            # EngineConst.forecast_horizon operand (§Forecast) — the raw
+            # field-override branch of engine.sweep's scenario mapping
+            sc["forecast_horizon"] = sc.pop("forecast")
+        scenarios.append(sc)
 
     rows = []
     n_compiles: Optional[int] = None
@@ -223,6 +236,8 @@ def run(
                 "scheduler": sc["scheduler"],
                 "timeout": sc["timeout"],
             }
+            if "forecast" in sc:
+                row["forecast"] = sc["forecast"]
             if "platform" in sc:
                 row["platform"] = sc["platform"]
             row["replication"] = r
@@ -258,7 +273,7 @@ def write_outputs(result: ExperimentResult, out_dir: str) -> None:
         json.dump(_metrics_payload(result), f, indent=2, sort_keys=True)
         f.write("\n")
     rows = result.rows
-    lead = ["scheduler", "timeout", "platform", "replication"]
+    lead = ["scheduler", "timeout", "forecast", "platform", "replication"]
     cols = sorted({k for r in rows for k in r}, key=lambda c: (
         lead.index(c) if c in lead else len(lead),
         c,

@@ -137,10 +137,11 @@ _KNOWN_RL_KEYS = {"checkpoint", "decision_interval"}
 class Experiment:
     """A declarative, reproducible grid study (JSON-round-trippable).
 
-    The grid is the cross product ``schedulers x timeouts [x platforms]``,
-    evaluated as ONE compiled program per replication (``engine.sweep`` over
-    the traced policy axis — platform tables are traced operands too, so the
-    platform axis vmaps like every other). Scheduler labels come from
+    The grid is the cross product ``schedulers x timeouts [x forecasts]
+    [x platforms]``, evaluated as ONE compiled program per replication
+    (``engine.sweep`` over the traced policy axis — platform tables and
+    forecast horizons are traced operands too, so those axes vmap like
+    every other). Scheduler labels come from
     ``policy.from_label``; a timeout of ``None`` means "never switch off".
 
     ``platforms`` is an optional *named* platform axis: a mapping
@@ -163,6 +164,14 @@ class Experiment:
     platform: Union[str, int, dict]  # resolve_platform spec
     schedulers: Tuple[str, ...] = ("EASY PSUS",)
     timeouts: Tuple[Optional[int], ...] = (None,)
+    # optional forecast-horizon axis (core/SEMANTICS.md §Forecast): seconds
+    # of look-ahead for rule 10's EWMA predictor. Horizons are *traced*
+    # EngineConst operands, so the whole horizon sweep rides the same ONE
+    # compiled program as the scheduler/timeout axes. (None,) keeps the
+    # grid forecast-free; entries only bite on ``+Forecast`` labels — on
+    # any other stack the rule is flag-gated off regardless of horizon.
+    forecasts: Tuple[Optional[int], ...] = (None,)
+    forecast_alpha: float = 0.25  # shared EWMA smoothing weight in [0, 1]
     platforms: Tuple = ()  # optional named platform axis ((name, spec), ...)
     rl: Optional[dict] = None  # {"checkpoint": dir, "decision_interval": s}
     node_order: str = "id"  # "id" | "cheap" | "idle-watts" | "pack"
@@ -179,9 +188,20 @@ class Experiment:
         # normalize JSON lists to tuples so specs hash and compare stably
         object.__setattr__(self, "schedulers", tuple(self.schedulers))
         object.__setattr__(self, "timeouts", tuple(self.timeouts))
+        object.__setattr__(self, "forecasts", tuple(self.forecasts))
         object.__setattr__(self, "platforms", self._norm_platforms())
         if not self.schedulers or not self.timeouts:
             raise ValueError("experiment grid needs >= 1 scheduler and timeout")
+        if not self.forecasts:
+            raise ValueError(
+                "forecasts axis cannot be empty; use (None,) for no axis"
+            )
+        for fh in self.forecasts:
+            if fh is not None and (not isinstance(fh, int) or fh < 0):
+                raise ValueError(
+                    f"forecast horizon entries must be None or ints >= 0, "
+                    f"got {fh!r}"
+                )
         if self.replications < 1:
             raise ValueError("replications must be >= 1")
         from repro.core.policy import from_label
@@ -225,16 +245,23 @@ class Experiment:
     # ---- grid ----
     def grid(self):
         """The declarative grid points, in row order (scheduler-major, then
-        timeout, then platform-axis entry). The runner swaps each point's
-        platform *name* for the resolved :class:`PlatformSpec` before
-        handing the scenarios to ``engine.sweep``."""
+        timeout, then forecast horizon, then platform-axis entry). The
+        runner swaps each point's platform *name* for the resolved
+        :class:`PlatformSpec` (and the ``forecast`` key for its traced
+        ``forecast_horizon`` operand) before handing the scenarios to
+        ``engine.sweep``. A trivial ``(None,)`` forecasts axis adds no
+        ``forecast`` key, so forecast-free grids keep their legacy row
+        shape."""
         plats = [name for name, _ in self.platforms] or [None]
         return [
             {"scheduler": s, "timeout": t, **(
+                {"forecast": fh} if fh is not None else {}
+            ), **(
                 {"platform": p} if p is not None else {}
             )}
             for s in self.schedulers
             for t in self.timeouts
+            for fh in self.forecasts
             for p in plats
         ]
 
@@ -249,6 +276,7 @@ class Experiment:
             window=self.window,
             grouped_tables=self.grouped_tables,
             merge_bursts=self.merge_bursts,
+            forecast_alpha=self.forecast_alpha,
         )
 
     # ---- JSON round-trip ----

@@ -16,10 +16,13 @@ Config keys (paper's runtime layer):
                 platforms use the "node_groups"/"nodes" JSON schema
                 (core/SEMANTICS.md §Heterogeneity) and get per-group
                 energy breakdowns in metrics.json
-    scheduler:  "<FCFS|EASY> <PSUS|PSAS|PSAS+IPM|AlwaysOn|DVFS|RL|RL:groups
-                |RL:dvfs|<PSM>+DVFS>"
+    scheduler:  "<FCFS|EASY> <PSUS|PSAS|PSAS+IPM|AlwaysOn|DVFS|Forecast|RL
+                |RL:groups|RL:dvfs|<PSM>+DVFS|<PSM>+Forecast>"
                 (the policy.from_label registry — single source of truth)
     timeout:    idle seconds before switch-off (null = never)
+    forecast_horizon: rule 10 look-ahead seconds (only bites on
+                '+Forecast' labels; null/0 = predict nothing)
+    forecast_alpha:   rule 10 EWMA smoothing weight in [0, 1]
     terminate_overrun: bool
     node_order: "id" | "cheap" | "idle-watts"
                 (default: "cheap" when heterogeneous)
@@ -55,6 +58,7 @@ from repro.experiments import (
 _KNOWN_KEYS = {
     "workload", "platform", "scheduler", "timeout", "terminate_overrun",
     "node_order", "rl", "gantt", "out", "grouped_tables", "merge_bursts",
+    "forecast_horizon", "forecast_alpha",
 }
 _KNOWN_RL_KEYS = {"checkpoint", "decision_interval"}
 
@@ -206,6 +210,9 @@ def run(config: Dict[str, Any]) -> Dict[str, Any]:
         rl_decision_interval=rl_interval,
         grouped_tables=bool(config.get("grouped_tables", False)),
         merge_bursts=bool(config.get("merge_bursts", False)),
+        # rule 10 operands (§Forecast) — only bite on '+Forecast' labels
+        forecast_horizon=config.get("forecast_horizon"),
+        forecast_alpha=float(config.get("forecast_alpha", 0.25)),
     )
     out_dir = config.get("out", "out/sim")
     os.makedirs(out_dir, exist_ok=True)
@@ -283,8 +290,9 @@ def main(argv=None):
         metavar="LABEL",
         help="a policy.from_label scheduler label: "
              f"{', '.join(scheduler_labels(include_rl=True, include_dvfs=True))}"
-             ", or '<PSM>+DVFS' composing rule 9 onto any stack "
-             "(e.g. 'EASY PSAS+IPM+DVFS')",
+             ", or '<PSM>+DVFS' / '<PSM>+Forecast' composing rule 9 / "
+             "rule 10 onto any stack (e.g. 'EASY PSAS+IPM+DVFS', "
+             "'EASY PSUS+Forecast')",
     )
     ap.add_argument("--timeout", type=int, default=None)
     ap.add_argument("--terminate-overrun", action="store_true")

@@ -1,5 +1,10 @@
-"""Seeded SL001 violation: `cfg.shiny` is read inside the jitted scope
-(reachable from run_sim) but missing from _static_trace_key."""
+"""Seeded SL001 violations: `cfg.shiny` and `cfg.forecast_alpha` are read
+inside the jitted scope (reachable from run_sim) but missing from
+_static_trace_key.
+
+The forecast read seeds the rule-10 drift mode specifically: horizon/alpha
+are TRACED EngineConst operands in the live tree, so a static `cfg.*` read
+of them in jitted scope is exactly the bug SL001 exists to catch."""
 
 
 def _static_trace_key(platform, config, J, cap):
@@ -12,6 +17,12 @@ def _scheduler_pass(s, const, cfg):
     return s, width, shiny
 
 
+def apply_forecast(s, const, cfg):
+    alpha = cfg.forecast_alpha
+    return s, alpha
+
+
 def run_sim(s, const, cfg):
     s, _, _ = _scheduler_pass(s, const, cfg)
+    s, _ = apply_forecast(s, const, cfg)
     return s

@@ -1,5 +1,7 @@
-"""Seeded SL002 violation: a raw PolicyParams flag read in a gate position
-instead of routing through static_bool."""
+"""Seeded SL002 violations: raw PolicyParams flag reads in gate positions
+instead of routing through static_bool — one classic (sleep_enabled), one
+against the rule-10 forecast flags (this tree has no policy.py, so the
+linter's DEFAULT_FLAGS fallback must know the forecast fields)."""
 
 
 def _static_trace_key(platform, config, J, cap):
@@ -8,6 +10,8 @@ def _static_trace_key(platform, config, J, cap):
 
 def _power_step(s, const, pp):
     if pp.sleep_enabled:
+        return s
+    if pp.forecast_enabled and not pp.forecast_dvfs:
         return s
     return s
 

@@ -1,4 +1,7 @@
-"""Seeded SL003 violation: an s-first engine rule with no PyDES twin."""
+"""Seeded SL003 violations: s-first engine rules with no PyDES twin — one
+generic (frobnicate) and one spelled exactly like the live rule-10 hook
+(apply_forecast), seeding the one-sided-forecast drift mode: the oracle
+tree next door has no _apply_forecast method."""
 
 
 def _static_trace_key(platform, config, J, cap):
@@ -6,6 +9,10 @@ def _static_trace_key(platform, config, J, cap):
 
 
 def frobnicate(s, const):
+    return s
+
+
+def apply_forecast(s, const):
     return s
 
 

@@ -76,6 +76,7 @@ def _draw_config(rng):
         timeout=_TIMEOUTS[int(rng.integers(len(_TIMEOUTS)))],
         terminate_overrun=bool(rng.integers(2)),
         node_order=("id", "cheap")[int(rng.integers(2))],
+        grouped_tables=bool(rng.integers(2)),
     )
 
 
@@ -105,6 +106,7 @@ if HAVE_HYPOTHESIS:
             timeout=draw(st.sampled_from(_TIMEOUTS)),
             terminate_overrun=draw(st.booleans()),
             node_order=draw(st.sampled_from(["id", "cheap"])),
+            grouped_tables=draw(st.booleans()),
         )
 
 

@@ -50,6 +50,7 @@ def test_policy_params_static_lowering():
         backfill=True, eager_ready=True, sleep_enabled=False,
         ipm_enabled=False, rl_enabled=False, rl_grouped=False,
         dvfs_enabled=True, dvfs_rl=False,
+        forecast_enabled=False, forecast_dvfs=False,
     )
     assert all(isinstance(v, bool) for v in pp.static())
     # static() round-trips through traced() values

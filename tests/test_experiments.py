@@ -263,11 +263,13 @@ def test_policy_params_lowering():
         backfill=True, eager_ready=True, sleep_enabled=True,
         ipm_enabled=False, rl_enabled=False, rl_grouped=False,
         dvfs_enabled=False, dvfs_rl=False,
+        forecast_enabled=False, forecast_dvfs=False,
     )
     assert IPM().params(BasePolicy.FCFS) == PolicyParams(
         backfill=False, eager_ready=False, sleep_enabled=True,
         ipm_enabled=True, rl_enabled=False, rl_grouped=False,
         dvfs_enabled=False, dvfs_rl=False,
+        forecast_enabled=False, forecast_dvfs=False,
     )
     from repro.core.policy import DVFS, AlwaysOn, RLController
 

@@ -1,0 +1,337 @@
+"""Forecast-driven proactive power management (core/SEMANTICS.md §Forecast).
+
+Covers: the metamorphic zero-knowledge guarantees (``horizon=0`` and
+``alpha=0`` Forecast stacks are bit-exact with their reactive base — engine
+superset program, specialized single-run, and oracle, all three), engine ==
+oracle parity for live predictors across stacks (incl. the DVFS pre-ramp),
+the scheduler x horizon one-compile sweep, the experiments-layer forecast
+axis, the label registry, and the config validation guards.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.metrics import metrics_from_state, schedule_table
+from repro.core.policy import Forecast, from_label, scheduler_labels
+from repro.core.ref.pydes import run_pydes
+from repro.core.types import EngineConfig
+from repro.workloads.generator import GeneratorConfig, generate_workload
+from repro.workloads.platform import PlatformSpec, dvfs_platform_example
+
+FC_LABELS = (
+    "EASY PSUS+Forecast",
+    "FCFS PSUS+Forecast",
+    "EASY PSAS+IPM+Forecast",
+    "EASY Forecast",
+)
+
+
+def _wl(n_jobs=60, seed=11, **kw):
+    kw.setdefault("overrun_prob", 0.2)
+    return generate_workload(
+        GeneratorConfig(n_jobs=n_jobs, nb_res=16, seed=seed, **kw)
+    )
+
+
+def _plat():
+    return PlatformSpec(nb_nodes=16, t_switch_on=120, t_switch_off=180)
+
+
+# ------------------------------------- metamorphic zero-knowledge identity
+
+def _base_label(label: str) -> str:
+    base = label.replace("+Forecast", "")
+    return base.replace(" Forecast", " AlwaysOn")
+
+
+@pytest.mark.parametrize("label", FC_LABELS)
+@pytest.mark.parametrize(
+    "kw",
+    [dict(forecast_horizon=0), dict(forecast_horizon=None),
+     dict(forecast_horizon=900, forecast_alpha=0.0)],
+    ids=["h=0", "h=None", "alpha=0"],
+)
+def test_zero_knowledge_forecast_is_bit_exact_with_reactive_base(label, kw):
+    """``horizon=0`` (predicts nothing) and ``alpha=0`` (EWMAs frozen at
+    their inits) make rule 10 a provable no-op: schedules and the f32
+    energy ledger are bit-exact with the reactive base, on the specialized
+    single-run path, the traced superset program, and the oracle."""
+    plat, wl = _plat(), _wl()
+    gb, gp = from_label(_base_label(label))
+    fb, fp = from_label(label)
+    shared = dict(timeout=240, terminate_overrun=True)
+    golden = engine.simulate(
+        plat, wl, EngineConfig(base=gb, policy=gp, **shared)
+    )
+    cfg = EngineConfig(base=fb, policy=fp, **shared, **kw)
+    for specialize in (True, False):  # DCE'd single-run AND superset program
+        s = engine.simulate(plat, wl, cfg, specialize=specialize)
+        np.testing.assert_array_equal(
+            schedule_table(s), schedule_table(golden)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(s.energy), np.asarray(golden.energy)
+        )
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(des.schedule_table(), schedule_table(golden))
+
+
+def test_zero_knowledge_dvfs_preramp_is_identity():
+    """The DVFS pre-ramp composes into the identity too: a zero-horizon
+    DVFS+Forecast stack matches plain DVFS bit-exactly (schedule AND the
+    per-mode ledgers)."""
+    plat, wl = dvfs_platform_example(16), _wl()
+    gb, gp = from_label("EASY DVFS")
+    fb, fp = from_label("EASY DVFS+Forecast")
+    golden = engine.simulate(
+        plat, wl, EngineConfig(base=gb, policy=gp, timeout=240)
+    )
+    cfg = EngineConfig(base=fb, policy=fp, timeout=240, forecast_horizon=0)
+    s = engine.simulate(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), schedule_table(golden))
+    np.testing.assert_array_equal(
+        np.asarray(s.energy), np.asarray(golden.energy)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(s.mode_energy), np.asarray(golden.mode_energy)
+    )
+
+
+# -------------------------------------------------- live-predictor parity
+
+@pytest.mark.parametrize("label", FC_LABELS)
+@pytest.mark.parametrize("horizon", [300, 1800])
+def test_forecast_oracle_parity(label, horizon):
+    """Live predictors: engine == oracle bit-exact schedules and energy
+    within the f32-Kahan tolerance, across stacks and horizons."""
+    plat, wl = _plat(), _wl()
+    base, pol = from_label(label)
+    cfg = EngineConfig(base=base, policy=pol, timeout=120,
+                       forecast_horizon=horizon)
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, plat)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+    assert m.makespan_s == m_ref.makespan_s
+
+
+def test_forecast_dvfs_preramp_oracle_parity():
+    """The pre-ramp path (rule 10 driving rule 9's shared install+rescale
+    tail) stays bit-exact across engines, mode ledgers included."""
+    plat, wl = dvfs_platform_example(16), _wl()
+    base, pol = from_label("EASY DVFS+Forecast")
+    cfg = EngineConfig(base=base, policy=pol, timeout=240,
+                       forecast_horizon=900)
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+    m = metrics_from_state(s, plat)
+    assert m.total_energy_j == pytest.approx(m_ref.total_energy_j, rel=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(m.mode_residency_s),
+        np.asarray(m_ref.mode_residency_s),
+        rtol=1e-5,
+    )
+
+
+def test_forecast_actually_wakes_nodes_proactively():
+    """A live predictor must *do* something: on a bursty arrival stream the
+    +Forecast stack switches on more nodes than its reactive base (the
+    n_switch_on counter counts rules 7/8/10 wake-ups) and the schedule
+    diverges — while remaining in lockstep with the oracle."""
+    plat, wl = _plat(), _wl()
+    gb, gp = from_label("EASY PSUS")
+    golden = engine.simulate(
+        plat, wl, EngineConfig(base=gb, policy=gp, timeout=120)
+    )
+    base, pol = from_label("EASY PSUS+Forecast")
+    cfg = EngineConfig(base=base, policy=pol, timeout=120,
+                       forecast_horizon=600)
+    s = engine.simulate(plat, wl, cfg)
+    assert int(np.asarray(s.n_switch_on)) > int(np.asarray(golden.n_switch_on))
+    assert not np.array_equal(schedule_table(s), schedule_table(golden))
+    _, des = run_pydes(plat, wl, cfg)
+    np.testing.assert_array_equal(schedule_table(s), des.schedule_table())
+
+
+def test_forecast_predictor_state_updates():
+    """The EWMA state really moves off its inits with alpha > 0 and stays
+    frozen with alpha = 0 (the identity's mechanism, checked directly)."""
+    plat, wl = _plat(), _wl(n_jobs=30, seed=7)
+    base, pol = from_label("EASY PSUS+Forecast")
+    live = engine.simulate(
+        plat, wl,
+        EngineConfig(base=base, policy=pol, timeout=120,
+                     forecast_horizon=600, forecast_alpha=0.5),
+    )
+    assert float(np.asarray(live.fc_gap)) < float(2**30)
+    assert float(np.asarray(live.fc_res)) > 0.0
+    assert int(np.asarray(live.fc_prev_t)) >= 0
+    frozen = engine.simulate(
+        plat, wl,
+        EngineConfig(base=base, policy=pol, timeout=120,
+                     forecast_horizon=600, forecast_alpha=0.0),
+    )
+    assert float(np.asarray(frozen.fc_gap)) == float(2**30)
+    assert float(np.asarray(frozen.fc_res)) == 0.0
+
+
+# ----------------------------------------------- one-compile horizon sweep
+
+def test_scheduler_x_forecast_grid_one_compile():
+    """Schedulers x policy stacks x forecast horizons: ONE compiled program
+    (horizons are traced EngineConst operands), rows bit-exact with their
+    per-config specialized compiles."""
+    plat, wl = _plat(), _wl(n_jobs=40, seed=2)
+    cfg = EngineConfig(timeout=300, window=28)
+    scenarios = [
+        "EASY PSUS",
+        "EASY PSUS+Forecast",
+        {"scheduler": "EASY PSUS+Forecast", "forecast_horizon": 600},
+        {"scheduler": "EASY PSUS+Forecast", "forecast_horizon": 1800},
+        {"scheduler": "EASY PSAS+IPM+Forecast", "forecast_horizon": 600},
+        {"scheduler": "FCFS PSUS", "timeout": 900},
+    ]
+    batch = engine.sweep(plat, wl, scenarios, cfg)
+    if batch.n_compiles is not None:
+        assert batch.n_compiles == 1
+    singles = [
+        ("EASY PSUS", None, 300),
+        ("EASY PSUS+Forecast", None, 300),
+        ("EASY PSUS+Forecast", 600, 300),
+        ("EASY PSUS+Forecast", 1800, 300),
+        ("EASY PSAS+IPM+Forecast", 600, 300),
+        ("FCFS PSUS", None, 900),
+    ]
+    for i, (label, horizon, timeout) in enumerate(singles):
+        base, pol = from_label(label)
+        single = engine.simulate(
+            plat, wl,
+            EngineConfig(base=base, policy=pol, timeout=timeout, window=28,
+                         forecast_horizon=horizon),
+        )
+        np.testing.assert_array_equal(
+            schedule_table(batch.state_at(i)), schedule_table(single),
+            err_msg=f"{label} h={horizon}",
+        )
+    # rows 1 (no horizon -> 0) and 0 (reactive base) are the identity pair
+    np.testing.assert_array_equal(
+        schedule_table(batch.state_at(1)), schedule_table(batch.state_at(0))
+    )
+
+
+def test_experiment_forecast_axis():
+    """The declarative ``forecasts`` axis: one compiled program, a
+    ``forecast`` rows column, and the h=0 rows equal to the reactive base
+    per label."""
+    from repro.experiments import Experiment, run as run_exp
+
+    exp = Experiment(
+        name="fc-axis",
+        workload={"preset": "fig3_small", "n_jobs": 40},
+        platform=16,
+        schedulers=("EASY PSUS", "EASY PSUS+Forecast"),
+        timeouts=(120,),
+        forecasts=(0, 1800),
+    )
+    res = run_exp(exp)
+    if res.n_compiles is not None:
+        assert res.n_compiles == 1
+    assert [r["forecast"] for r in res.rows] == [0, 1800, 0, 1800]
+    by = {(r["scheduler"], r["forecast"]): r for r in res.rows}
+    b0 = by[("EASY PSUS", 0)]
+    f0 = by[("EASY PSUS+Forecast", 0)]
+    assert b0["total_energy_kwh"] == f0["total_energy_kwh"]
+    assert b0["mean_wait_s"] == f0["mean_wait_s"]
+    # a trivial (None,) axis keeps the legacy row shape
+    legacy = dataclasses.replace(exp, forecasts=(None,),
+                                 schedulers=("EASY PSUS",))
+    assert all("forecast" not in sc for sc in legacy.grid())
+
+
+def test_experiment_forecast_single_point_specialized_path():
+    """A 1-point grid with a forecast entry takes the specialized
+    ``engine.simulate`` path and still honors the horizon."""
+    from repro.experiments import Experiment, run as run_exp
+
+    spec = dict(
+        name="fc-single",
+        workload={"preset": "fig3_small", "n_jobs": 40},
+        platform=16,
+        schedulers=("EASY PSUS+Forecast",),
+        timeouts=(120,),
+    )
+    r_h = run_exp(Experiment(forecasts=(1800,), **spec)).rows[0]
+    r_0 = run_exp(Experiment(forecasts=(0,), **spec)).rows[0]
+    assert r_h["forecast"] == 1800 and r_0["forecast"] == 0
+    assert r_h["total_energy_kwh"] != r_0["total_energy_kwh"]
+
+
+# ------------------------------------------------- registry + validation
+
+def test_forecast_label_registry():
+    assert from_label("EASY Forecast")[1] == Forecast()
+    assert from_label("easy psus+forecast")[1].forecast
+    # +DVFS / +Forecast stack in either order, onto any base
+    a = from_label("FCFS PSAS+IPM+DVFS+Forecast")[1]
+    b = from_label("FCFS PSAS+IPM+Forecast+DVFS")[1]
+    assert a == b and a.dvfs and a.forecast
+    assert from_label("EASY DVFS+Forecast")[1].psm_label() == "DVFS+Forecast"
+    assert from_label("EASY RL:groups+Forecast")[1].psm_label() == (
+        "RL:groups+Forecast"
+    )
+    labels = scheduler_labels(include_forecast=True)
+    assert "EASY Forecast" in labels and "EASY PSUS+Forecast" in labels
+    with pytest.raises(KeyError, match="did you mean"):
+        from_label("EASY PSUS+Forcast")
+
+
+def test_forecast_config_validation():
+    with pytest.raises(ValueError, match="forecast_alpha"):
+        EngineConfig(forecast_alpha=1.5)
+    with pytest.raises(ValueError, match="forecast_horizon"):
+        EngineConfig(forecast_horizon=-1)
+    from repro.experiments import Experiment
+
+    spec = dict(name="x", workload="preset:fig3_small", platform=8)
+    with pytest.raises(ValueError, match="forecast horizon"):
+        Experiment(forecasts=(-5,), **spec)
+    with pytest.raises(ValueError, match="forecasts axis"):
+        Experiment(forecasts=(), **spec)
+
+
+def test_forecast_policy_fields_are_fallback_defaults():
+    """``Forecast(horizon=..., alpha=...)`` seed the traced operands when
+    the EngineConfig leaves them unset; an explicit EngineConfig horizon
+    wins (core/SEMANTICS.md §Forecast)."""
+    plat = _plat()
+    pol = Forecast(horizon=450, alpha=0.5)
+    const = engine.make_const(plat, EngineConfig(policy=pol))
+    assert int(np.asarray(const.forecast_horizon)) == 450
+    assert float(np.asarray(const.forecast_alpha)) == 0.5
+    const2 = engine.make_const(
+        plat, EngineConfig(policy=pol, forecast_horizon=60)
+    )
+    assert int(np.asarray(const2.forecast_horizon)) == 60
+
+
+def test_sim_driver_runs_forecast_label(tmp_path):
+    from repro.launch.sim import run as sim_run
+
+    out = str(tmp_path / "run")
+    res = sim_run(
+        {
+            "workload": "preset:fig3_small",
+            "platform": 16,
+            "scheduler": "EASY PSUS+Forecast",
+            "timeout": 120,
+            "forecast_horizon": 600,
+            "gantt": False,
+            "out": out,
+        }
+    )
+    assert res["scheduler"] == "EASY PSUS+Forecast"
+    assert res["total_energy_kwh"] > 0

@@ -35,8 +35,35 @@ def test_seeded_violation_fires(rule):
 
 
 def test_sl001_names_the_missing_field():
-    (f,) = _run(os.path.join(FIXTURES, "sl001"), only=["SL001"])
-    assert "cfg.shiny" in f.msg and "_static_trace_key" in f.msg
+    findings = _run(os.path.join(FIXTURES, "sl001"), only=["SL001"])
+    text = "\n".join(f.msg for f in findings)
+    assert "cfg.shiny" in text and "_static_trace_key" in text
+
+
+def test_sl001_catches_unkeyed_forecast_read():
+    """A static `cfg.forecast_alpha` read in jitted scope (rule 10 drift
+    mode: horizon/alpha must ride EngineConst, not the config) is named."""
+    findings = _run(os.path.join(FIXTURES, "sl001"), only=["SL001"])
+    assert any("cfg.forecast_alpha" in f.msg for f in findings)
+
+
+def test_sl002_catches_raw_forecast_gates():
+    """Both rule-10 flags fire through the DEFAULT_FLAGS fallback (the
+    fixture tree carries no policy.py to introspect PolicyParams from)."""
+    findings = _run(os.path.join(FIXTURES, "sl002"), only=["SL002"])
+    text = "\n".join(f.msg for f in findings)
+    assert ".forecast_enabled" in text
+    assert ".forecast_dvfs" in text
+
+
+def test_sl003_catches_one_sided_forecast_twin():
+    """An engine-side `apply_forecast` with no PyDES._apply_forecast is a
+    one-sided rule-10 — exactly the drift SL003 keeps two-sided."""
+    findings = _run(os.path.join(FIXTURES, "sl003"), only=["SL003"])
+    assert any(
+        "`apply_forecast`" in f.msg and "PyDES.apply_forecast" in f.msg
+        for f in findings
+    )
 
 
 def test_sl004_flags_both_contract_halves():

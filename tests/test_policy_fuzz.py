@@ -1,0 +1,148 @@
+"""Differential fuzz over the policy stack: engine == oracle, always.
+
+Random workloads x platforms x composed policy stacks (every registry label
+plus deeper ``+DVFS``/``+Forecast`` compositions), each case asserting
+bit-exact schedule parity between the vectorized JAX engine and the
+sequential oracle AND energy-ledger consistency (total == per-group ==
+per-state tilings, within the f32-Kahan-vs-f64 tolerance).
+
+Like ``test_engine_properties.py``, hypothesis is optional: when installed
+the strategies fuzz the space; when absent the identical properties still
+*execute* against a deterministic seeded corpus drawn from the same
+distributions. ``SPARS_FUZZ_CASES`` scales the lane: tier-1 runs the
+bounded default, the nightly lane sets 200+ (see .github/workflows).
+"""
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import engine
+from repro.core.metrics import metrics_from_state, schedule_table
+from repro.core.policy import from_label, scheduler_labels
+from repro.core.ref.pydes import run_pydes
+from repro.core.types import EngineConfig
+from repro.workloads.platform import (
+    PlatformSpec,
+    dvfs_platform_example,
+    mixed_platform_example,
+)
+from repro.workloads.workload import workload_from_arrays
+
+N_CASES = int(os.environ.get("SPARS_FUZZ_CASES", "20"))
+
+# three fixed platform shapes (shapes are compiled structure; the *values*
+# — watts, speeds, transition delays, mode tables — are traced operands):
+# homogeneous, 3-group heterogeneous, 3-group with real DVFS mode tables
+PLATS = (
+    PlatformSpec(nb_nodes=8, t_switch_on=120, t_switch_off=180),
+    mixed_platform_example(8),
+    dvfs_platform_example(8),
+)
+
+# every registry label (base schedulers, DVFS, Forecast) plus deeper rule
+# compositions the canonical list does not enumerate
+LABELS = tuple(scheduler_labels(include_dvfs=True, include_forecast=True)) + (
+    "EASY PSAS+IPM+Forecast",
+    "EASY PSAS+IPM+DVFS",
+    "EASY DVFS+Forecast",
+    "FCFS PSUS+DVFS+Forecast",
+)
+
+_TIMEOUTS = (None, 30, 240)
+_HORIZONS = (0, 120, 900)
+_ALPHAS = (0.0, 0.25, 0.9)
+_ORDERS = ("id", "cheap", "pack")
+
+
+def _draw_case(rng):
+    """One fuzz case: (platform, workload, config), drawn from an
+    np.random.Generator so the hypothesis and seeded-corpus drivers sample
+    the identical space."""
+    plat = PLATS[int(rng.integers(len(PLATS)))]
+    N = plat.nb_nodes
+    n = int(rng.integers(3, 15))
+    res = rng.integers(1, N + 1, n)
+    subtime = np.sort(rng.integers(0, 4001, n))
+    runtime = rng.integers(1, 3001, n)
+    reqtime = np.maximum(1, runtime + rng.integers(-50, 301, n))
+    wl = workload_from_arrays(
+        res.tolist(), subtime.tolist(), runtime.tolist(), reqtime.tolist(),
+        nb_res=N,
+    )
+    base, pol = from_label(LABELS[int(rng.integers(len(LABELS)))])
+    cfg = EngineConfig(
+        base=base,
+        policy=pol,
+        timeout=_TIMEOUTS[int(rng.integers(len(_TIMEOUTS)))],
+        terminate_overrun=bool(rng.integers(2)),
+        node_order=_ORDERS[int(rng.integers(len(_ORDERS)))],
+        grouped_tables=bool(rng.integers(2)),
+        merge_bursts=bool(rng.integers(2)),
+        window=16,
+        forecast_horizon=int(_HORIZONS[int(rng.integers(len(_HORIZONS)))]),
+        forecast_alpha=float(_ALPHAS[int(rng.integers(len(_ALPHAS)))]),
+    )
+    return plat, wl, cfg
+
+
+def _check_case(plat, wl, cfg):
+    tag = (
+        f"{cfg.label()} timeout={cfg.timeout} h={cfg.forecast_horizon} "
+        f"a={cfg.forecast_alpha} order={cfg.node_order} "
+        f"grouped={cfg.grouped_tables} merge={cfg.merge_bursts} "
+        f"overrun={cfg.terminate_overrun} plat={plat.nb_nodes}n/"
+        f"{plat.n_groups()}g"
+    )
+    s = engine.simulate(plat, wl, cfg)
+    m_ref, des = run_pydes(plat, wl, cfg)
+    # schedule parity: bit-exact starts/finishes/termination verdicts
+    np.testing.assert_array_equal(
+        schedule_table(s), des.schedule_table(),
+        err_msg=f"engine/oracle schedule divergence: {tag}",
+    )
+    m = metrics_from_state(s, plat)
+    assert m.makespan_s == m_ref.makespan_s, tag
+    assert m.n_terminated == m_ref.n_terminated, tag
+    # energy parity (engine f32 Kahan vs oracle f64)
+    assert m.total_energy_j == pytest.approx(
+        m_ref.total_energy_j, rel=1e-5, abs=1e-3
+    ), tag
+    # ledger consistency: the per-group and per-state views tile the total
+    assert m.total_energy_j == pytest.approx(
+        sum(sum(g) for g in m.energy_by_group_j), rel=1e-5, abs=1e-3
+    ), tag
+    assert m.total_energy_j == pytest.approx(
+        sum(m.energy_by_state_j), rel=1e-5, abs=1e-3
+    ), tag
+    assert 0.0 <= m.wasted_energy_j <= m.total_energy_j + 1e-6, tag
+    # DVFS stacks: the mode ledgers agree across engines too
+    if any(sum(row) > 0 for row in m_ref.mode_residency_s):
+        np.testing.assert_allclose(
+            np.asarray(m.mode_residency_s),
+            np.asarray(m_ref.mode_residency_s),
+            rtol=1e-5, err_msg=tag,
+        )
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=N_CASES, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_policy_stack_differential_fuzz(seed):
+        _check_case(*_draw_case(np.random.default_rng(seed)))
+
+else:
+
+    @pytest.mark.parametrize("case", range(N_CASES))
+    def test_policy_stack_differential_fuzz(case):
+        # the seed base is arbitrary but fixed: the corpus is reproducible
+        # and disjoint from the test_engine_properties corpora
+        _check_case(*_draw_case(np.random.default_rng(77_000 + case)))

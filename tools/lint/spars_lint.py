@@ -292,6 +292,7 @@ def check_sl001(root: str) -> List[Finding]:
 DEFAULT_FLAGS = (
     "backfill", "eager_ready", "sleep_enabled", "ipm_enabled",
     "rl_enabled", "rl_grouped", "dvfs_enabled", "dvfs_rl",
+    "forecast_enabled", "forecast_dvfs",
 )
 
 STATIC_ACCESSOR = "static_bool"
