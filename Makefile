@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all test-slow test-nightly fuzz bench-scale lint docs-check
+.PHONY: test test-all test-slow test-nightly fuzz bench-scale serve-smoke lint docs-check
 
 # tier-1 gate (what CI and the ROADMAP "Tier-1 verify" line run);
 # pytest.ini excludes the `slow` marker from this run
@@ -29,12 +29,24 @@ test-slow:
 # the sequential oracle at 11 200 nodes — SEMANTICS §Group-indexed
 # tables; green since PR 8: 11.6s grouped vs 17.9s oracle), and
 # bench_curie asserts grouped == dense per scheduler label on the
-# replayed Curie trace.
-test-nightly: test-slow fuzz
+# replayed Curie trace. The forced-8-device step gates the device-sharded
+# sweep (SEMANTICS §Device-sharded sweeps): a 64-scenario grid sharded
+# across 8 host devices must stay ONE compile, row-for-row bit-exact vs
+# the single-device sweep, and faster (--assert-sharded-speedup; ~2x on
+# a 1-core container — per-shard while_loop early exit).
+test-nightly: test-slow fuzz serve-smoke
 	$(PY) benchmarks/bench_scale.py --jobs 120 --nodes 256 --oracle-jobs 40 --hetero
 	$(PY) benchmarks/bench_scale.py --jobs 200 --nodes 11200 --oracle-jobs 50 --sweep 4 --assert-beat-oracle
 	$(PY) benchmarks/bench_curie.py
 	$(PY) benchmarks/bench_forecast.py
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 $(PY) benchmarks/bench_scale.py --jobs 60 --nodes 256 --oracle-jobs 30 --sweep 64 --devices 8 --assert-sharded-speedup
+
+# simulation-as-a-service self-test (SEMANTICS §Device-sharded sweeps,
+# service layer): two queued same-shaped experiment grids — the second
+# request MUST reuse the first's compiled sweep program (all compile-cache
+# hits, zero misses)
+serve-smoke:
+	$(PY) -m repro.launch.sim_serve --smoke
 
 # the differential policy-fuzz lane at nightly depth (tier-1 runs the
 # bounded 20-case default via the plain pytest gate); SPARS_FUZZ_CASES

@@ -72,6 +72,27 @@ def main(argv=None):
     t_vmap = time.perf_counter() - t0
     n_vmap = args.steps * args.envs
 
+    # --- sharded vmapped batch (core/SEMANTICS.md §Device-sharded sweeps,
+    # RL layer): the same jitted step over an env batch placed on the 1-D
+    # device mesh — XLA partitions the elementwise batch, so each device
+    # rolls out envs/D environments in parallel
+    t_shard = None
+    D = jax.device_count()
+    if D > 1 and args.envs % D == 0:
+        from repro.core.rl.env import shard_env_batch
+
+        states_sh, _ = jax.jit(jax.vmap(functools.partial(env_reset, ecfg, const)))(
+            shard_env_batch(sims0, D)
+        )
+        actions_sh = shard_env_batch(actions, D)
+        states_sh, _, r, d, _ = vstep(states_sh, actions_sh)  # compile
+        jax.block_until_ready(r)
+        t0 = time.perf_counter()
+        for _ in range(args.steps):
+            states_sh, _, r, d, _ = vstep(states_sh, actions_sh)
+        jax.block_until_ready(r)
+        t_shard = time.perf_counter() - t0
+
     # --- A2C update throughput ---
     acfg = A2CConfig(n_envs=args.envs, n_steps=8)
     update, opt = make_update_fn(ecfg, const, sims0, acfg)
@@ -95,11 +116,16 @@ def main(argv=None):
     print(f"host_single_env_steps_per_s={host_rate:.0f}")
     print(f"vmapped_{args.envs}env_steps_per_s={vmap_rate:.0f}")
     print(f"vmap_speedup={vmap_rate/host_rate:.1f}x")
+    rates = dict(host=host_rate, vmap=vmap_rate)
+    if t_shard is not None:
+        shard_rate = n_vmap / t_shard
+        rates["sharded"] = shard_rate
+        print(f"sharded_{args.envs}env_x{D}dev_steps_per_s={shard_rate:.0f}")
     print(
         f"a2c_update_s={t_upd/n_upd:.3f} "
         f"env_steps_per_s_in_training={env_steps_per_update*n_upd/t_upd:.0f}"
     )
-    return dict(host=host_rate, vmap=vmap_rate)
+    return rates
 
 
 if __name__ == "__main__":

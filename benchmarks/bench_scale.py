@@ -43,6 +43,14 @@ def main(argv=None):
     ap.add_argument("--assert-beat-oracle", action="store_true",
                     help="fail unless the grouped-tables single run beats "
                          "the sequential pydes oracle (the nightly gate)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the sweep scenario axis across this many "
+                         "local devices (default: all of them when more "
+                         "than one is visible)")
+    ap.add_argument("--assert-sharded-speedup", action="store_true",
+                    help="fail unless the sharded sweep beats the "
+                         "single-device sweep (the nightly forced-8-device "
+                         "gate; needs a >= 64-scenario grid to be fair)")
     args = ap.parse_args(argv)
 
     gcfg = PRESETS["cea_curie"]
@@ -191,6 +199,43 @@ def main(argv=None):
     if n_compiles is not None:
         assert n_compiles == 1, f"grid recompiled: {n_compiles} programs"
 
+    # --- the same grid sharded across local devices (core/SEMANTICS.md
+    # §Device-sharded sweeps): one mesh-lowered program, still ONE compile,
+    # row-for-row bit-exact vs the single-device sweep. The win compounds
+    # from parallel placement AND per-shard while_loop exit — each device's
+    # batch loop stops at ITS lanes' horizon instead of the global max, so
+    # a divergent grid (spread timeouts) does strictly less work even on
+    # one core
+    t_sweep_sharded = None
+    D = args.devices if args.devices is not None else jax.device_count()
+    if D > 1:
+        experiments.run(exp, platform=plat, workload=wl, devices=D)  # warm-up
+        t0 = time.perf_counter()
+        result_sh = experiments.run(exp, platform=plat, workload=wl, devices=D)
+        t_sweep_sharded = time.perf_counter() - t0
+        assert [tuple(sorted(r.items())) for r in result_sh.rows] == [
+            tuple(sorted(r.items())) for r in result.rows
+        ], "sharded sweep rows are not bit-exact vs the single-device sweep"
+        if result_sh.n_compiles is not None:
+            assert result_sh.n_compiles == 1, (
+                f"sharded grid recompiled: {result_sh.n_compiles} programs"
+            )
+        if args.assert_sharded_speedup:
+            if t_sweep_sharded >= t_sweep:  # best-of-2 noise guard
+                t0 = time.perf_counter()
+                experiments.run(exp, platform=plat, workload=wl)
+                t_sweep = min(t_sweep, time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                experiments.run(exp, platform=plat, workload=wl, devices=D)
+                t_sweep_sharded = min(
+                    t_sweep_sharded, time.perf_counter() - t0
+                )
+            assert t_sweep_sharded < t_sweep, (
+                f"sharded {K}-scenario sweep ({t_sweep_sharded:.2f}s, "
+                f"{D} devices) did not beat the single-device sweep "
+                f"({t_sweep:.2f}s)"
+            )
+
     # --- sequential Python oracle (the paper's SPARS engine class) ---
     oracle_jobs = args.oracle_jobs or args.jobs
     wl_o = (
@@ -232,19 +277,28 @@ def main(argv=None):
         f"= {t_sweep/K:.2f}s per simulation "
         f"({t_oracle*K/t_sweep:.1f}x vs {K} sequential oracle runs)"
     )
+    if t_sweep_sharded is not None:
+        print(
+            f"jax_{K}way_grid_sharded_s={t_sweep_sharded:.2f} "
+            f"({D} devices, bit-exact rows; "
+            f"{t_sweep/t_sweep_sharded:.2f}x vs the single-device sweep)"
+        )
     if oracle_jobs == args.jobs:
         print(f"energy_rel_dev_vs_oracle={dev:.2e}")
     print(
         f"total_energy_kwh={m.total_energy_j/3.6e6:.1f} "
         f"mean_wait_s={m.mean_wait_s:.0f} utilization={m.utilization:.4f}"
     )
-    return dict(
+    out = dict(
         t_jax=t_jax, t_jax_spec=t_spec, t_jax_fused=t_fused,
         t_jax_grouped=t_grouped,
         t_oracle=t_oracle, t_sweep=t_sweep,
         batches=batches, n_compiles=n_compiles, grid_k=K, jobs=args.jobs,
         nodes=args.nodes,
     )
+    if t_sweep_sharded is not None:
+        out.update(t_sweep_sharded=t_sweep_sharded, sweep_devices=D)
+    return out
 
 
 if __name__ == "__main__":

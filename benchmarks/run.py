@@ -74,10 +74,26 @@ def main() -> None:
     def want(name):
         return name in wanted
 
+    # device header stamped into every section (core/SEMANTICS.md
+    # §Device-sharded sweeps): numbers measured on 1 CPU device and on a
+    # forced-8-device host (or a real accelerator mesh) are not comparable,
+    # so the report says which machine shape produced each section
+    import jax
+
+    device_header = {
+        "devices": jax.device_count(),
+        "backend": jax.default_backend(),
+        "sharded": jax.device_count() > 1,
+    }
+
     def timed(name, fn, **extra):
         s0 = time.perf_counter()
         ret = fn()
-        entry = {"wall_s": round(time.perf_counter() - s0, 3), **extra}
+        entry = {
+            "wall_s": round(time.perf_counter() - s0, 3),
+            **device_header,
+            **extra,
+        }
         report["sections"][name] = entry
         return ret, entry
 
@@ -134,6 +150,11 @@ def main() -> None:
             single_run_grouped_s=round(scale["t_jax_grouped"], 3),
             oracle_run_s=round(scale["t_oracle"], 3),
         )
+        if "t_sweep_sharded" in scale:
+            entry.update(
+                sweep_sharded_s=round(scale["t_sweep_sharded"], 3),
+                sweep_devices=scale["sweep_devices"],
+            )
 
     if want("curie"):
         section("Curie-scale SWF trace replay (group-indexed tables)")

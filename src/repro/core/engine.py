@@ -502,6 +502,30 @@ def _queue_window(s: SimState, W: int) -> jax.Array:
     return window[:W]
 
 
+def _partition_pick(es, gid, res_j, n_groups):
+    """Per-group masked-cumsum pick (SEMANTICS.md §Partition-aware
+    allocation): ``es``/``gid`` are node eligibility and group id laid out
+    in allocation order. Each group counts its eligible nodes along the
+    order; a group is feasible iff its total reaches ``res_j``, and the
+    winner is the group whose ``res_j``-th eligible node appears earliest
+    in the order (the earliest-completing group; positions are distinct
+    nodes, so no ties are possible). Returns the in-order selection mask
+    and the any-group-fits predicate. Host twin:
+    ``PyDES._partition_select``.
+    """
+    N = es.shape[0]
+    onehot = (
+        gid[None, :] == jnp.arange(n_groups, dtype=gid.dtype)[:, None]
+    ) & es[None, :]
+    csum = jnp.cumsum(onehot.astype(I32), axis=1)  # [G, N] running counts
+    feasible_g = csum[:, -1] >= res_j
+    pos = jnp.argmax(csum >= res_j, axis=1)  # first completion position
+    best = jnp.argmin(jnp.where(feasible_g, pos, N))
+    feasible = jnp.any(feasible_g)
+    sel = onehot[best] & (csum[best] <= res_j) & feasible
+    return sel, feasible
+
+
 def _try_allocate(s, const, cfg, j, shadow, extra,
                   order=None, ready_f=None, okey=None):
     """Attempt to allocate job j. Returns (ok, new_state, ready_max).
@@ -543,14 +567,31 @@ def _try_allocate(s, const, cfg, j, shadow, extra,
     statically eager policy, where every chosen node is ready at ``t``);
     ``ready_max`` agrees with the dense spelling wherever ``ok`` can be
     True — the only place it is consumed.
+
+    Partition mode (§Partition-aware allocation, ``cfg.allocation ==
+    "partition"``): cross-group allocations are forbidden. Scanning the
+    same allocation order, the job takes the first ``res_j`` eligible
+    nodes of the earliest-completing single group (:func:`_partition_pick`)
+    and fails (``ok=False``, stays WAITING) when no group can hold it —
+    instead of binding its realized runtime to the slowest node of a
+    mixed allocation. The backfill test and EASY shadow keep their dense
+    group-agnostic spelling, mirrored exactly in the oracle.
     """
     eligible = s.node_job < 0
     res_j = s.job_res[j]
     n_elig = jnp.sum(eligible, dtype=I32)
+    partition = cfg.allocation == "partition"
+    n_groups = const.dvfs_speed.shape[0]
     if order is not None:
         es = eligible[order]
-        csum = jnp.cumsum(es.astype(I32))
-        sel_sorted = es & (csum <= res_j)
+        if partition:
+            sel_sorted, feasible = _partition_pick(
+                es, const.group_id[order], res_j, n_groups
+            )
+        else:
+            csum = jnp.cumsum(es.astype(I32))
+            sel_sorted = es & (csum <= res_j)
+            feasible = n_elig >= res_j
         chosen = jnp.zeros_like(eligible).at[order].set(sel_sorted)
         if ready_f is None:  # statically eager: chosen nodes are ready now
             ready_max = s.t
@@ -571,7 +612,13 @@ def _try_allocate(s, const, cfg, j, shadow, extra,
             aorder = perm1[jnp.argsort(key[perm1], stable=True)]
         else:
             aorder = jnp.argsort(key, stable=True)  # ties -> lowest node id
-        sorted_sel = jnp.arange(key.shape[0]) < res_j
+        if partition:
+            sorted_sel, feasible = _partition_pick(
+                eligible[aorder], const.group_id[aorder], res_j, n_groups
+            )
+        else:
+            sorted_sel = jnp.arange(key.shape[0]) < res_j
+            feasible = n_elig >= res_j
         ready_sorted = key[aorder]
         ready_max = jnp.max(
             jnp.where(sorted_sel, ready_sorted, -1)
@@ -579,7 +626,7 @@ def _try_allocate(s, const, cfg, j, shadow, extra,
         chosen = jnp.zeros_like(eligible).at[aorder].set(sorted_sel) & eligible
     pred_completion = ready_max + s.job_reqtime[j]
     bf_ok = (shadow < 0) | (pred_completion <= shadow) | (res_j <= extra)
-    ok = (n_elig >= res_j) & bf_ok
+    ok = feasible & bf_ok
     chosen = chosen & ok
     # reserve + auto-wake chosen sleeping nodes
     wake = chosen & (s.node_state == SLEEP)
@@ -1416,6 +1463,12 @@ def _static_trace_key(platform, config, J, cap):
         # §Group-indexed tables: the grouped/dense path choice and the
         # burst-merging pass-repeat loop are trace structure
         config.grouped_tables, config.merge_bursts,
+        # §Partition-aware allocation: the per-group selection spelling in
+        # _try_allocate is a Python branch, hence trace structure
+        config.allocation,
+        # §Device-sharded sweeps: the default sweep device count selects
+        # the sharded vs single-device dispatch of the same program
+        config.devices,
         platform.nb_nodes, platform.n_groups(), platform.n_dvfs_modes(),
         J, cap,
     )
@@ -1514,6 +1567,12 @@ class SimBatch:
     states: SimState
     metrics: Tuple[SimMetrics, ...]
     n_compiles: Optional[int]
+    # §Device-sharded sweeps: whether this launch reused an already-compiled
+    # grid program from the _SWEEP_FNS LRU (the service layer's per-request
+    # cache report), and the device count it ran sharded across (None =
+    # unsharded single-device dispatch)
+    cache_hit: Optional[bool] = None
+    devices: Optional[int] = None
 
     def __len__(self) -> int:
         return len(self.metrics)
@@ -1536,6 +1595,43 @@ class SimBatch:
 # compiled programs without limit.
 _SWEEP_FNS: "OrderedDict" = OrderedDict()
 _SWEEP_CACHE_SIZE = 8
+
+# compiled-grid reuse ledger (§Device-sharded sweeps): one hit/miss tick
+# per sweep dispatch against the _SWEEP_FNS LRU. The service layer
+# (launch/sim_serve.py) snapshots this around each request to report
+# compile-cache reuse in its response JSON.
+_CACHE_STATS = {"sweep_hits": 0, "sweep_misses": 0}
+
+
+def cache_stats() -> dict:
+    """A copy of the sweep compile-cache hit/miss counters."""
+    return dict(_CACHE_STATS)
+
+
+def _resolve_devices(devices, config: EngineConfig) -> Optional[int]:
+    """Resolve the sweep device count (§Device-sharded sweeps).
+
+    ``None`` falls back to ``config.devices``; ``None`` overall keeps the
+    unsharded single-device dispatch (the legacy ``jit(vmap)`` path).
+    ``"all"`` takes every visible device; an int ``D`` shards across the
+    first ``D`` local devices (1 <= D <= ``jax.device_count()``).
+    """
+    if devices is None:
+        devices = config.devices
+    if devices is None:
+        return None
+    if devices == "all":
+        return jax.device_count()
+    d = int(devices)
+    if d < 1:
+        raise ValueError(f"devices must be >= 1, got {devices!r}")
+    if d > jax.device_count():
+        raise ValueError(
+            f"devices={d} exceeds the {jax.device_count()} visible "
+            "device(s); set XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=<D> before JAX initializes to fake host devices"
+        )
+    return d
 
 
 def _policy_scenario_const(
@@ -1640,12 +1736,150 @@ def _scenario_const(
     )
 
 
+@dataclasses.dataclass
+class PendingSweep:
+    """An in-flight :func:`sweep_async` dispatch (§Device-sharded sweeps).
+
+    The compiled grid program has been launched (JAX dispatch is
+    asynchronous — the device arrays inside are futures); host work can
+    overlap with the device computation until :meth:`result` blocks. The
+    streaming experiment runner dispatches chunk ``k+1`` before draining
+    chunk ``k`` through this handle.
+    """
+
+    _out: SimState  # padded stacked final states (leading axis K + pad)
+    _plats: list
+    _k: int  # requested scenario count (pad rows dropped on gather)
+    _n_compiles: Optional[int]
+    _cache_hit: bool
+    _devices: Optional[int]
+    _batch: Optional[SimBatch] = None
+
+    def result(self) -> SimBatch:
+        """Block on the device computation and build the :class:`SimBatch`
+        (idempotent — the batch is cached after the first call)."""
+        if self._batch is not None:
+            return self._batch
+        out = self._out
+        jax.block_until_ready(out.energy)
+        if int(out.energy.shape[0]) != self._k:  # drop masked pad rows
+            out = jax.tree_util.tree_map(lambda a: a[: self._k], out)
+        trunc = np.flatnonzero(np.asarray(out.truncated))
+        if trunc.size:
+            warnings.warn(
+                f"sweep scenario(s) {[int(i) for i in trunc]} hit the batch "
+                "cap before completing — their rows describe PARTIAL "
+                "simulations (SimMetrics.truncated). Raise "
+                "EngineConfig.max_batches to run them to completion.",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+
+        from repro.core.metrics import metrics_from_state  # import cycle
+
+        metrics = tuple(
+            metrics_from_state(
+                jax.tree_util.tree_map(lambda a, i=i: a[i], out),
+                self._plats[i],
+            )
+            for i in range(self._k)
+        )
+        self._batch = SimBatch(
+            states=out, metrics=metrics, n_compiles=self._n_compiles,
+            cache_hit=self._cache_hit, devices=self._devices,
+        )
+        return self._batch
+
+
+def sweep_async(
+    platform: PlatformSpec,
+    workload: Workload,
+    scenarios: Sequence[Any],
+    config: Optional[EngineConfig] = None,
+    job_capacity: Optional[int] = None,
+    devices: Optional[Any] = None,
+) -> PendingSweep:
+    """Dispatch K scenarios without blocking (the overlap spelling of
+    :func:`sweep` — same arguments, same compiled program, same cache).
+
+    Returns a :class:`PendingSweep` whose ``result()`` blocks and builds
+    the :class:`SimBatch`. Dispatching the next chunk before draining the
+    previous one overlaps host transfer with device compute — the
+    streaming experiment runner's pipeline.
+    """
+    config = trim_window(config or EngineConfig(), len(workload))
+    scenarios = list(scenarios)
+    if not scenarios:
+        raise ValueError("sweep needs at least one scenario")
+    base_const = make_const(platform, config)
+    consts, plats = [], []
+    for sc in scenarios:
+        c, p = _scenario_const(sc, base_const, platform, config)
+        consts.append(c)
+        plats.append(p)
+    K = len(consts)
+    D = _resolve_devices(devices, config)
+    pad = 0 if D is None else (-K) % D
+    if pad:
+        # §Device-sharded sweeps pad/mask rule: pad rows reuse scenario 0's
+        # const so they trace identically to real rows; dropped on gather
+        consts = consts + [consts[0]] * pad
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *consts)
+
+    s0 = init_state(platform, workload, config, job_capacity=job_capacity)
+    cap = config.max_batches or default_batch_cap(len(workload))
+    # the cache key grows the padded grid width and the device count, so a
+    # sharded grid never reuses (or poisons) an unsharded program's entry
+    key = _static_trace_key(
+        platform, config, int(s0.job_status.shape[0]), cap
+    ) + (K + pad, D)
+    fn = _SWEEP_FNS.pop(key, None)
+    cache_hit = fn is not None
+    _CACHE_STATS["sweep_hits" if cache_hit else "sweep_misses"] += 1
+    if fn is None:
+        if len(_SWEEP_FNS) >= _SWEEP_CACHE_SIZE:
+            _SWEEP_FNS.popitem(last=False)  # evict least-recently-used
+        run_k = jax.vmap(
+            lambda s, c: run_sim(s, c, config, max_batches=cap),
+            in_axes=(None, 0),
+        )
+        if D is None:
+            fn = jax.jit(run_k)
+        else:
+            # lower the stacked scenario axis onto a 1-D device mesh: each
+            # device runs the identical vmapped program over its (K+pad)/D
+            # scenario rows; s0 is replicated. vmap is elementwise per
+            # scenario, so per-scenario results are bit-exact vs the
+            # unsharded dispatch (§Device-sharded sweeps)
+            from jax.experimental.shard_map import shard_map
+
+            mesh = jax.sharding.Mesh(
+                np.asarray(jax.devices()[:D]), ("scenario",)
+            )
+            sharded = jax.sharding.PartitionSpec("scenario")
+            fn = jax.jit(
+                shard_map(
+                    run_k,
+                    mesh=mesh,
+                    in_specs=(jax.sharding.PartitionSpec(), sharded),
+                    out_specs=sharded,
+                    check_rep=False,
+                )
+            )
+    _SWEEP_FNS[key] = fn
+    out = fn(s0, stacked)  # asynchronous dispatch — not blocked here
+    cache_size = getattr(fn, "_cache_size", None)
+    n_compiles = cache_size() if callable(cache_size) else None
+    return PendingSweep(out, plats, K, n_compiles, cache_hit, D)
+
+
 def sweep(
     platform: PlatformSpec,
     workload: Workload,
     scenarios: Sequence[Any],
     config: Optional[EngineConfig] = None,
     job_capacity: Optional[int] = None,
+    devices: Optional[Any] = None,
 ) -> SimBatch:
     """Run K scenarios as ONE compiled program (vmapped :func:`run_sim`).
 
@@ -1669,57 +1903,15 @@ def sweep(
     scheduler x policy x timeout x platform grid compiles ONCE (the paper's
     Figs. 4/5 six-scheduler comparison is one program, not six);
     per-scenario :class:`SimMetrics` come back in a :class:`SimBatch`.
+
+    ``devices`` (§Device-sharded sweeps) shards the scenario axis across
+    local devices via a 1-D mesh: an int ``D``, ``"all"``, or ``None``
+    (fall back to ``config.devices``; unsharded when that is None too).
+    The scenario axis is padded to a device multiple with masked rows
+    (dropped on gather); per-scenario results are **bit-exact** vs the
+    unsharded dispatch, and the grid still compiles ONCE.
     """
-    config = trim_window(config or EngineConfig(), len(workload))
-    scenarios = list(scenarios)
-    if not scenarios:
-        raise ValueError("sweep needs at least one scenario")
-    base_const = make_const(platform, config)
-    consts, plats = [], []
-    for sc in scenarios:
-        c, p = _scenario_const(sc, base_const, platform, config)
-        consts.append(c)
-        plats.append(p)
-    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *consts)
-
-    s0 = init_state(platform, workload, config, job_capacity=job_capacity)
-    cap = config.max_batches or default_batch_cap(len(workload))
-    key = _static_trace_key(
-        platform, config, int(s0.job_status.shape[0]), cap
-    ) + (len(scenarios),)
-    fn = _SWEEP_FNS.pop(key, None)
-    if fn is None:
-        if len(_SWEEP_FNS) >= _SWEEP_CACHE_SIZE:
-            _SWEEP_FNS.popitem(last=False)  # evict least-recently-used
-        fn = jax.jit(
-            jax.vmap(
-                lambda s, c: run_sim(s, c, config, max_batches=cap),
-                in_axes=(None, 0),
-            )
-        )
-    _SWEEP_FNS[key] = fn
-    out = fn(s0, stacked)
-    jax.block_until_ready(out.energy)
-    cache_size = getattr(fn, "_cache_size", None)
-    n_compiles = cache_size() if callable(cache_size) else None
-
-    trunc = np.flatnonzero(np.asarray(out.truncated))
-    if trunc.size:
-        warnings.warn(
-            f"sweep scenario(s) {[int(i) for i in trunc]} hit the batch cap "
-            "before completing — their rows describe PARTIAL simulations "
-            "(SimMetrics.truncated). Raise EngineConfig.max_batches to run "
-            "them to completion.",
-            RuntimeWarning,
-            stacklevel=2,
-        )
-
-    from repro.core.metrics import metrics_from_state  # avoid import cycle
-
-    metrics = tuple(
-        metrics_from_state(
-            jax.tree_util.tree_map(lambda a, i=i: a[i], out), plats[i]
-        )
-        for i in range(len(scenarios))
-    )
-    return SimBatch(states=out, metrics=metrics, n_compiles=n_compiles)
+    return sweep_async(
+        platform, workload, scenarios, config,
+        job_capacity=job_capacity, devices=devices,
+    ).result()

@@ -256,6 +256,25 @@ class PyDES:
     def _eligible(self) -> List[_Node]:
         return [nd for nd in self.nodes if nd.job < 0]
 
+    def _partition_select(self, elig_sorted: List[_Node], res: int):
+        """Partition-aware pick (SEMANTICS.md §Partition-aware allocation) —
+        host twin of the engine's ``_partition_pick`` masked cumsum.
+
+        Scanning the sorted eligible nodes in allocation order, the first
+        group to accumulate ``res`` nodes wins (the earliest-completing
+        group); its first ``res`` eligible nodes are the allocation.
+        Returns None when no single group can hold the job.
+        """
+        per_group: Dict[int, List[_Node]] = {}
+        for nd in elig_sorted:
+            g = int(self.gid[nd.nid])
+            bucket = per_group.setdefault(g, [])
+            if len(bucket) < res:
+                bucket.append(nd)
+                if len(bucket) == res:
+                    return bucket
+        return None
+
     def _try_allocate(
         self, job: _Job, shadow: Optional[float], extra: Optional[int]
     ) -> bool:
@@ -265,7 +284,15 @@ class PyDES:
         if len(elig) < job.res:
             return False
         elig.sort(key=self._sort_key)
-        chosen = elig[: job.res]
+        if self.cfg.allocation == "partition":
+            # §Partition-aware allocation: no cross-group allocations — the
+            # job fails to start when no single group fits it
+            picked = self._partition_select(elig, job.res)
+            if picked is None:
+                return False
+            chosen = picked
+        else:
+            chosen = elig[: job.res]
         ready = max(self._ready(nd) for nd in chosen)
         if shadow is not None:
             pred_completion = ready + job.reqtime

@@ -160,17 +160,40 @@ def make_update_fn(
     sims0: SimState,
     cfg: A2CConfig,
     optimizer=None,
+    devices=None,
 ) -> Callable[[TrainState], Tuple[TrainState, dict]]:
+    """The jittable A2C update. ``devices`` (core/SEMANTICS.md
+    §Device-sharded sweeps, RL layer) shards the env batch across a 1-D
+    local-device mesh: each device rolls out its ``n_envs / D`` slice
+    (data-parallel) and the gradient is psum-reduced across the mesh
+    before the (replicated) optimizer step — the classic DDP shape, so
+    params stay bit-identical on every device."""
     opt = optimizer or adamw(lr=cfg.lr)
+    D = _resolve_rollout_devices(devices, env_cfg, cfg.n_envs)
 
-    def update(ts: TrainState) -> Tuple[TrainState, dict]:
+    def update(ts: TrainState, sims) -> Tuple[TrainState, dict]:
+        if D is None:
+            key_roll = ts.key
+        else:
+            # per-shard RNG: fold the mesh position into a split of the
+            # replicated key, so shards explore independently while the
+            # carried TrainState.key stays replicated
+            key_roll = jax.random.fold_in(
+                jax.random.split(ts.key)[1], jax.lax.axis_index("env")
+            )
         env_states, obs, key, roll = collect_rollout(
-            ts.params, ts.env_states, ts.obs, ts.key, sims0, env_cfg, const, cfg.n_steps
+            ts.params, ts.env_states, ts.obs, key_roll, sims, env_cfg,
+            const, cfg.n_steps,
         )
         advs, returns = gae(roll, cfg.gamma, cfg.gae_lambda)
         (loss, aux), grads = jax.value_and_grad(a2c_loss, has_aux=True)(
             ts.params, roll, advs, returns, cfg
         )
+        if D is not None:
+            # psum/D gradient reduction: the update consumes the mean of
+            # the per-shard gradients (identical on every device)
+            grads = jax.lax.pmean(grads, "env")
+            key = jax.random.split(ts.key)[0]  # replicated successor
         grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
         updates, opt_state = opt.update(grads, ts.opt_state, ts.params)
         params = apply_updates(ts.params, updates)
@@ -182,9 +205,51 @@ def make_update_fn(
             / jnp.maximum(jnp.sum(mask), 1.0),
             **aux,
         }
+        if D is not None:
+            metrics = {k: jax.lax.pmean(v, "env") for k, v in metrics.items()}
         return TrainState(params, opt_state, env_states, obs, key), metrics
 
-    return update, opt
+    return _maybe_shard_update(update, sims0, D), opt
+
+
+def _resolve_rollout_devices(devices, env_cfg: EnvConfig, n_envs: int):
+    """Resolve the rollout device count (None = unsharded; falls back to
+    ``env_cfg.engine.devices``) and validate the batch divides across it."""
+    from repro.core.engine import _resolve_devices
+
+    D = _resolve_devices(devices, env_cfg.engine)
+    if D is None or D == 1:
+        return None
+    if n_envs % D:
+        raise ValueError(
+            f"n_envs={n_envs} does not shard evenly across {D} devices; "
+            "size the env batch to a device multiple"
+        )
+    return D
+
+
+def _maybe_shard_update(update, sims0: SimState, D) -> Callable:
+    """Close the reset pool into the update; with a device count, lower it
+    through ``shard_map`` on the 1-D ``("env",)`` mesh: params/opt
+    state/key replicated, env batch (and the reset pool) sharded."""
+    if D is None:
+        return lambda ts: update(ts, sims0)
+    from jax.experimental.shard_map import shard_map
+
+    from repro.core.rl.env import rollout_mesh
+
+    P = jax.sharding.PartitionSpec
+    ts_spec = TrainState(
+        params=P(), opt_state=P(), env_states=P("env"), obs=P("env"), key=P()
+    )
+    sharded = shard_map(
+        update,
+        mesh=rollout_mesh(D),
+        in_specs=(ts_spec, P("env")),
+        out_specs=(ts_spec, P()),
+        check_rep=False,
+    )
+    return lambda ts: sharded(ts, sims0)
 
 
 def train_a2c(
@@ -193,8 +258,16 @@ def train_a2c(
     env_cfg: EnvConfig,
     cfg: A2CConfig = A2CConfig(),
     progress: Optional[Callable[[int, dict], None]] = None,
+    devices=None,
 ):
-    """Paper-scale A2C training loop (single host). Returns (params, history)."""
+    """Paper-scale A2C training loop (single host). Returns (params, history).
+
+    ``devices`` shards the ``n_envs`` rollout batch across local devices
+    (data-parallel + psum'd gradients — §Device-sharded sweeps, RL layer);
+    ``None`` falls back to ``env_cfg.engine.devices``, unsharded when that
+    is None too."""
+    from repro.core.rl.env import shard_env_batch
+
     # closure constant of the jitted update: specialize the policy flags so
     # every rollout step traces only the RL stack's rules
     const = make_const(platform, env_cfg.engine, specialize=True)
@@ -202,11 +275,12 @@ def train_a2c(
     if len(wls) < cfg.n_envs:
         wls = (wls * ((cfg.n_envs + len(wls) - 1) // len(wls)))[: cfg.n_envs]
     sims0 = make_batched_sims(platform, wls[: cfg.n_envs], env_cfg)
+    sims0 = shard_env_batch(sims0, devices, env_cfg.engine)
 
     key = jax.random.PRNGKey(cfg.seed)
     key, kp = jax.random.split(key)
     params = policy_init(kp, env_cfg.obs_size, env_cfg.n_actions, cfg.hidden)
-    update, opt = make_update_fn(env_cfg, const, sims0, cfg)
+    update, opt = make_update_fn(env_cfg, const, sims0, cfg, devices=devices)
     opt_state = opt.init(params)
 
     env_states, obs = jax.vmap(functools.partial(env_reset, env_cfg, const))(sims0)

@@ -170,6 +170,46 @@ def env_step(
     return EnvState(sim, steps, done), obs, reward, done, info
 
 
+def rollout_mesh(D: int) -> "jax.sharding.Mesh":
+    """The 1-D device mesh the RL layer shards its env batch over — the
+    same mesh shape ``engine.sweep`` lowers sweep scenarios onto
+    (core/SEMANTICS.md §Device-sharded sweeps), named ``"env"`` here."""
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:D]), ("env",))
+
+
+def shard_env_batch(tree, devices=None, engine_cfg: Optional[EngineConfig] = None):
+    """Place a stacked env batch (every leaf's leading axis = B) on a 1-D
+    device mesh (§Device-sharded sweeps, RL layer).
+
+    ``devices`` follows ``engine.sweep``'s contract — ``None`` (fall back
+    to ``engine_cfg.devices``; unsharded when that is None too), an int
+    ``D``, or ``"all"``. B must divide by the device count: env batches
+    are caller-sized (``n_envs``), so no pad/mask machinery here. The
+    placement is semantics-free — the jitted vmapped step partitions
+    elementwise over the batch, so sharded rollouts step the exact same
+    per-env programs, just D at a time.
+    """
+    from repro.core.engine import _resolve_devices
+
+    D = _resolve_devices(devices, engine_cfg or EngineConfig())
+    if D is None or D == 1:
+        return tree
+    B = jax.tree_util.tree_leaves(tree)[0].shape[0]
+    if B % D:
+        raise ValueError(
+            f"env batch of {B} does not shard evenly across {D} devices; "
+            "size n_envs to a device multiple"
+        )
+    sharding = jax.sharding.NamedSharding(
+        rollout_mesh(D), jax.sharding.PartitionSpec("env")
+    )
+    return jax.tree_util.tree_map(
+        lambda a: jax.device_put(a, sharding), tree
+    )
+
+
 def batched_reset(cfg: EnvConfig, const: EngineConst, sims0: SimState):
     """vmapped reset over a batch of initial sim states (leading axis B)."""
     return jax.vmap(functools.partial(env_reset, cfg, const))(sims0)

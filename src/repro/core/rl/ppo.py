@@ -16,6 +16,8 @@ from repro.core.engine import EngineConst, SimState, make_const
 from repro.core.rl.a2c import (
     Rollout,
     TrainState,
+    _maybe_shard_update,
+    _resolve_rollout_devices,
     collect_rollout,
     gae,
     make_batched_sims,
@@ -70,12 +72,27 @@ def make_update_fn(
     sims0: SimState,
     cfg: PPOConfig,
     optimizer=None,
+    devices=None,
 ):
+    """The jittable PPO update; ``devices`` shards the env batch across a
+    1-D local-device mesh exactly like the A2C twin (data-parallel rollout
+    + minibatch epochs over each shard's slice, psum-reduced gradients —
+    core/SEMANTICS.md §Device-sharded sweeps, RL layer)."""
     opt = optimizer or adamw(lr=cfg.lr)
+    D = _resolve_rollout_devices(devices, env_cfg, cfg.n_envs)
 
-    def update(ts: TrainState):
+    def update(ts: TrainState, sims):
+        if D is None:
+            key_roll = ts.key
+        else:
+            # per-shard RNG (rollout actions + epoch shuffles); the carried
+            # TrainState.key stays replicated
+            key_roll = jax.random.fold_in(
+                jax.random.split(ts.key)[1], jax.lax.axis_index("env")
+            )
         env_states, obs, key, roll = collect_rollout(
-            ts.params, ts.env_states, ts.obs, ts.key, sims0, env_cfg, const, cfg.n_steps
+            ts.params, ts.env_states, ts.obs, key_roll, sims, env_cfg,
+            const, cfg.n_steps,
         )
         advs, returns = gae(roll, cfg.gamma, cfg.gae_lambda)
         # flatten [T, B] -> [T*B]
@@ -111,6 +128,10 @@ def make_update_fn(
                 (loss, aux), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
                     params, batch, cfg
                 )
+                if D is not None:
+                    # psum/D per-minibatch gradient reduction keeps params
+                    # bit-identical on every device (the DDP invariant)
+                    grads = jax.lax.pmean(grads, "env")
                 grads, _ = clip_by_global_norm(grads, cfg.max_grad_norm)
                 updates, opt_state = opt.update(grads, opt_state, params)
                 params = apply_updates(params, updates)
@@ -124,15 +145,19 @@ def make_update_fn(
         (params, opt_state, key), losses = jax.lax.scan(
             epoch, (ts.params, ts.opt_state, key), None, length=cfg.n_epochs
         )
+        if D is not None:
+            key = jax.random.split(ts.key)[0]  # replicated successor
         mask = roll.live.astype(jnp.float32)
         metrics = {
             "loss": jnp.mean(losses),
             "mean_reward": jnp.sum(roll.rewards * mask)
             / jnp.maximum(jnp.sum(mask), 1.0),
         }
+        if D is not None:
+            metrics = {k: jax.lax.pmean(v, "env") for k, v in metrics.items()}
         return TrainState(params, opt_state, env_states, obs, key), metrics
 
-    return update, opt
+    return _maybe_shard_update(update, sims0, D), opt
 
 
 def train_ppo(
@@ -141,7 +166,13 @@ def train_ppo(
     env_cfg: EnvConfig,
     cfg: PPOConfig = PPOConfig(),
     progress: Optional[Callable[[int, dict], None]] = None,
+    devices=None,
 ):
+    """``devices`` shards the ``n_envs`` rollout batch across local devices
+    (data-parallel + psum'd gradients — §Device-sharded sweeps, RL layer),
+    falling back to ``env_cfg.engine.devices``; None = unsharded."""
+    from repro.core.rl.env import shard_env_batch
+
     # closure constant of the jitted update: specialized policy flags (the
     # rollout traces only the RL stack's rules — §Static specialization)
     const = make_const(platform, env_cfg.engine, specialize=True)
@@ -149,11 +180,12 @@ def train_ppo(
     if len(wls) < cfg.n_envs:
         wls = (wls * ((cfg.n_envs + len(wls) - 1) // len(wls)))[: cfg.n_envs]
     sims0 = make_batched_sims(platform, wls[: cfg.n_envs], env_cfg)
+    sims0 = shard_env_batch(sims0, devices, env_cfg.engine)
 
     key = jax.random.PRNGKey(cfg.seed)
     key, kp = jax.random.split(key)
     params = policy_init(kp, env_cfg.obs_size, env_cfg.n_actions, cfg.hidden)
-    update, opt = make_update_fn(env_cfg, const, sims0, cfg)
+    update, opt = make_update_fn(env_cfg, const, sims0, cfg, devices=devices)
     opt_state = opt.init(params)
     env_states, obs = jax.vmap(functools.partial(env_reset, env_cfg, const))(sims0)
     ts = TrainState(params, opt_state, env_states, obs, key)

@@ -78,6 +78,17 @@ class EngineConfig:
     #                  used groups drain and become whole-group sleepable;
     #                  the key is recomputed once per scheduler pass
     node_order: str = "id"
+    # allocation scope (core/SEMANTICS.md §Partition-aware allocation):
+    #   "any"       — a job may span node groups (the classic rule 4; its
+    #                 realized runtime then binds to the slowest chosen node)
+    #   "partition" — cross-group allocations are FORBIDDEN: the job takes
+    #                 the earliest-completing single group that can hold all
+    #                 res_j nodes (scanning the same (ready, [key,] nid)
+    #                 order), and *fails to start* when no group fits —
+    #                 rather than binding its realized runtime to the
+    #                 slowest node of a mixed allocation. Orthogonal to
+    #                 node_order (any ordering composes).
+    allocation: str = "any"
     record_gantt: bool = False
     gantt_capacity: int = 0  # 0 -> auto
     max_batches: Optional[int] = None  # safety cap; None -> auto
@@ -120,8 +131,17 @@ class EngineConfig:
     # zero pressure and is bit-exact with its reactive base.
     forecast_horizon: Optional[int] = None
     forecast_alpha: float = 0.25  # EWMA smoothing weight in [0, 1]
+    # device sharding of the sweep scenario axis (core/SEMANTICS.md
+    # §Device-sharded sweeps): the default device count `engine.sweep`
+    # lowers its stacked scenario batch onto (a 1-D mesh via shard_map).
+    # None = unsharded single-device dispatch (the legacy jit(vmap) path);
+    # an int D shards across the first D local devices; "all" takes
+    # jax.device_count(). Per-scenario results are bit-exact regardless —
+    # sharding only changes placement, never semantics.
+    devices: Optional[object] = None
 
     NODE_ORDERS = ("id", "cheap", "idle-watts", "pack")
+    ALLOCATIONS = ("any", "partition")
 
     def __post_init__(self):
         if self.node_order not in self.NODE_ORDERS:
@@ -129,6 +149,17 @@ class EngineConfig:
                 f"node_order must be one of {self.NODE_ORDERS}, "
                 f"got {self.node_order!r}"
             )
+        if self.allocation not in self.ALLOCATIONS:
+            raise ValueError(
+                f"allocation must be one of {self.ALLOCATIONS}, "
+                f"got {self.allocation!r}"
+            )
+        if self.devices is not None and self.devices != "all":
+            if not isinstance(self.devices, int) or self.devices < 1:
+                raise ValueError(
+                    'devices must be None, a positive int, or "all", '
+                    f"got {self.devices!r}"
+                )
         if not 0.0 <= self.forecast_alpha <= 1.0:
             raise ValueError(
                 f"forecast_alpha must be in [0, 1], got {self.forecast_alpha!r}"

@@ -27,11 +27,17 @@ from repro.experiments.spec import (
     resolve_platform,
     resolve_workload,
 )
-from repro.experiments.runner import ExperimentResult, run, run_file
+from repro.experiments.runner import (
+    ExperimentResult,
+    StreamingRun,
+    run,
+    run_file,
+)
 
 __all__ = [
     "Experiment",
     "ExperimentResult",
+    "StreamingRun",
     "check_unknown_keys",
     "resolve_platform",
     "resolve_workload",

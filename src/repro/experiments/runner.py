@@ -13,6 +13,15 @@ point per replication) and, when ``experiment.out`` is set, are written as
 a deterministic ``metrics.json`` (byte-identical across reruns of the same
 spec — the golden-file anchor in ``tests/test_experiments.py``) plus a
 ``rows.csv`` for spreadsheet use.
+
+``run(..., stream=True)`` swaps the barrier for a :class:`StreamingRun`
+iterator of completed row-chunks (core/SEMANTICS.md §Device-sharded
+sweeps): the grid is chunked (``chunk_scenarios``), chunk ``k+1`` is
+dispatched through ``engine.sweep_async`` before chunk ``k``'s host
+transfer drains, and ``metrics.json``/``rows.csv`` are rewritten after
+every chunk — incremental progress on disk, yet the final files are
+byte-identical to the blocking path. ``devices`` shards each launch's
+scenario axis across local devices (bit-exact either way).
 """
 from __future__ import annotations
 
@@ -22,7 +31,8 @@ import json
 import os
 import time
 import warnings
-from typing import Optional, Tuple
+from collections import deque
+from typing import Any, Iterator, Optional, Tuple
 
 from repro.core import engine
 from repro.experiments.spec import Experiment, resolve_platform, resolve_workload
@@ -158,20 +168,41 @@ def _run_single(plat, wl, scenario, cfg):
     return metrics_from_state(state, plat_i), n
 
 
-def run(
-    experiment: Experiment,
-    platform=None,
-    workload=None,
-) -> ExperimentResult:
-    """Run the experiment grid; one compiled program for everything.
+def _row(sc: dict, replication: int, m) -> dict:
+    """One rows-table entry for grid point ``sc`` (the declarative dict,
+    platform still a *name*) — shared by the blocking and streaming paths
+    so their rows are identical by construction."""
+    row = {
+        "scheduler": sc["scheduler"],
+        "timeout": sc["timeout"],
+    }
+    if "forecast" in sc:
+        row["forecast"] = sc["forecast"]
+    if "platform" in sc:
+        row["platform"] = sc["platform"]
+    row["replication"] = replication
+    row.update(m.row())
+    return row
 
-    ``platform`` / ``workload`` optionally inject pre-resolved objects
-    (benchmarks construct platforms programmatically); the spec remains the
-    declarative record. With both injected and ``replications == 1`` the
-    spec's workload/platform entries are never resolved. A workload can only
-    be injected into a single-replication run: replications r >= 1 would be
-    resolved from the spec, silently mixing two different studies.
-    """
+
+def _warn_capped(rows) -> None:
+    capped = [(r["scheduler"], r["timeout"]) for r in rows if r.get("truncated")]
+    if capped:
+        warnings.warn(
+            f"experiment grid point(s) {capped} hit the batch cap before "
+            "completing — their rows describe PARTIAL simulations "
+            "('truncated' column). Raise max_batches to run to completion.",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+
+
+def _resolve_run(experiment: Experiment, platform, workload):
+    """Shared spec resolution for the blocking and streaming paths:
+    validate the injection rules, resolve platform + engine config, and
+    lower the declarative grid to traced sweep scenarios. Returns
+    ``(plat, cfg, grid, scenarios)`` with ``grid`` keeping the
+    platform-axis *names* for the rows table."""
     if workload is not None and experiment.replications > 1:
         raise ValueError(
             "cannot inject a workload into a run with replications > 1: "
@@ -203,6 +234,72 @@ def run(
             # field-override branch of engine.sweep's scenario mapping
             sc["forecast_horizon"] = sc.pop("forecast")
         scenarios.append(sc)
+    return plat, cfg, grid, scenarios
+
+
+class StreamingRun:
+    """Iterator of completed row-chunks from ``run(..., stream=True)``.
+
+    Each ``next()`` blocks only until the *oldest* in-flight chunk's device
+    work lands on the host, then yields that chunk's rows (a tuple of row
+    dicts, grid order); the next chunk was already dispatched, so device
+    compute overlaps the host-side consumption of earlier chunks. After
+    exhaustion ``result`` holds the final :class:`ExperimentResult` —
+    identical (and, via ``experiment.out``, byte-identical on disk) to what
+    the blocking path returns.
+    """
+
+    def __init__(self, gen: Iterator[Tuple[dict, ...]]):
+        self._gen = gen
+        self.result: Optional[ExperimentResult] = None
+
+    def __iter__(self) -> "StreamingRun":
+        return self
+
+    def __next__(self) -> Tuple[dict, ...]:
+        return next(self._gen)
+
+
+def run(
+    experiment: Experiment,
+    platform=None,
+    workload=None,
+    *,
+    devices: Optional[Any] = None,
+    stream: bool = False,
+    chunk_scenarios: Optional[int] = None,
+) -> ExperimentResult:
+    """Run the experiment grid; one compiled program for everything.
+
+    ``platform`` / ``workload`` optionally inject pre-resolved objects
+    (benchmarks construct platforms programmatically); the spec remains the
+    declarative record. With both injected and ``replications == 1`` the
+    spec's workload/platform entries are never resolved. A workload can only
+    be injected into a single-replication run: replications r >= 1 would be
+    resolved from the spec, silently mixing two different studies.
+
+    ``devices`` shards each sweep launch's scenario axis across local
+    devices (``engine.sweep``'s contract: None/int/"all", bit-exact
+    regardless; the single-point fast path runs one simulation and is
+    never sharded). ``stream=True`` returns a :class:`StreamingRun`
+    instead of blocking on the whole grid; ``chunk_scenarios`` bounds the
+    scenarios per launch (default: the whole grid per replication).
+    """
+    if stream:
+        return _run_stream(
+            experiment,
+            platform,
+            workload,
+            devices=devices,
+            chunk_scenarios=chunk_scenarios,
+        )
+    if chunk_scenarios is not None:
+        raise ValueError(
+            "chunk_scenarios only applies to stream=True: the blocking "
+            "path runs the whole grid as one launch (its one-compile / "
+            "one-dispatch shape is the point)"
+        )
+    plat, cfg, grid, scenarios = _resolve_run(experiment, platform, workload)
 
     rows = []
     n_compiles: Optional[int] = None
@@ -227,34 +324,14 @@ def run(
                 metrics, n = _run_single(plat, wl, scenarios[0], cfg)
                 batch_metrics = (metrics,)
             else:
-                batch = engine.sweep(plat, wl, scenarios, cfg)
+                batch = engine.sweep(plat, wl, scenarios, cfg, devices=devices)
                 batch_metrics, n = batch.metrics, batch.n_compiles
         if n is not None:
             n_compiles = max(n_compiles or 0, n)
         for sc, m in zip(grid, batch_metrics):
-            row = {
-                "scheduler": sc["scheduler"],
-                "timeout": sc["timeout"],
-            }
-            if "forecast" in sc:
-                row["forecast"] = sc["forecast"]
-            if "platform" in sc:
-                row["platform"] = sc["platform"]
-            row["replication"] = r
-            row.update(m.row())
-            rows.append(row)
+            rows.append(_row(sc, r, m))
     wall = time.perf_counter() - t0
-    capped = [
-        (r["scheduler"], r["timeout"]) for r in rows if r.get("truncated")
-    ]
-    if capped:
-        warnings.warn(
-            f"experiment grid point(s) {capped} hit the batch cap before "
-            "completing — their rows describe PARTIAL simulations "
-            "('truncated' column). Raise max_batches to run to completion.",
-            RuntimeWarning,
-            stacklevel=2,
-        )
+    _warn_capped(rows)
 
     result = ExperimentResult(
         experiment=experiment,
@@ -265,6 +342,122 @@ def run(
     if experiment.out:
         write_outputs(result, experiment.out)
     return result
+
+
+# in-flight launches per StreamingRun: chunk k+1 is dispatched before chunk
+# k's transfer drains (device compute overlaps host consumption); deeper
+# pipelines buy nothing on one host and hold more device memory live
+_STREAM_DEPTH = 2
+
+
+def _run_stream(
+    experiment: Experiment,
+    platform,
+    workload,
+    *,
+    devices: Optional[Any],
+    chunk_scenarios: Optional[int],
+) -> StreamingRun:
+    """``run(..., stream=True)``: the same grid as launches of at most
+    ``chunk_scenarios`` scenarios through ``engine.sweep_async``, yielded
+    chunk-by-chunk as each lands. Rows, aggregated warning, final
+    ExperimentResult, and (when ``experiment.out`` is set) the final
+    ``metrics.json``/``rows.csv`` bytes are identical to the blocking path
+    — the outputs are additionally REWRITTEN with rows-so-far after every
+    chunk, so a crashed or abandoned stream leaves a valid prefix on disk.
+    """
+    plat, cfg, grid, scenarios = _resolve_run(experiment, platform, workload)
+    chunk = chunk_scenarios if chunk_scenarios is not None else len(scenarios)
+    if chunk < 1:
+        raise ValueError(f"chunk_scenarios must be >= 1, got {chunk_scenarios!r}")
+    single = len(scenarios) == 1
+
+    holder = StreamingRun(iter(()))
+
+    def gen():
+        rows = []
+        n_compiles: Optional[int] = None
+        t0 = time.perf_counter()
+        # (grid slice, replication, kind, payload) in dispatch order; rows
+        # drain oldest-first so the table order matches the blocking path
+        pending: deque = deque()
+
+        def drain() -> Tuple[dict, ...]:
+            nonlocal n_compiles
+            grid_sl, r, kind, payload = pending.popleft()
+            with warnings.catch_warnings():
+                # per-launch truncation warnings surface at result() time;
+                # aggregate them into the one labelled warning at the end
+                warnings.filterwarnings(
+                    "ignore", message=".*batch cap.*", category=RuntimeWarning
+                )
+                if kind == "single":
+                    # single-point grid: the same statically-specialized
+                    # path the blocking run takes (bit-exact rows); it
+                    # computes synchronously here, at drain time
+                    m, n = _run_single(plat, payload, scenarios[0], cfg)
+                    batch_metrics = (m,)
+                else:
+                    batch = payload.result()
+                    batch_metrics, n = batch.metrics, batch.n_compiles
+            if n is not None:
+                n_compiles = max(n_compiles or 0, n)
+            chunk_rows = tuple(
+                _row(sc, r, m) for sc, m in zip(grid_sl, batch_metrics)
+            )
+            rows.extend(chunk_rows)
+            if experiment.out:
+                # incremental rewrite with rows-so-far: always a valid
+                # prefix; the last rewrite (all rows, n_compiles settled)
+                # is byte-identical to the blocking path's single write
+                write_outputs(
+                    ExperimentResult(
+                        experiment=experiment,
+                        rows=tuple(rows),
+                        n_compiles=n_compiles,
+                        wall_s=time.perf_counter() - t0,
+                    ),
+                    experiment.out,
+                )
+            return chunk_rows
+
+        for r in range(experiment.replications):
+            # an injected workload implies replications == 1 (guarded in
+            # _resolve_run)
+            wl = (
+                workload
+                if workload is not None
+                else resolve_workload(experiment.workload, replication=r)
+            )
+            if single:
+                pending.append((grid, r, "single", wl))
+                while len(pending) > _STREAM_DEPTH:
+                    yield drain()
+                continue
+            for lo in range(0, len(scenarios), chunk):
+                handle = engine.sweep_async(
+                    plat, wl, scenarios[lo : lo + chunk], cfg, devices=devices
+                )
+                pending.append((grid[lo : lo + chunk], r, "sweep", handle))
+                while len(pending) > _STREAM_DEPTH:
+                    yield drain()
+        while pending:
+            yield drain()
+
+        wall = time.perf_counter() - t0
+        _warn_capped(rows)
+        result = ExperimentResult(
+            experiment=experiment,
+            rows=tuple(rows),
+            n_compiles=n_compiles,
+            wall_s=wall,
+        )
+        if experiment.out:
+            write_outputs(result, experiment.out)
+        holder.result = result
+
+    holder._gen = gen()
+    return holder
 
 
 def write_outputs(result: ExperimentResult, out_dir: str) -> None:

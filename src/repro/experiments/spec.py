@@ -175,6 +175,10 @@ class Experiment:
     platforms: Tuple = ()  # optional named platform axis ((name, spec), ...)
     rl: Optional[dict] = None  # {"checkpoint": dir, "decision_interval": s}
     node_order: str = "id"  # "id" | "cheap" | "idle-watts" | "pack"
+    # "any" | "partition" (core/SEMANTICS.md §Partition-aware allocation):
+    # "partition" forbids cross-group allocations — a job takes the
+    # earliest-completing single group that fits it, or fails to start
+    allocation: str = "any"
     terminate_overrun: bool = False
     window: int = 32  # scheduler scan window (static)
     # static engine-structure knobs (core/SEMANTICS.md §Group-indexed
@@ -272,6 +276,7 @@ class Experiment:
 
         return EngineConfig(
             node_order=self.node_order,
+            allocation=self.allocation,
             terminate_overrun=self.terminate_overrun,
             window=self.window,
             grouped_tables=self.grouped_tables,

@@ -24,8 +24,12 @@ Config keys (paper's runtime layer):
                 '+Forecast' labels; null/0 = predict nothing)
     forecast_alpha:   rule 10 EWMA smoothing weight in [0, 1]
     terminate_overrun: bool
-    node_order: "id" | "cheap" | "idle-watts"
+    node_order: "id" | "cheap" | "idle-watts" | "pack"
                 (default: "cheap" when heterogeneous)
+    allocation: "any" | "partition" — "partition" forbids cross-group
+                allocations (core/SEMANTICS.md §Partition-aware
+                allocation): a job takes the earliest-completing single
+                node group that fits it, or fails to start
     rl:         {checkpoint: path, decision_interval: s}   (RL schedulers:
                 checkpoint saved by training.checkpoint.save_policy; the
                 greedy policy drives run_sim in-graph via an RLController)
@@ -57,8 +61,8 @@ from repro.experiments import (
 # single-run config keys (the experiment layer validates its own spec)
 _KNOWN_KEYS = {
     "workload", "platform", "scheduler", "timeout", "terminate_overrun",
-    "node_order", "rl", "gantt", "out", "grouped_tables", "merge_bursts",
-    "forecast_horizon", "forecast_alpha",
+    "node_order", "allocation", "rl", "gantt", "out", "grouped_tables",
+    "merge_bursts", "forecast_horizon", "forecast_alpha",
 }
 _KNOWN_RL_KEYS = {"checkpoint", "decision_interval"}
 
@@ -207,6 +211,8 @@ def run(config: Dict[str, Any]) -> Dict[str, Any]:
         terminate_overrun=bool(config.get("terminate_overrun", False)),
         record_gantt=bool(config.get("gantt", True)),
         node_order=node_order,
+        # §Partition-aware allocation: forbid cross-group allocations
+        allocation=config.get("allocation", "any"),
         rl_decision_interval=rl_interval,
         grouped_tables=bool(config.get("grouped_tables", False)),
         merge_bursts=bool(config.get("merge_bursts", False)),

@@ -1,10 +1,13 @@
-"""Seeded SL001 violations: `cfg.shiny` and `cfg.forecast_alpha` are read
-inside the jitted scope (reachable from run_sim) but missing from
-_static_trace_key.
+"""Seeded SL001 violations: `cfg.shiny`, `cfg.forecast_alpha`, and
+`cfg.devices` are read inside the jitted scope (reachable from run_sim)
+but missing from _static_trace_key.
 
 The forecast read seeds the rule-10 drift mode specifically: horizon/alpha
 are TRACED EngineConst operands in the live tree, so a static `cfg.*` read
-of them in jitted scope is exactly the bug SL001 exists to catch."""
+of them in jitted scope is exactly the bug SL001 exists to catch. The
+devices read seeds the §Device-sharded sweeps drift mode: the device
+count selects the compiled sharding, so an unkeyed read would let a
+sharded grid silently reuse an unsharded program's cache entry."""
 
 
 def _static_trace_key(platform, config, J, cap):
@@ -22,7 +25,13 @@ def apply_forecast(s, const, cfg):
     return s, alpha
 
 
+def _shard_rows(s, cfg):
+    mesh_width = cfg.devices
+    return s, mesh_width
+
+
 def run_sim(s, const, cfg):
     s, _, _ = _scheduler_pass(s, const, cfg)
     s, _ = apply_forecast(s, const, cfg)
+    s, _ = _shard_rows(s, cfg)
     return s

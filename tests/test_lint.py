@@ -47,6 +47,14 @@ def test_sl001_catches_unkeyed_forecast_read():
     assert any("cfg.forecast_alpha" in f.msg for f in findings)
 
 
+def test_sl001_catches_unkeyed_devices_read():
+    """A static `cfg.devices` read in jitted scope (§Device-sharded
+    sweeps drift mode: the device count selects the compiled sharding,
+    so it must be part of the sweep cache key) is named."""
+    findings = _run(os.path.join(FIXTURES, "sl001"), only=["SL001"])
+    assert any("cfg.devices" in f.msg for f in findings)
+
+
 def test_sl002_catches_raw_forecast_gates():
     """Both rule-10 flags fire through the DEFAULT_FLAGS fallback (the
     fixture tree carries no policy.py to introspect PolicyParams from)."""

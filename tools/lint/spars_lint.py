@@ -410,6 +410,8 @@ SL003_ENGINE_ONLY = {
 # oracle-side methods with no s-first engine twin BY DESIGN
 SL003_ORACLE_ONLY = {
     "__init__": "constructor",
+    "_partition_select": "host spelling of the engine's _partition_pick "
+                         "per-group masked cumsum inside _try_allocate",
     "energy_by_state": "legacy view summed from energy_by_group",
     "_eff_speed": "twin is policy.effective_node_speed (const-first signature)",
     "_sort_key": "host spelling of the engine's (ready, order_key, nid) argsort",
